@@ -1,0 +1,38 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import simulator as S
+from repro.core import volume as V
+
+
+def get_bench(name: str, size: int = 40):
+    shape = (size, size, size)
+    if name == "B1":
+        return V.benchmark_b1(shape), dict(do_reflect=False)
+    if name in ("B2", "B2a"):
+        return V.benchmark_b2(shape), dict(do_reflect=True)
+    raise ValueError(name)
+
+
+def time_sim(vol, cfg, n_photons, lanes, seed=11, mode="dynamic",
+             repeats=2) -> float:
+    """Best-of-N wall seconds for one simulation (compile excluded)."""
+    fn = S.make_simulator(vol, cfg, lanes, mode)
+    args = (vol.labels.reshape(-1), vol.media,
+            V.Source().pos_array(), V.Source().dir_array(), n_photons, seed)
+    jax.block_until_ready(fn(*args))  # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def photons_per_ms(vol, cfg, n_photons, lanes, **kw) -> float:
+    return n_photons / time_sim(vol, cfg, n_photons, lanes, **kw) / 1e3

@@ -1,0 +1,46 @@
+"""Paper Fig. 3(a): thread-level (static) vs workgroup-level (dynamic)
+load balancing.
+
+In the lock-step TPU formulation, "thread-level" pre-assigns every lane
+a fixed photon quota (idle lanes = divergence waste); "workgroup-level"
+regenerates photons from the shared counter.  We report throughput and
+the lane-utilization advantage (steps executed per photon).
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+
+from benchmarks.common import get_bench, time_sim
+from repro.core import simulator as S
+from repro.core.volume import SimConfig, Source
+
+
+def run(n_photons=30_000, lanes=4096, size=40, quick=False):
+    if quick:
+        n_photons, size = 15_000, 30
+    vol, phys = get_bench("B1", size)
+    cfg = SimConfig(do_reflect=phys["do_reflect"])
+    out = {}
+    for mode in ("static", "dynamic"):
+        t = time_sim(vol, cfg, n_photons, lanes, mode=mode)
+        fn = S.make_simulator(vol, cfg, lanes, mode)
+        res = fn(vol.labels.reshape(-1), vol.media, Source().pos_array(),
+                 Source().dir_array(), n_photons, 11)
+        jax.block_until_ready(res)
+        out[mode] = {
+            "photons_per_ms": n_photons / t / 1e3,
+            "loop_steps": int(res.steps),
+        }
+        print(f"[fig3a] {mode}: {out[mode]}", flush=True)
+    speedup = out["dynamic"]["photons_per_ms"] / out["static"]["photons_per_ms"]
+    out["dynamic_speedup"] = speedup
+    print(f"[fig3a] dynamic/static speedup: {speedup:.3f}x "
+          f"(paper: 1.01x NVIDIA, 1.13x AMD)", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=2))

@@ -1,0 +1,84 @@
+"""Paper Fig. 3(b): device-level load partitioning S1/S2/S3.
+
+Two parts:
+  1. The paper's own device mix (1080Ti/980Ti/R9Nano/RX480 with their
+     published T0 overheads): predicted makespans of S1/S2/S3 vs the
+     ideal bound — reproduces the ~10-14% S2/S3-over-S1 claim.
+  2. A *measured* pilot fit on this host: two pilot runs (the paper's
+     n1/n2 protocol scaled down) fit (a, T0) of the real simulator, and
+     a heterogeneity scenario derived from it (device classes at 1x/2x/4x
+     the measured slope) is partitioned with all three strategies.
+"""
+
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import get_bench
+from repro.core import loadbalance as LB
+from repro.core import simulator as S
+from repro.core.volume import SimConfig, Source
+
+
+PAPER_DEVICES = [
+    LB.DeviceModel("1080Ti", a=4.4e-8, t0=0.053, cores=3584),
+    LB.DeviceModel("980Ti", a=8.0e-8, t0=0.063, cores=2816),
+    LB.DeviceModel("R9Nano", a=6.0e-8, t0=0.631, cores=4096),
+    LB.DeviceModel("RX480", a=1.1e-7, t0=0.652, cores=2304),
+]
+
+
+def run(quick=False):
+    out = {}
+    n = 10**8
+    ms = {s: LB.makespan(LB.PARTITIONERS[s](n, PAPER_DEVICES), PAPER_DEVICES)
+          for s in ("S1", "S2", "S3")}
+    ms["ideal"] = LB.ideal_makespan(n, PAPER_DEVICES)
+    out["paper_mix"] = ms
+    print(f"[fig3b] paper mix makespans (s): " +
+          " ".join(f"{k}={v:.3f}" for k, v in ms.items()), flush=True)
+    print(f"[fig3b] S2 vs S1 speedup: {ms['S1']/ms['S2']:.3f}x "
+          f"(paper: 1.10-1.14x); S3 vs S2: {ms['S2']/ms['S3']:.4f}x",
+          flush=True)
+
+    # measured pilot fit on this host (the paper's two-run protocol)
+    vol, phys = get_bench("B1", 30 if quick else 40)
+    cfg = SimConfig(do_reflect=phys["do_reflect"])
+    fn = S.make_simulator(vol, cfg, 2048, "dynamic")
+    import time as _t
+
+    import jax
+
+    def run_n(k):
+        args = (vol.labels.reshape(-1), vol.media, Source().pos_array(),
+                Source().dir_array(), k, 11)
+        jax.block_until_ready(fn(*args))  # includes compile on first call
+        t0 = _t.perf_counter()
+        jax.block_until_ready(fn(*args))
+        return _t.perf_counter() - t0
+
+    n1, n2 = (2000, 10_000) if quick else (5000, 25_000)
+    model = LB.run_pilot(run_n, n1, n2, name="cpu0")
+    out["measured_model"] = {"a": model.a, "t0": model.t0,
+                             "throughput_per_ms": model.throughput / 1e3}
+    print(f"[fig3b] measured: a={model.a:.3e}s/photon t0={model.t0*1e3:.1f}ms",
+          flush=True)
+
+    # heterogeneous scenario built from the measured slope
+    mix = [
+        LB.DeviceModel("fast", a=model.a, t0=model.t0, cores=4),
+        LB.DeviceModel("mid", a=model.a * 2, t0=model.t0, cores=2),
+        LB.DeviceModel("slow", a=model.a * 4, t0=model.t0 * 2, cores=1),
+    ]
+    n_h = 10**6
+    hm = {s: LB.makespan(LB.PARTITIONERS[s](n_h, mix), mix)
+          for s in ("S1", "S2", "S3")}
+    hm["ideal"] = LB.ideal_makespan(n_h, mix)
+    out["measured_mix"] = hm
+    print(f"[fig3b] measured-mix makespans: " +
+          " ".join(f"{k}={v:.3f}" for k, v in hm.items()), flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=2))

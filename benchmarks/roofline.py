@@ -1,0 +1,79 @@
+"""Aggregate the dry-run reports into the §Roofline table.
+
+Reads reports/dryrun/*.json (produced by repro.launch.dryrun) and emits
+a markdown table with the three roofline terms, the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs and the roofline fraction per cell.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(report_dir="reports/dryrun"):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(report_dir, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs, mesh="16x16") -> str:
+    rows = [r for r in recs if r["mesh"] == mesh]
+    hdr = ("| arch | shape | compute(s) | memory(s) | collective(s) | "
+           "bottleneck | useful/HLO flops | roofline frac | GiB/dev |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"{r['bottleneck']} | {r['useful_flops_frac']:.2f} | "
+            f"{r['roofline_frac']:.3f} | "
+            f"{r['bytes_per_device']['peak']/2**30:.1f} |")
+    return "\n".join(lines)
+
+
+def summary(recs) -> dict:
+    out = {"n_cells": len(recs)}
+    for mesh in ("16x16", "2x16x16"):
+        rows = [r for r in recs if r["mesh"] == mesh]
+        if not rows:
+            continue
+        worst = min(rows, key=lambda r: r["roofline_frac"])
+        coll = max(rows, key=lambda r: (r["collective_s"]
+                                        / max(max(r["compute_s"],
+                                                  r["memory_s"]), 1e-12)))
+        out[mesh] = {
+            "cells": len(rows),
+            "bottlenecks": {
+                b: sum(1 for r in rows if r["bottleneck"] == b)
+                for b in ("compute", "memory", "collective")
+            },
+            "worst_roofline": (worst["arch"], worst["shape"],
+                               round(worst["roofline_frac"], 4)),
+            "most_collective_bound": (coll["arch"], coll["shape"]),
+        }
+    return out
+
+
+def run(quick=False, report_dir="reports/dryrun"):
+    recs = load(report_dir)
+    if not recs:
+        print("[roofline] no dry-run reports found — run "
+              "`python -m repro.launch.dryrun --all` first", flush=True)
+        return {}
+    s = summary(recs)
+    print(f"[roofline] {s['n_cells']} cell reports", flush=True)
+    for mesh, info in s.items():
+        if mesh == "n_cells":
+            continue
+        print(f"[roofline] {mesh}: {info}", flush=True)
+    print(table(recs, "16x16"))
+    return s
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Run the full benchmark suite:  python -m benchmarks.run [--full]
+
+One benchmark per paper figure (Fig 2, Fig 3a/3b/3c) + the roofline
+aggregation over the dry-run reports.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="larger photon counts (slower)")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (fig2_optimizations, fig3a_workgroup,
+                            fig3b_devicelb, fig3c_scaling, roofline)
+
+    t0 = time.time()
+    results = {}
+    print("=" * 70)
+    print("Fig 2 — optimization ladder (B1/B2/B2a x Baseline/Opt1/+2/+3)")
+    print("=" * 70, flush=True)
+    results["fig2"] = fig2_optimizations.run(quick=quick)
+
+    print("=" * 70)
+    print("Fig 3a — thread-level vs workgroup-level load balancing")
+    print("=" * 70, flush=True)
+    results["fig3a"] = fig3a_workgroup.run(quick=quick)
+
+    print("=" * 70)
+    print("Fig 3b — device-level partitioning S1/S2/S3")
+    print("=" * 70, flush=True)
+    results["fig3b"] = fig3b_devicelb.run(quick=quick)
+
+    print("=" * 70)
+    print("Fig 3c — multi-device scaling 1x..8x")
+    print("=" * 70, flush=True)
+    results["fig3c"] = fig3c_scaling.run(quick=quick)
+
+    print("=" * 70)
+    print("Roofline — per (arch x shape x mesh) from the dry-run")
+    print("=" * 70, flush=True)
+    results["roofline"] = roofline.run(quick=quick)
+
+    print(f"\nbenchmark suite done in {time.time()-t0:.1f}s")
+    with open("bench_results.json", "w") as f:
+        json.dump(results, f, indent=2, default=str)
+    print("wrote bench_results.json")
+
+
+if __name__ == "__main__":
+    main()

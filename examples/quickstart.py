@@ -1,0 +1,36 @@
+"""Quickstart: run the paper's B1 benchmark and validate the physics.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core import analysis as A
+from repro.core import simulator as S
+from repro.core import volume as V
+
+# the paper's B1 domain: 60 mm cube, mua=0.005/mm, mus=1/mm, g=0.01, n=1.37
+vol = V.benchmark_b1((60, 60, 60))
+cfg = V.b1_config()
+
+print("simulating 50k photons (B1, pencil beam at (30,30,0))...")
+res = S.simulate(vol, cfg, n_photons=50_000, n_lanes=4096, seed=42)
+jax.block_until_ready(res)
+
+bal = A.energy_balance(res)
+print(f"energy balance: launched={bal['launched']:.0f} "
+      f"absorbed={bal['absorbed']:.1f} escaped={bal['escaped']:.1f} "
+      f"residue={bal['residue_frac']:.2e}")
+
+mu_fit = A.fit_axial_decay(res, vol, (10, 35), axis_xy=(30, 30))
+mu_th = A.mu_eff_theory(0.005, 1.0, 0.01)
+print(f"axial decay: fitted mu_eff={mu_fit:.4f}/mm, "
+      f"diffusion theory={mu_th:.4f}/mm ({mu_fit/mu_th*100:.0f}%)")
+
+phi = np.asarray(A.fluence_cw(res, vol))
+print("on-axis fluence profile (z=0..14 mm):")
+line = phi[30, 30, :15]
+for z, v in enumerate(line):
+    bar = "#" * int(max(0, 50 + 5 * np.log10(max(v, 1e-12))))
+    print(f"  z={z:2d}mm {v:9.3e} {bar}")

@@ -1,0 +1,22 @@
+"""End-to-end LM training driver on a reduced config.
+
+Trains a ~small llama3-family model for a few hundred steps on the
+synthetic pipeline, with checkpoint/restart. Any of the 10 assigned
+archs can be selected with --arch.
+
+  PYTHONPATH=src python examples/train_lm.py [--arch mixtral-8x7b]
+"""
+
+import argparse
+import sys
+
+from repro.launch import train as T
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    T.main(["--arch", args.arch, "--smoke", "--steps", str(args.steps),
+            "--batch", "8", "--seq_len", "64", "--lr", "3e-3",
+            "--ckpt_every", "50", "--ckpt_dir", "/tmp/repro_train_lm"])

@@ -1,0 +1,57 @@
+"""Registry of the assigned architectures (+ the paper's MC benchmarks).
+
+``get_config(arch_id)`` / ``get_smoke_config(arch_id)`` resolve the ids
+used by ``--arch`` flags across the launchers, benchmarks and dry-run.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+
+_MODULES = {
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "granite-20b": "granite_20b",
+    "llama3.2-1b": "llama3_2_1b",
+    "llama-3.2-vision-11b": "llama3_2_vision_11b",
+    "whisper-medium": "whisper_medium",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "hymba-1.5b": "hymba_1_5b",
+}
+
+ARCH_IDS = list(_MODULES)
+
+# long_500k requires a bounded decode state (sub-quadratic attention);
+# pure full-attention archs skip it — see DESIGN.md §Arch-applicability.
+LONG_CONTEXT_ARCHS = {"mamba2-1.3b", "hymba-1.5b", "mixtral-8x7b"}
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).config()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).smoke_config()
+
+
+def cells(include_skipped: bool = False):
+    """All (arch_id, shape) dry-run cells; 40 total, minus documented skips."""
+    out = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES.values():
+            skipped = (shape.name == "long_500k"
+                       and arch not in LONG_CONTEXT_ARCHS)
+            if skipped and not include_skipped:
+                continue
+            out.append((arch, shape))
+    return out

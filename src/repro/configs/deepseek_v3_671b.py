@@ -1,0 +1,29 @@
+"""DeepSeek-V3 (671B): MLA attention, 1 shared + 256 routed top-8 MoE,
+first 3 layers dense.  MTP head omitted (training objective variant, not
+an architecture requirement — see DESIGN.md).  [arXiv:2412.19437]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b", kind="moe",
+        n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128,
+        d_ff=18432,            # dense-layer FFN width
+        vocab=129280, head_dim=128, rope_theta=10_000.0,
+        n_experts=256, top_k=8, n_shared_experts=1, moe_d_ff=2048,
+        first_dense_layers=3, capacity_factor=1.25,
+        use_mla=True, q_lora_rank=1536, kv_lora_rank=512,
+        qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b-smoke", kind="moe",
+        n_layers=3, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=256, vocab=256, head_dim=32, rope_theta=10_000.0,
+        n_experts=4, top_k=2, n_shared_experts=1, moe_d_ff=64,
+        first_dense_layers=1, capacity_factor=2.0,
+        use_mla=True, q_lora_rank=48, kv_lora_rank=32,
+        qk_nope_head_dim=32, qk_rope_head_dim=16, v_head_dim=32,
+    )

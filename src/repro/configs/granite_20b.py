@@ -1,0 +1,18 @@
+"""Granite-20B-code: llama-arch dense with MQA (kv=1). [arXiv:2405.04324]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-20b", kind="dense",
+        n_layers=52, d_model=6144, n_heads=48, n_kv_heads=1,
+        d_ff=24576, vocab=49152, head_dim=128, rope_theta=10_000.0,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-20b-smoke", kind="dense",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=1,
+        d_ff=256, vocab=256, head_dim=32, rope_theta=10_000.0,
+    )

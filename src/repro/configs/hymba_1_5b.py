@@ -1,0 +1,25 @@
+"""Hymba-1.5B: hybrid heads — attention and Mamba(2-style) SSM run in
+parallel in every layer, outputs fused after per-path norm; 128 learnable
+meta tokens prepended; sliding-window attention keeps decode state
+bounded (long_500k runs).  [arXiv:2411.13676]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hymba-1.5b", kind="hybrid",
+        n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5,
+        d_ff=5504, vocab=32001, head_dim=64, rope_theta=10_000.0,
+        ssm_state=16, ssm_headdim=50, ssm_expand=2, ssm_conv=4,
+        ssm_ngroups=1, meta_tokens=128, sliding_window=1024,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="hymba-1.5b-smoke", kind="hybrid",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=256, head_dim=16, rope_theta=10_000.0,
+        ssm_state=16, ssm_headdim=16, ssm_expand=2, ssm_conv=4,
+        ssm_ngroups=1, meta_tokens=8, sliding_window=16,
+    )

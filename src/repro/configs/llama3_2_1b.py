@@ -1,0 +1,18 @@
+"""Llama-3.2-1B: small llama3 dense, GQA kv=8. [hf:meta-llama/Llama-3.2-1B]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-1b", kind="dense",
+        n_layers=16, d_model=2048, n_heads=32, n_kv_heads=8,
+        d_ff=8192, vocab=128256, head_dim=64, rope_theta=500_000.0,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-1b-smoke", kind="dense",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab=256, head_dim=32, rope_theta=500_000.0,
+    )

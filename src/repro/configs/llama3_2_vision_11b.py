@@ -1,0 +1,22 @@
+"""Llama-3.2-11B-Vision: dense backbone + cross-attn image layers every
+5th layer; image patch embeddings are a STUB input (precomputed).
+[hf:meta-llama/Llama-3.2-11B-Vision]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-11b", kind="vlm",
+        n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8,
+        d_ff=14336, vocab=128256, head_dim=128, rope_theta=500_000.0,
+        cross_attn_every=5, n_image_tokens=1600,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-11b-smoke", kind="vlm",
+        n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab=256, head_dim=32, rope_theta=500_000.0,
+        cross_attn_every=2, n_image_tokens=16,
+    )

@@ -1,0 +1,23 @@
+"""Mamba2-1.3B: attention-free SSD (state-space duality).
+O(1) decode state -> long_500k cell runs.  [arXiv:2405.21060]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-1.3b", kind="ssm",
+        n_layers=48, d_model=2048, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab=50280, head_dim=0,
+        ssm_state=128, ssm_headdim=64, ssm_expand=2, ssm_conv=4,
+        ssm_ngroups=1,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-1.3b-smoke", kind="ssm",
+        n_layers=2, d_model=64, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab=256, head_dim=0,
+        ssm_state=16, ssm_headdim=16, ssm_expand=2, ssm_conv=4,
+        ssm_ngroups=1,
+    )

@@ -1,0 +1,19 @@
+"""Mistral-Nemo-Base-2407 (12B): dense, GQA kv=8, 128k context.
+[hf:mistralai/Mistral-Nemo-Base-2407]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mistral-nemo-12b", kind="dense",
+        n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+        d_ff=14336, vocab=131072, head_dim=128, rope_theta=1_000_000.0,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mistral-nemo-12b-smoke", kind="dense",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab=256, head_dim=32, rope_theta=10_000.0,
+    )

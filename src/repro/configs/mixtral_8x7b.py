@@ -1,0 +1,24 @@
+"""Mixtral-8x7B: 8 experts top-2 MoE with sliding-window attention.
+SWA makes decode state bounded (ring-buffer KV cache), so the long_500k
+cell runs for this arch.  [arXiv:2401.04088]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x7b", kind="moe",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+        d_ff=14336, vocab=32000, head_dim=128, rope_theta=1_000_000.0,
+        n_experts=8, top_k=2, moe_d_ff=14336, capacity_factor=1.25,
+        sliding_window=4096,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x7b-smoke", kind="moe",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab=256, head_dim=32, rope_theta=1_000_000.0,
+        n_experts=4, top_k=2, moe_d_ff=256, capacity_factor=2.0,
+        sliding_window=16,
+    )

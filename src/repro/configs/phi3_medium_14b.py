@@ -1,0 +1,20 @@
+"""Phi-3-medium (14B): dense, GQA kv=10, RoPE + SwiGLU. [arXiv:2404.14219]
+Note: 40 heads do not divide the 16-way model axis; GSPMD pads the head
+dim (see DESIGN.md §uneven-sharding)."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="phi3-medium-14b", kind="dense",
+        n_layers=40, d_model=5120, n_heads=40, n_kv_heads=10,
+        d_ff=17920, vocab=100352, head_dim=128, rope_theta=10_000.0,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="phi3-medium-14b-smoke", kind="dense",
+        n_layers=2, d_model=120, n_heads=5, n_kv_heads=5,
+        d_ff=256, vocab=256, head_dim=24, rope_theta=10_000.0,
+    )

@@ -1,0 +1,22 @@
+"""Whisper-medium: encoder-decoder; the conv audio frontend is a STUB —
+input_specs() provides precomputed frame embeddings (B, frames, d).
+[arXiv:2212.04356]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium", kind="encdec",
+        n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+        d_ff=4096, vocab=51865, head_dim=64, rope_theta=10_000.0,
+        n_encoder_layers=24, encoder_frames=1500,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium-smoke", kind="encdec",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=256, vocab=256, head_dim=32, rope_theta=10_000.0,
+        n_encoder_layers=2, encoder_frames=16,
+    )

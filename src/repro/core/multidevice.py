@@ -1,0 +1,352 @@
+"""Multi-device / multi-pod distributed photon simulation.
+
+Maps the paper's heterogeneous multi-device execution (Fig. 1, Fig. 3b/c)
+onto JAX-native constructs:
+
+  * :func:`simulate_sharded` — shard_map over the mesh's photon axes.
+    Each device simulates a (possibly unequal) slice of the photon
+    budget (the device-level load-balancing partition) and the fluence
+    volume is combined with a single ``psum`` — the only collective in
+    the whole simulation, which is why MC scales near-linearly
+    (paper Fig. 3c).
+  * :class:`ChunkScheduler` — dynamic work-stealing over photon chunks
+    using JAX's async dispatch; the runtime analogue of the paper's
+    "host waits for all devices" barrier, but without the straggler
+    penalty: fast devices pull more chunks.
+  * :class:`ElasticSimulator` — fault-tolerant chunk accounting.  The
+    counter-based RNG keys photons by *global id*, so a chunk lost to a
+    device failure is re-simulated bit-identically elsewhere, and a
+    checkpoint is just (accumulated grids + chunk cursor).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.loadbalance import DeviceModel, partition_s2
+from repro.core.simulator import SimResult, build_sim_fn
+from repro.core.volume import SimConfig, Source, Volume
+
+
+# ---------------------------------------------------------------------------
+# shard_map distribution (single-pod and multi-pod meshes)
+# ---------------------------------------------------------------------------
+
+def sharded_sim_fn(volume: Volume, cfg: SimConfig, n_lanes: int,
+                   mesh: Mesh, axis_names: tuple[str, ...] = ("data",),
+                   mode: str = "dynamic"):
+    """Build a shard_map'd simulator over ``axis_names`` of ``mesh``.
+
+    The returned fn takes per-device photon counts/offsets (one entry per
+    device on the sharded axes) and returns a globally-reduced SimResult.
+    Volume data and source are replicated; the fluence volume is psum'd.
+    """
+    raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes, mode)
+    ax = axis_names
+
+    def worker(labels_flat, media, source_pos, source_dir, counts, offsets,
+               seed):
+        res = raw(labels_flat, media, source_pos, source_dir,
+                  counts[0], seed, offsets[0])
+        energy = res.energy
+        exitance = res.exitance
+        escaped = res.escaped_w
+        launched = res.n_launched
+        for a in ax:
+            energy = jax.lax.psum(energy, a)
+            exitance = jax.lax.psum(exitance, a)
+            escaped = jax.lax.psum(escaped, a)
+            launched = jax.lax.psum(launched, a)
+        # steps stays per-shard (rank-1 so it can concatenate over the mesh)
+        return SimResult(energy=energy, exitance=exitance, escaped_w=escaped,
+                         n_launched=launched, steps=res.steps[None])
+
+    pspec = P(ax)  # counts/offsets sharded across the photon axes
+    mapped = jax.shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P(), pspec, pspec, P()),
+        out_specs=SimResult(energy=P(), exitance=P(), escaped_w=P(),
+                            n_launched=P(), steps=P(ax)),
+        # the while_loop carry mixes shard-varying (photon counts) and
+        # replicated (volume) values; disable the vma type check rather
+        # than pcast every carry leaf
+        check_vma=False,
+    )
+    return jax.jit(mapped)
+
+
+def simulate_sharded(volume: Volume, cfg: SimConfig, n_photons: int,
+                     mesh: Mesh, axis_names: tuple[str, ...] = ("data",),
+                     partition: Sequence[int] | None = None,
+                     n_lanes: int = 1024, seed: int = 1234,
+                     source: Source | None = None,
+                     mode: str = "dynamic") -> SimResult:
+    """Run one distributed simulation over the mesh's photon axes."""
+    source = source or Source()
+    n_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
+    if partition is None:
+        base = n_photons // n_shards
+        counts = np.full((n_shards,), base, np.int32)
+        counts[: n_photons - base * n_shards] += 1
+    else:
+        counts = np.asarray(partition, np.int32)
+        if counts.shape != (n_shards,) or counts.sum() != n_photons:
+            raise ValueError("partition must have one entry per shard and "
+                             "sum to n_photons")
+    offsets = np.concatenate([[0], np.cumsum(counts)[:-1]]).astype(np.int32)
+
+    fn = sharded_sim_fn(volume, cfg, n_lanes, mesh, axis_names, mode)
+    shard_sharding = NamedSharding(mesh, P(axis_names))
+    repl = NamedSharding(mesh, P())
+    dev_counts = jax.device_put(jnp.asarray(counts), shard_sharding)
+    dev_offsets = jax.device_put(jnp.asarray(offsets), shard_sharding)
+    return fn(
+        jax.device_put(volume.labels.reshape(-1), repl),
+        jax.device_put(volume.media, repl),
+        jax.device_put(source.pos_array(), repl),
+        jax.device_put(source.dir_array(), repl),
+        dev_counts,
+        dev_offsets,
+        jnp.uint32(seed),
+    )
+
+
+# ---------------------------------------------------------------------------
+# chunked work queue: straggler mitigation + heterogeneous devices
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Chunk:
+    start_id: int
+    count: int
+
+
+class ChunkScheduler:
+    """Greedy dynamic chunk dispatch across devices via async dispatch.
+
+    The device-level generalization of the paper's *workgroup* dynamic
+    load balancing: instead of fixing each device's share up front (S1-S3),
+    devices pull fixed-size chunks from a shared queue as they finish.
+    JAX dispatch is asynchronous, so while a device crunches chunk k the
+    host can already enqueue k+1 elsewhere; `jax.Array` readiness is the
+    completion signal.
+    """
+
+    def __init__(self, volume: Volume, cfg: SimConfig, n_lanes: int = 1024,
+                 devices: Sequence[jax.Device] | None = None,
+                 mode: str = "dynamic"):
+        self.volume = volume
+        self.cfg = cfg
+        self.devices = list(devices or jax.devices())
+        raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes, mode)
+        # one jitted fn; placement follows the device_put of the inputs
+        self._fn = jax.jit(raw)
+        self._labels = volume.labels.reshape(-1)
+        self._media = volume.media
+
+    def run(self, n_photons: int, chunk_size: int, seed: int = 1234,
+            source: Source | None = None) -> tuple[SimResult, dict]:
+        source = source or Source()
+        chunks = [
+            Chunk(s, min(chunk_size, n_photons - s))
+            for s in range(0, n_photons, chunk_size)
+        ]
+        queue = list(reversed(chunks))
+        inflight: dict[jax.Device, tuple[Chunk, SimResult]] = {}
+        done: list[SimResult] = []
+        stats = {d.id: 0 for d in self.devices}
+
+        def dispatch(dev: jax.Device):
+            ch = queue.pop()
+            res = self._fn(
+                jax.device_put(self._labels, dev),
+                jax.device_put(self._media, dev),
+                jax.device_put(source.pos_array(), dev),
+                jax.device_put(source.dir_array(), dev),
+                ch.count, seed, ch.start_id,
+            )
+            inflight[dev] = (ch, res)
+
+        for dev in self.devices:
+            if queue:
+                dispatch(dev)
+        nx, ny, nz = self.volume.shape
+        acc = {
+            "energy": np.zeros((nx, ny, nz), np.float32),
+            "exitance": np.zeros((nx, ny), np.float32),
+            "escaped_w": 0.0,
+            "n_launched": 0,
+            "steps": 0,
+        }
+
+        def merge(res: SimResult):
+            acc["energy"] += np.asarray(res.energy)
+            acc["exitance"] += np.asarray(res.exitance)
+            acc["escaped_w"] += float(res.escaped_w)
+            acc["n_launched"] += int(res.n_launched)
+            acc["steps"] += int(res.steps)
+
+        while inflight:
+            progressed = False
+            for dev in list(inflight):
+                ch, res = inflight[dev]
+                if res.energy.is_ready():
+                    del inflight[dev]
+                    merge(res)
+                    stats[dev.id] += ch.count
+                    progressed = True
+                    if queue:
+                        dispatch(dev)
+            if not progressed:
+                time.sleep(0.001)
+        del done
+
+        total = SimResult(
+            energy=jnp.asarray(acc["energy"]),
+            exitance=jnp.asarray(acc["exitance"]),
+            escaped_w=jnp.float32(acc["escaped_w"]),
+            n_launched=jnp.int32(acc["n_launched"]),
+            steps=jnp.int32(acc["steps"]),
+        )
+        return total, stats
+
+
+# ---------------------------------------------------------------------------
+# elastic, fault-tolerant execution
+# ---------------------------------------------------------------------------
+
+class ElasticSimulator:
+    """Chunk-level fault tolerance + elastic scaling for long campaigns.
+
+    Photons are keyed by global id, so work is an immutable set of
+    chunks.  Devices may join/leave between rounds; a failed round's
+    chunks are simply re-queued and *re-simulated bit-identically*.
+    ``state_dict``/``load_state_dict`` give checkpoint/restart: the
+    checkpoint stores only the accumulated grids and the completed-chunk
+    cursor — O(volume), independent of photon count.
+    """
+
+    def __init__(self, volume: Volume, cfg: SimConfig, n_photons: int,
+                 chunk_size: int, n_lanes: int = 1024, seed: int = 1234,
+                 source: Source | None = None):
+        self.volume = volume
+        self.cfg = cfg
+        self.seed = seed
+        self.source = source or Source()
+        self.chunk_size = chunk_size
+        self.n_photons = n_photons
+        self.pending: list[Chunk] = [
+            Chunk(s, min(chunk_size, n_photons - s))
+            for s in range(0, n_photons, chunk_size)
+        ]
+        self.completed: list[Chunk] = []
+        nx, ny, nz = volume.shape
+        self.energy = np.zeros((nx, ny, nz), np.float32)
+        self.exitance = np.zeros((nx, ny), np.float32)
+        self.escaped_w = 0.0
+        self.n_launched = 0
+        self._raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes)
+        self._jit = jax.jit(self._raw)
+
+    # -- execution ---------------------------------------------------------
+
+    def run_round(self, devices: Sequence[jax.Device] | None = None,
+                  fail: Callable[[Chunk, jax.Device], bool] | None = None,
+                  max_chunks: int | None = None) -> int:
+        """Assign up to one chunk per device; returns #chunks completed.
+
+        ``fail(chunk, device)`` simulates a device failure: the chunk is
+        re-queued instead of merged (used by tests + chaos drills).
+        """
+        devices = list(devices or jax.devices())
+        n_done = 0
+        batch = []
+        while self.pending and len(batch) < (max_chunks or len(devices)):
+            batch.append(self.pending.pop(0))
+        requeue = []
+        for i, ch in enumerate(batch):
+            dev = devices[i % len(devices)]
+            if fail is not None and fail(ch, dev):
+                requeue.append(ch)  # lost: device died mid-chunk
+                continue
+            res = self._run_chunk(ch, dev)
+            self._merge(ch, res)
+            n_done += 1
+        self.pending = requeue + self.pending
+        return n_done
+
+    def run_to_completion(self, devices=None) -> SimResult:
+        while self.pending:
+            self.run_round(devices)
+        return self.result()
+
+    def _run_chunk(self, ch: Chunk, dev: jax.Device) -> SimResult:
+        vol = self.volume
+        return self._jit(
+            jax.device_put(vol.labels.reshape(-1), dev),
+            jax.device_put(vol.media, dev),
+            jax.device_put(self.source.pos_array(), dev),
+            jax.device_put(self.source.dir_array(), dev),
+            ch.count, self.seed, ch.start_id,
+        )
+
+    def _merge(self, ch: Chunk, res: SimResult):
+        self.energy += np.asarray(res.energy)
+        self.exitance += np.asarray(res.exitance)
+        self.escaped_w += float(res.escaped_w)
+        self.n_launched += int(res.n_launched)
+        self.completed.append(ch)
+
+    def result(self) -> SimResult:
+        return SimResult(
+            energy=jnp.asarray(self.energy),
+            exitance=jnp.asarray(self.exitance),
+            escaped_w=jnp.float32(self.escaped_w),
+            n_launched=jnp.int32(self.n_launched),
+            steps=jnp.int32(0),
+        )
+
+    # -- checkpoint / restart ------------------------------------------------
+
+    def state_dict(self) -> dict:
+        return {
+            "energy": self.energy.copy(),
+            "exitance": self.exitance.copy(),
+            "escaped_w": np.float64(self.escaped_w),
+            "n_launched": np.int64(self.n_launched),
+            "pending": np.asarray(
+                [(c.start_id, c.count) for c in self.pending], np.int64
+            ).reshape(-1, 2),
+            "completed": np.asarray(
+                [(c.start_id, c.count) for c in self.completed], np.int64
+            ).reshape(-1, 2),
+            "seed": np.int64(self.seed),
+            "n_photons": np.int64(self.n_photons),
+        }
+
+    def load_state_dict(self, state: dict):
+        assert int(state["n_photons"]) == self.n_photons, "photon budget mismatch"
+        assert int(state["seed"]) == self.seed, "seed mismatch"
+        self.energy = np.asarray(state["energy"], np.float32).copy()
+        self.exitance = np.asarray(state["exitance"], np.float32).copy()
+        self.escaped_w = float(state["escaped_w"])
+        self.n_launched = int(state["n_launched"])
+        self.pending = [Chunk(int(s), int(c)) for s, c in state["pending"]]
+        self.completed = [Chunk(int(s), int(c)) for s, c in state["completed"]]
+
+
+def heterogeneous_partition(n_photons: int, models: Sequence[DeviceModel],
+                            strategy: str = "S2") -> list[int]:
+    """Convenience: partition a photon budget with a paper strategy."""
+    from repro.core.loadbalance import PARTITIONERS
+
+    return PARTITIONERS[strategy](n_photons, models)

@@ -1,0 +1,79 @@
+"""Counter-seeded xorshift128 RNG used by the photon transport engine.
+
+MCX / MCX-CL use xorshift128+ operating on 64-bit words.  TPUs have no
+64-bit integer vector units, so we adapt the paper's RNG choice to the
+hardware: Marsaglia xorshift128 with four 32-bit words of state per
+photon lane.  The identical bit-level algorithm is implemented both here
+(pure jnp, the oracle) and inside the Pallas kernel, so kernel-vs-ref
+comparisons are bit-exact.
+
+Seeding is *counter based*: the state for photon ``photon_id`` under a
+master ``seed`` is derived with splitmix32 rounds of ``seed ^ photon_id``.
+This gives every photon an independent, reproducible stream regardless of
+which lane / device / restart simulates it — the property that makes
+checkpoint/restart and elastic re-partitioning deterministic (§DESIGN.md
+fault tolerance).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_U32 = jnp.uint32
+# splitmix32 constants (Steele et al., "Fast splittable PRNGs")
+_GOLDEN = jnp.uint32(0x9E3779B9)
+_MIX1 = jnp.uint32(0x85EBCA6B)
+_MIX2 = jnp.uint32(0xC2B2AE35)
+
+
+def splitmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """One splitmix32 output step; ``x`` is the uint32 counter."""
+    z = (x + _GOLDEN).astype(_U32)
+    z = (z ^ (z >> 16)) * _MIX1
+    z = (z ^ (z >> 13)) * _MIX2
+    z = z ^ (z >> 16)
+    return z.astype(_U32)
+
+
+def seed_state(seed, photon_id) -> jnp.ndarray:
+    """Derive a (..., 4) uint32 xorshift128 state from (seed, photon_id).
+
+    Zero states are fixed up (xorshift must never be seeded all-zero).
+    """
+    seed = jnp.asarray(seed, _U32)
+    pid = jnp.asarray(photon_id, _U32)
+    base = (seed ^ (pid * jnp.uint32(0x9E3779B1))).astype(_U32)
+    words = []
+    x = base
+    for k in range(4):
+        x = splitmix32(x + jnp.uint32(k) * _GOLDEN)
+        words.append(x)
+    state = jnp.stack(words, axis=-1)
+    # guarantee non-zero state per lane
+    allzero = jnp.all(state == 0, axis=-1, keepdims=True)
+    return jnp.where(allzero, jnp.uint32(0xDEADBEEF), state)
+
+
+def next_u32(state: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Marsaglia xorshift128 step. state: (..., 4) uint32 -> (new_state, u32)."""
+    x = state[..., 0]
+    y = state[..., 1]
+    z = state[..., 2]
+    w = state[..., 3]
+    t = x ^ (x << 11)
+    t = t ^ (t >> 8)
+    neww = (w ^ (w >> 19)) ^ t
+    new_state = jnp.stack([y, z, w, neww], axis=-1)
+    return new_state, neww
+
+
+def next_uniform(state: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Uniform in the open interval (0, 1) with 24-bit resolution.
+
+    Uses the top 24 bits; result is (r + 0.5) * 2^-24 so it can never be
+    exactly 0 or 1 — safe to feed into log() for free-path sampling.
+    """
+    state, bits = next_u32(state)
+    r = (bits >> 8).astype(jnp.float32)  # [0, 2^24)
+    u = (r + jnp.float32(0.5)) * jnp.float32(2.0**-24)
+    return state, u

@@ -1,0 +1,235 @@
+"""Lock-step vectorized photon simulation engine.
+
+Implements the paper's two thread-level workload strategies:
+
+  * ``mode="dynamic"`` — the workgroup-level dynamic load balancing of
+    the paper (Fig. 3a): all lanes draw photons from a shared remaining
+    counter; a lane whose photon terminates immediately *regenerates* a
+    new one.  On a GPU this needed a local-memory atomic counter; in the
+    lock-step TPU/JAX formulation it is a masked prefix-sum over dead
+    lanes — race-free by construction.
+  * ``mode="static"`` — the thread-level baseline: every lane is
+    pre-assigned ``n_photons / n_lanes`` photons and idles once its
+    quota is done (the divergence-waste case the paper measures).
+
+The engine is shape-polymorphic in the photon count (traced int32), so
+pilot runs for the device-level load balancer (loadbalance.py) reuse the
+same compiled executable.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import photon as ph
+from repro.core.volume import SimConfig, Source, Volume
+
+
+class SimResult(NamedTuple):
+    energy: jnp.ndarray     # (nx, ny, nz) float32 deposited energy
+    exitance: jnp.ndarray   # (nx, ny) float32 weight escaping the z=0 face
+    escaped_w: jnp.ndarray  # () float32 total escaped weight
+    n_launched: jnp.ndarray  # () int32 photons actually launched
+    steps: jnp.ndarray      # () int32 lock-step iterations executed
+
+
+class _Carry(NamedTuple):
+    state: ph.PhotonState
+    energy: jnp.ndarray
+    exitance: jnp.ndarray
+    escaped_w: jnp.ndarray
+    remaining: jnp.ndarray   # dynamic mode: shared photon counter
+    launched_per_lane: jnp.ndarray  # static mode: per-lane launch count
+    next_id: jnp.ndarray     # global photon id counter (RNG seeding)
+    steps: jnp.ndarray
+
+
+def _regenerate(state, remaining, launched_per_lane, next_id, quota,
+                source_pos, source_dir, seed, mode, shape):
+    """Relaunch photons in dead lanes according to the workload mode."""
+    dead = ~state.alive
+    if mode == "dynamic":
+        order = jnp.cumsum(dead.astype(jnp.int32))  # 1-based rank among dead
+        relaunch = dead & (order <= remaining)
+    else:  # static pre-assigned quota per lane
+        relaunch = dead & (launched_per_lane < quota)
+    n_relaunch = jnp.sum(relaunch.astype(jnp.int32))
+    rank = jnp.cumsum(relaunch.astype(jnp.int32)) - 1  # 0-based among relaunched
+    ids = (next_id + rank).astype(jnp.uint32)
+    fresh = ph.launch(source_pos, source_dir, ids, seed, relaunch, shape)
+
+    def merge(new, old):
+        mask = relaunch
+        if new.ndim > 1:
+            mask = relaunch[:, None]
+        return jnp.where(mask, new, old)
+
+    merged = ph.PhotonState(*(merge(n, o) for n, o in zip(fresh, state)))
+    merged = merged._replace(alive=state.alive | relaunch)
+    return (
+        merged,
+        remaining - n_relaunch,
+        launched_per_lane + relaunch.astype(jnp.int32),
+        next_id + n_relaunch,
+        n_relaunch,
+    )
+
+
+def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
+                 cfg: SimConfig, n_lanes: int, mode: str = "dynamic"):
+    """Build the raw (unjitted) simulation function.
+
+    Returns ``sim_fn(labels_flat, media, source_pos, source_dir,
+    n_photons, seed, id_offset=0) -> SimResult``; ``n_photons``,
+    ``seed`` and ``id_offset`` are traced, so one executable serves
+    pilot runs and production runs.  ``id_offset`` gives this shard a
+    disjoint global photon-id range — the counter-based RNG then makes
+    multi-device / elastic / restarted runs simulate *exactly* the same
+    photon set as a single-device run (DESIGN.md §determinism).
+
+    The raw function is shard_map-composable; ``make_simulator`` wraps
+    it in jit for single-device use.
+    """
+    if mode not in ("dynamic", "static"):
+        raise ValueError(f"unknown workload mode: {mode}")
+    nx, ny, nz = shape
+    nvox = nx * ny * nz
+
+    def sim_fn(labels_flat, media, source_pos, source_dir, n_photons, seed,
+               id_offset=0):
+        n_photons = jnp.asarray(n_photons, jnp.int32)
+        seed = jnp.asarray(seed, jnp.uint32)
+        id_offset = jnp.asarray(id_offset, jnp.int32)
+        # static mode: equal distribution with the remainder spread over the
+        # first (n_photons mod n_lanes) lanes, so exactly n_photons launch
+        lane_idx = jnp.arange(n_lanes, dtype=jnp.int32)
+        quota = n_photons // n_lanes + (lane_idx < n_photons % n_lanes)
+
+        state0 = ph.PhotonState(
+            pos=jnp.zeros((n_lanes, 3), jnp.float32),
+            dir=jnp.tile(jnp.asarray([0.0, 0.0, 1.0], jnp.float32), (n_lanes, 1)),
+            ivox=jnp.zeros((n_lanes, 3), jnp.int32),
+            w=jnp.zeros((n_lanes,), jnp.float32),
+            s_left=jnp.zeros((n_lanes,), jnp.float32),
+            t=jnp.zeros((n_lanes,), jnp.float32),
+            rng=jnp.zeros((n_lanes, 4), jnp.uint32),
+            alive=jnp.zeros((n_lanes,), bool),
+        )
+        carry0 = _Carry(
+            state=state0,
+            energy=jnp.zeros((nvox,), jnp.float32),
+            exitance=jnp.zeros((nx, ny), jnp.float32),
+            escaped_w=jnp.float32(0.0),
+            remaining=n_photons,
+            launched_per_lane=jnp.zeros((n_lanes,), jnp.int32),
+            next_id=id_offset,
+            steps=jnp.int32(0),
+        )
+
+        def cond(c: _Carry):
+            has_work = jnp.any(c.state.alive)
+            if mode == "dynamic":
+                has_work = has_work | (c.remaining > 0)
+            else:
+                has_work = has_work | jnp.any(c.launched_per_lane < quota)
+            return has_work & (c.steps < cfg.max_steps)
+
+        def body(c: _Carry):
+            state, remaining, launched, next_id, _ = _regenerate(
+                c.state, c.remaining, c.launched_per_lane, c.next_id,
+                quota, source_pos, source_dir, seed, mode, shape,
+            )
+            res = ph.step(state, labels_flat, media, shape, unitinmm, cfg)
+            energy = c.energy.at[res.dep_idx].add(res.dep_w)
+            escaped_w = c.escaped_w + jnp.sum(res.esc_w)
+            # bin exits through the z=0 face into the exitance image
+            z_exit = res.esc_pos[:, 2] < 0.25
+            hit = (res.esc_w > 0) & z_exit
+            ex = jnp.clip(jnp.floor(res.esc_pos[:, 0]).astype(jnp.int32), 0, nx - 1)
+            ey = jnp.clip(jnp.floor(res.esc_pos[:, 1]).astype(jnp.int32), 0, ny - 1)
+            exitance = c.exitance.at[ex, ey].add(
+                jnp.where(hit, res.esc_w, 0.0)
+            )
+            return _Carry(
+                state=res.state,
+                energy=energy,
+                exitance=exitance,
+                escaped_w=escaped_w,
+                remaining=remaining,
+                launched_per_lane=launched,
+                next_id=next_id,
+                steps=c.steps + 1,
+            )
+
+        final = jax.lax.while_loop(cond, body, carry0)
+        return SimResult(
+            energy=final.energy.reshape(shape),
+            exitance=final.exitance,
+            escaped_w=final.escaped_w,
+            n_launched=final.next_id - id_offset,
+            steps=final.steps,
+        )
+
+    return sim_fn
+
+
+def make_simulator(volume: Volume, cfg: SimConfig, n_lanes: int,
+                   mode: str = "dynamic"):
+    """Jitted single-device simulator for a fixed (volume, cfg, lanes)."""
+    raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes, mode)
+    return jax.jit(raw)
+
+
+def simulate(volume: Volume, cfg: SimConfig, n_photons: int,
+             n_lanes: int = 4096, seed: int = 1234,
+             source: Source | None = None,
+             mode: str = "dynamic") -> SimResult:
+    """Convenience one-shot simulation on the current default device."""
+    source = source or Source()
+    sim_fn = make_simulator(volume, cfg, n_lanes, mode)
+    return sim_fn(
+        volume.labels.reshape(-1),
+        volume.media,
+        source.pos_array(),
+        source.dir_array(),
+        n_photons,
+        seed,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Opt2: lane-count autotuning (the paper's "balanced thread number")
+# ---------------------------------------------------------------------------
+
+def autotune_lanes(volume: Volume, cfg: SimConfig, n_pilot: int = 20_000,
+                   candidates=(1024, 2048, 4096, 8192, 16384),
+                   seed: int = 7, source: Source | None = None,
+                   repeats: int = 2) -> tuple[int, dict[int, float]]:
+    """Pick the lane count with the highest pilot throughput.
+
+    The paper computes the balanced thread number from hardware occupancy
+    (registers x compute units); lacking introspectable occupancy on this
+    runtime, we measure it — a pilot sweep, exactly how the device-level
+    balancer estimates throughput.  Returns (best_lane_count, timings_s).
+    """
+    source = source or Source()
+    labels_flat = volume.labels.reshape(-1)
+    timings: dict[int, float] = {}
+    for lanes in candidates:
+        sim_fn = make_simulator(volume, cfg, lanes, "dynamic")
+        args = (labels_flat, volume.media, source.pos_array(),
+                source.dir_array(), n_pilot, seed)
+        jax.block_until_ready(sim_fn(*args))  # compile + warm up
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(sim_fn(*args))
+            best = min(best, time.perf_counter() - t0)
+        timings[lanes] = best
+    best_lanes = min(timings, key=timings.get)
+    return best_lanes, timings

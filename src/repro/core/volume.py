@@ -1,0 +1,172 @@
+"""Voxelized heterogeneous media for photon transport.
+
+A :class:`Volume` is a uint8 label grid plus a small table of optical
+properties per label, exactly mirroring MCX's representation.  Label 0 is
+*exterior* (air outside the simulation domain): photons that transmit
+into label-0 voxels escape.
+
+The three paper benchmarks (B1, B2, B2a) are provided as builders with
+the published optical properties:
+
+  * B1  — 60x60x60 mm homogeneous cube, mua=0.005/mm, mus=1.0/mm,
+          g=0.01, n=1.37; photons terminate on the cube surface
+          (no boundary reflection).
+  * B2  — same cube with a radius-15 mm spherical inclusion at the
+          center (mua=0.002, mus=5.0, g=0.9, n=1.0); Snell/Fresnel
+          reflection at both the sphere and cube boundaries.
+  * B2a — identical physics to B2; in the paper it differs only by using
+          atomic fluence accumulation.  On TPU/JAX the scatter-add is
+          race-free by construction, so B2a differs from B2 only in the
+          accumulation *strategy* benchmarked (see DESIGN.md §atomics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+C_MM_PER_NS = 299.792458  # speed of light in vacuum, mm/ns
+
+
+@dataclasses.dataclass(frozen=True)
+class Medium:
+    """Optical properties of one tissue type."""
+
+    mua: float  # absorption coefficient, 1/mm
+    mus: float  # scattering coefficient, 1/mm
+    g: float    # Henyey-Greenstein anisotropy
+    n: float    # refractive index
+
+
+AIR = Medium(mua=0.0, mus=0.0, g=1.0, n=1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Volume:
+    """Label grid + per-label optical property table.
+
+    labels: (nx, ny, nz) uint8; media: (n_media, 4) float32 rows of
+    (mua, mus, g, n).  ``unitinmm`` is the voxel edge length.
+    """
+
+    labels: jnp.ndarray
+    media: jnp.ndarray
+    unitinmm: float = 1.0
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        return tuple(self.labels.shape)
+
+    @property
+    def extent_mm(self) -> tuple[float, float, float]:
+        return tuple(s * self.unitinmm for s in self.labels.shape)
+
+    def with_media(self, media_list: list[Medium]) -> "Volume":
+        return dataclasses.replace(self, media=pack_media(media_list))
+
+
+def pack_media(media_list: list[Medium]) -> jnp.ndarray:
+    rows = [[m.mua, m.mus, m.g, m.n] for m in media_list]
+    return jnp.asarray(rows, dtype=jnp.float32)
+
+
+def homogeneous_cube(
+    shape: tuple[int, int, int],
+    medium: Medium,
+    unitinmm: float = 1.0,
+) -> Volume:
+    labels = jnp.ones(shape, dtype=jnp.uint8)
+    return Volume(labels=labels, media=pack_media([AIR, medium]), unitinmm=unitinmm)
+
+
+def cube_with_sphere(
+    shape: tuple[int, int, int],
+    background: Medium,
+    inclusion: Medium,
+    center_mm: tuple[float, float, float],
+    radius_mm: float,
+    unitinmm: float = 1.0,
+) -> Volume:
+    nx, ny, nz = shape
+    # voxel centers in mm
+    xs = (np.arange(nx) + 0.5) * unitinmm
+    ys = (np.arange(ny) + 0.5) * unitinmm
+    zs = (np.arange(nz) + 0.5) * unitinmm
+    gx, gy, gz = np.meshgrid(xs, ys, zs, indexing="ij")
+    r2 = (
+        (gx - center_mm[0]) ** 2
+        + (gy - center_mm[1]) ** 2
+        + (gz - center_mm[2]) ** 2
+    )
+    labels = np.where(r2 <= radius_mm**2, 2, 1).astype(np.uint8)
+    return Volume(
+        labels=jnp.asarray(labels),
+        media=pack_media([AIR, background, inclusion]),
+        unitinmm=unitinmm,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paper benchmark domains (Fig. 2 of Yu et al. 2017)
+# ---------------------------------------------------------------------------
+
+B1_MEDIUM = Medium(mua=0.005, mus=1.0, g=0.01, n=1.37)
+B2_INCLUSION = Medium(mua=0.002, mus=5.0, g=0.9, n=1.0)
+
+
+def benchmark_b1(shape: tuple[int, int, int] = (60, 60, 60)) -> Volume:
+    """B1: homogeneous cube, photon terminates at the boundary."""
+    return homogeneous_cube(shape, B1_MEDIUM)
+
+
+def benchmark_b2(shape: tuple[int, int, int] = (60, 60, 60)) -> Volume:
+    """B2/B2a: cube with centered spherical inclusion, boundary reflection."""
+    center = tuple(s / 2.0 for s in shape)
+    radius = shape[0] / 4.0  # 15 mm for the 60 mm cube of the paper
+    return cube_with_sphere(shape, B1_MEDIUM, B2_INCLUSION, center, radius)
+
+
+@dataclasses.dataclass(frozen=True)
+class Source:
+    """Pencil-beam source (the paper's configuration)."""
+
+    pos: tuple[float, float, float] = (30.0, 30.0, 0.0)
+    dir: tuple[float, float, float] = (0.0, 0.0, 1.0)
+
+    def pos_array(self) -> jnp.ndarray:
+        return jnp.asarray(self.pos, dtype=jnp.float32)
+
+    def dir_array(self) -> jnp.ndarray:
+        d = np.asarray(self.dir, dtype=np.float64)
+        d = d / np.linalg.norm(d)
+        return jnp.asarray(d, dtype=jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Physics / termination configuration for a simulation run.
+
+    ``do_reflect`` toggles Snell/Fresnel handling at refractive-index
+    mismatches (False for B1, True for B2/B2a).  ``deposit_mode``
+    selects exact Beer-Lambert deposition (``"exact"``) or the
+    first-order native-math variant (``"taylor"``, the Opt1 analogue).
+    """
+
+    do_reflect: bool = False
+    tmax_ns: float = 5.0
+    w_threshold: float = 1e-4
+    roulette_m: float = 10.0
+    deposit_mode: str = "exact"  # "exact" | "taylor" (Opt1 analogue)
+    specialize: bool = True      # Opt3 analogue: trace-time kernel specialization
+    max_steps: int = 500_000     # hard cap on lock-step iterations
+
+
+def b1_config() -> SimConfig:
+    return SimConfig(do_reflect=False)
+
+
+def b2_config() -> SimConfig:
+    return SimConfig(do_reflect=True)

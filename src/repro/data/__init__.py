@@ -1,0 +1,3 @@
+from repro.data.pipeline import (  # noqa: F401
+    ByteTokenizer, SyntheticLM, make_pipeline,
+)

@@ -1,0 +1,119 @@
+"""Deterministic, checkpointable data pipeline.
+
+Two sources:
+  * :class:`SyntheticLM` — counter-seeded synthetic token stream (zipf
+    marginals + a learnable-by-LM bigram structure), used by smoke tests,
+    benchmarks and the quickstart so nothing depends on external data.
+  * :class:`ByteTokenizer` + text files — a real (if minimal) corpus
+    path for the end-to-end example.
+
+Both expose ``state_dict()/load_state_dict()`` (a single step counter —
+batches are a pure function of (seed, step)), so a restore resumes the
+exact batch sequence: the data-pipeline half of fault tolerance.  In a
+multi-host deployment each process draws the same global batch and
+slices its per-host shard by process index (``shard`` argument).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+class ByteTokenizer:
+    """Trivial byte-level tokenizer (vocab 256 + pad)."""
+
+    vocab_size = 257
+    pad_id = 256
+
+    def encode(self, text: str) -> np.ndarray:
+        return np.frombuffer(text.encode("utf-8"), dtype=np.uint8).astype(
+            np.int32)
+
+    def decode(self, ids) -> str:
+        ids = [i for i in np.asarray(ids).tolist() if i < 256]
+        return bytes(ids).decode("utf-8", errors="replace")
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Counter-seeded synthetic LM batches: tokens + next-token labels."""
+
+    vocab: int
+    batch: int
+    seq_len: int
+    seed: int = 0
+    step: int = 0
+
+    def next_batch(self, shard: tuple[int, int] = (0, 1)) -> dict:
+        rng = np.random.default_rng((self.seed << 20) ^ self.step)
+        # zipf-ish marginal with deterministic bigram structure the model
+        # can learn: token[t+1] = (a * token[t] + noise) % vocab
+        b, s = self.batch, self.seq_len
+        start = rng.integers(0, self.vocab, size=(b, 1))
+        mult = 31
+        noise = rng.integers(0, 7, size=(b, s))
+        toks = np.zeros((b, s), np.int64)
+        toks[:, 0] = start[:, 0]
+        for t in range(1, s):
+            toks[:, t] = (toks[:, t - 1] * mult + noise[:, t]) % self.vocab
+        self.step += 1
+        i, n = shard
+        shard_b = b // n
+        sl = slice(i * shard_b, (i + 1) * shard_b)
+        tokens = toks[sl].astype(np.int32)
+        labels = np.roll(toks[sl], -1, axis=1).astype(np.int32)
+        mask = np.ones_like(tokens, np.float32)
+        mask[:, -1] = 0.0
+        return {"tokens": tokens, "labels": labels, "mask": mask}
+
+    def state_dict(self) -> dict:
+        return {"step": np.int64(self.step), "seed": np.int64(self.seed)}
+
+    def load_state_dict(self, state: dict):
+        assert int(state["seed"]) == self.seed, "seed mismatch on restore"
+        self.step = int(state["step"])
+
+
+class TextFileLM:
+    """Packed next-token batches from a byte-tokenized text file."""
+
+    def __init__(self, path: str, batch: int, seq_len: int, seed: int = 0):
+        self.tok = ByteTokenizer()
+        with open(path, "r", encoding="utf-8", errors="replace") as f:
+            self.data = self.tok.encode(f.read())
+        self.batch = batch
+        self.seq_len = seq_len
+        self.seed = seed
+        self.step = 0
+
+    def next_batch(self, shard: tuple[int, int] = (0, 1)) -> dict:
+        rng = np.random.default_rng((self.seed << 20) ^ self.step)
+        b, s = self.batch, self.seq_len
+        n = len(self.data) - s - 1
+        starts = rng.integers(0, max(n, 1), size=(b,))
+        toks = np.stack([self.data[st : st + s] for st in starts])
+        labels = np.stack([self.data[st + 1 : st + s + 1] for st in starts])
+        self.step += 1
+        i, k = shard
+        shard_b = b // k
+        sl = slice(i * shard_b, (i + 1) * shard_b)
+        return {
+            "tokens": toks[sl].astype(np.int32),
+            "labels": labels[sl].astype(np.int32),
+            "mask": np.ones((shard_b, s), np.float32),
+        }
+
+    def state_dict(self) -> dict:
+        return {"step": np.int64(self.step), "seed": np.int64(self.seed)}
+
+    def load_state_dict(self, state: dict):
+        self.step = int(state["step"])
+
+
+def make_pipeline(vocab: int, batch: int, seq_len: int, seed: int = 0,
+                  path: str | None = None):
+    if path:
+        return TextFileLM(path, batch, seq_len, seed)
+    return SyntheticLM(vocab=vocab, batch=batch, seq_len=seq_len, seed=seed)

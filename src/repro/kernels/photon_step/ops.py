@@ -1,0 +1,35 @@
+"""Jit'd public wrapper around the photon_step Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core import photon as ph
+from repro.core.volume import SimConfig, Source, Volume
+from repro.kernels.photon_step.photon_step import photon_step_pallas
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "shape", "unitinmm", "cfg", "n_steps", "block_lanes", "interpret"))
+def photon_steps(labels_flat, media, state, shape, unitinmm, cfg: SimConfig,
+                 n_steps: int, block_lanes: int = 256,
+                 interpret: bool = True):
+    return photon_step_pallas(labels_flat, media, state, shape, unitinmm,
+                              cfg, n_steps, block_lanes, interpret)
+
+
+def simulate_kernel(volume: Volume, cfg: SimConfig, n_photons: int,
+                    n_steps: int, seed: int = 1234,
+                    source: Source | None = None, block_lanes: int = 256,
+                    interpret: bool = True):
+    """Launch one photon per lane and advance n_steps with the kernel."""
+    source = source or Source()
+    ids = jax.numpy.arange(n_photons, dtype=jax.numpy.uint32)
+    state = ph.launch(source.pos_array(), source.dir_array(), ids,
+                      jax.numpy.uint32(seed),
+                      jax.numpy.ones((n_photons,), bool), volume.shape)
+    return photon_steps(volume.labels.reshape(-1), volume.media, state,
+                        volume.shape, volume.unitinmm, cfg, n_steps,
+                        block_lanes, interpret)

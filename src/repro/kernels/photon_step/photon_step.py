@@ -1,0 +1,151 @@
+"""Pallas TPU kernel for the photon transport hot loop.
+
+TPU adaptation of the paper's OpenCL simulation kernel (DESIGN.md
+§kernel):
+
+  * The voxel volume (uint8 labels, 216 KB at the paper's 60^3) and the
+    optical-property table live in VMEM for the whole kernel — the
+    analogue of the paper keeping the volume in texture/constant memory.
+  * Photon state is SoA, blocked over lanes: each grid step processes
+    one block of photons entirely in VMEM/VREGs, advancing ``n_steps``
+    segments per invocation (the "simulation loop" of Fig. 1).
+  * Fluence accumulation: the paper needs atomic float adds (its B2a
+    benchmark measures their cost).  TPU Pallas has no atomics and needs
+    none: the grid is sequential on a core, so each block scatter-adds
+    into the fluence output block that is REVISITED by every grid step —
+    race-free accumulation by construction.  Cross-device accumulation
+    is one psum in the caller (multidevice.py).
+  * RNG: same counter-seeded xorshift128 as the engine (32-bit ops only;
+    TPUs have no 64-bit vector units — the paper's xorshift128+ is
+    64-bit, see DESIGN.md §rng).
+
+The physics body is shared with the engine (repro.core.photon.step), so
+kernel trajectories are bit-identical to the oracle by construction; the
+kernel's contribution is the memory/layout architecture.
+
+Validated with interpret=True on CPU (tests/test_kernels_photon.py); on
+real TPU hardware the label gather (jnp.take) and fluence scatter-add
+lower via XLA gather/scatter — supported by Mosaic for rank-1 VMEM
+operands.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import photon as ph
+from repro.core.volume import SimConfig
+
+
+def _kernel(labels_ref, media_ref,
+            pos_ref, dir_ref, ivox_ref, w_ref, s_ref, t_ref, rng_ref,
+            alive_ref,
+            out_pos, out_dir, out_ivox, out_w, out_s, out_t, out_rng,
+            out_alive, fluence_ref, esc_ref,
+            *, shape, unitinmm, cfg: SimConfig, n_steps: int):
+    # zero the (revisited) fluence block on the first grid step only
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        fluence_ref[...] = jnp.zeros_like(fluence_ref)
+
+    labels = labels_ref[...]
+    media = media_ref[...]
+    state = ph.PhotonState(
+        pos=pos_ref[...], dir=dir_ref[...], ivox=ivox_ref[...],
+        w=w_ref[...], s_left=s_ref[...], t=t_ref[...], rng=rng_ref[...],
+        alive=alive_ref[...] != 0,
+    )
+    n = state.w.shape[0]
+
+    def body(_, carry):
+        st, flu, esc = carry
+        res = ph.step(st, labels, media, shape, unitinmm, cfg)
+        flu = flu.at[res.dep_idx].add(res.dep_w)
+        esc = esc + res.esc_w
+        return (res.state, flu, esc)
+
+    state, flu_add, esc = jax.lax.fori_loop(
+        0, n_steps, body,
+        (state, jnp.zeros_like(fluence_ref), jnp.zeros((n,), jnp.float32)),
+    )
+
+    out_pos[...] = state.pos
+    out_dir[...] = state.dir
+    out_ivox[...] = state.ivox
+    out_w[...] = state.w
+    out_s[...] = state.s_left
+    out_t[...] = state.t
+    out_rng[...] = state.rng
+    out_alive[...] = state.alive.astype(jnp.int8)
+    esc_ref[...] = esc
+    # accumulate this block's deposition into the shared fluence block
+    fluence_ref[...] += flu_add
+
+
+def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
+                       shape, unitinmm, cfg: SimConfig, n_steps: int,
+                       block_lanes: int = 256, interpret: bool = True):
+    """Advance all lanes ``n_steps`` segments; returns
+    (new_state, fluence_flat, escaped_per_lane)."""
+    n = state.w.shape[0]
+    if n % block_lanes:
+        raise ValueError(f"lane count {n} not divisible by {block_lanes}")
+    nblocks = n // block_lanes
+    nvox = labels_flat.shape[0]
+    n_media = media.shape[0]
+
+    def lane_spec(extra=()):
+        return pl.BlockSpec((block_lanes,) + extra,
+                            lambda i: (i,) + (0,) * len(extra))
+
+    full_vol = pl.BlockSpec((nvox,), lambda i: (0,))       # revisited
+    full_media = pl.BlockSpec((n_media, 4), lambda i: (0, 0))
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((n, 3), jnp.float32),   # pos
+        jax.ShapeDtypeStruct((n, 3), jnp.float32),   # dir
+        jax.ShapeDtypeStruct((n, 3), jnp.int32),     # ivox
+        jax.ShapeDtypeStruct((n,), jnp.float32),     # w
+        jax.ShapeDtypeStruct((n,), jnp.float32),     # s_left
+        jax.ShapeDtypeStruct((n,), jnp.float32),     # t
+        jax.ShapeDtypeStruct((n, 4), jnp.uint32),    # rng
+        jax.ShapeDtypeStruct((n,), jnp.int8),        # alive
+        jax.ShapeDtypeStruct((nvox,), jnp.float32),  # fluence (accumulated)
+        jax.ShapeDtypeStruct((n,), jnp.float32),     # escaped weight
+    )
+    out_specs = (
+        lane_spec((3,)), lane_spec((3,)), lane_spec((3,)),
+        lane_spec(), lane_spec(), lane_spec(),
+        lane_spec((4,)), lane_spec(),
+        full_vol, lane_spec(),
+    )
+    in_specs = (
+        full_vol, full_media,
+        lane_spec((3,)), lane_spec((3,)), lane_spec((3,)),
+        lane_spec(), lane_spec(), lane_spec(),
+        lane_spec((4,)), lane_spec(),
+    )
+
+    kernel = functools.partial(
+        _kernel, shape=shape, unitinmm=unitinmm, cfg=cfg, n_steps=n_steps)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(labels_flat, media,
+      state.pos, state.dir, state.ivox, state.w, state.s_left, state.t,
+      state.rng, state.alive.astype(jnp.int8))
+
+    new_state = ph.PhotonState(
+        pos=outs[0], dir=outs[1], ivox=outs[2], w=outs[3], s_left=outs[4],
+        t=outs[5], rng=outs[6], alive=outs[7] != 0,
+    )
+    return new_state, outs[8], outs[9]

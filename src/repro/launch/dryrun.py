@@ -1,0 +1,369 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST stay first — jax locks the device count
+# on first init.  (That also rules out `from __future__ import`.)
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we jit the appropriate step (train_step / prefill / serve)
+with the production in/out shardings, ``.lower()`` it against
+ShapeDtypeStruct stand-ins (no allocation), ``.compile()`` it, and
+extract:
+
+  * ``compiled.memory_analysis()``   — per-device bytes (does it fit?),
+  * ``compiled.cost_analysis()``     — HLO FLOPs / bytes for §Roofline,
+  * collective bytes parsed from the optimized HLO text (all-gather,
+    all-reduce, reduce-scatter, all-to-all, collective-permute).
+
+Results go to a JSON report consumed by benchmarks/roofline.py and
+EXPERIMENTS.md.  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out reports/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro.launch.mesh import make_production_mesh
+from repro.models import api as API
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.optim import adamw
+from repro.sharding import hints
+from repro.sharding import partition as SH
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# TPU v5e-class hardware constants (per chip) for the roofline terms
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # bytes/s
+ICI_BW = 50e9                  # bytes/s per link (~per-chip usable)
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^=]*?=\s*(\([^)]*\)|\S+)\s")
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64|u64)"
+                       r"\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8}
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum output-shape bytes of every collective op in the HLO."""
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(
+            r".*=\s*((?:\([^)]*\))|(?:\S+))\s+"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)", stripped)
+        if not m:
+            continue
+        shapes_str, op = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(shapes_str):
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            nbytes += n * _DTYPE_BYTES.get(dt, 4)
+        out[op] = out.get(op, 0.0) + float(nbytes)
+    return out
+
+
+def _cost_get(cost: dict, key: str) -> float:
+    try:
+        return float(cost.get(key, 0.0))
+    except Exception:
+        return 0.0
+
+
+def analytic_terms(cfg, shape, n_chips: int, fsdp: bool,
+                   n_total: float, n_active: float) -> dict:
+    """First-principles roofline terms (per chip, seconds).
+
+    XLA:CPU's cost_analysis counts while-loop (scan) bodies ONCE, so its
+    FLOP/byte totals undercount scanned layer stacks; these closed-form
+    estimates are the primary roofline numbers (EXPERIMENTS.md §Roofline
+    documents the cross-check).  First-order formulas:
+
+      FLOPs  = mult * N_active * tokens  (+ attention 4*L*B*S^2*H*hd*fb)
+      bytes  = weight traffic + activation traffic + KV-cache traffic
+      coll   = fsdp weight all-gather + grad reduce + TP activation
+               reductions (train); TP reductions (serve)
+    """
+    L = cfg.n_layers + cfg.n_encoder_layers
+    b, s = shape.global_batch, shape.seq_len
+    tokens = b * (1 if shape.step_kind == "decode" else s)
+    train = shape.step_kind == "train"
+    mult = 6.0 if train else 2.0
+    fb = 3.0 if train else 1.0  # fwd + 2x bwd
+
+    flops = mult * n_active * tokens
+    if cfg.n_heads and shape.step_kind != "decode":
+        s_eff = min(s, cfg.sliding_window) if cfg.sliding_window else s
+        flops += 4.0 * L * b * s * s_eff * cfg.n_heads * cfg.head_dim * fb / 2
+    if cfg.n_heads and shape.step_kind == "decode":
+        s_eff = min(s, cfg.sliding_window) if cfg.sliding_window else s
+        flops += 4.0 * L * b * s_eff * cfg.n_heads * cfg.head_dim
+
+    wbytes = 2.0 * n_total            # bf16 weights, one read
+    if train:
+        wbytes = 2.0 * n_total * 3 + 12.0 * n_total  # fwd+bwd+update, adam
+    act = 2.0 * tokens * cfg.d_model * L * (4 if train else 2)
+    cache = 0.0
+    if shape.step_kind == "decode":
+        if cfg.use_mla:
+            cache = 2.0 * b * s * (cfg.kv_lora_rank + cfg.qk_rope_head_dim) * L
+        elif cfg.n_kv_heads:
+            s_eff = min(s, cfg.sliding_window) if cfg.sliding_window else s
+            cache = 2.0 * 2 * b * s_eff * cfg.n_kv_heads * cfg.head_dim * L
+        if cfg.ssm_state:
+            cache += 4.0 * b * cfg.ssm_nheads * cfg.ssm_state * \
+                cfg.ssm_headdim * L
+    bytes_total = wbytes + act + cache
+
+    # collectives (global bytes moved, then / chips for per-link time)
+    coll = 0.0
+    if train:
+        if fsdp:
+            coll += 2.0 * n_total * 2          # weight AG fwd+bwd
+        coll += 2.0 * n_total * 2              # grad RS + param AG (or AR)
+        # TP activation reductions: ~4 per layer of (tokens, d_model)
+        coll += 4.0 * L * tokens * cfg.d_model * 2
+    else:
+        coll += 2.0 * L * tokens * cfg.d_model * 2  # TP reductions
+    return {
+        "analytic_flops": flops,
+        "analytic_bytes": bytes_total,
+        "analytic_coll_bytes": coll,
+        "analytic_compute_s": flops / (n_chips * PEAK_FLOPS_BF16),
+        "analytic_memory_s": bytes_total / (n_chips * HBM_BW),
+        "analytic_collective_s": coll / (n_chips * ICI_BW),
+    }
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig):
+    """6*N*D (dense) / 6*N_active*D (MoE) useful-model-FLOPs estimate.
+    Returns (model_flops, n_total_params, n_active_params)."""
+    model = API.build_model(cfg)
+    specs = API.param_specs(model)
+    import numpy as np
+
+    def leaf_count(tree):
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+    n_total = leaf_count(specs)
+    if cfg.n_experts and cfg.top_k:
+        flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+        expert_params = sum(
+            int(np.prod(l.shape)) for path, l in flat
+            if any("ffn" in str(getattr(k, "key", k)) for k in path)
+            and l.shape and l.ndim >= 3 and l.shape[-3] == cfg.n_experts
+        )
+        n_active = n_total - expert_params + expert_params * cfg.top_k / cfg.n_experts
+    else:
+        n_active = n_total
+    tokens = shape.global_batch * (1 if shape.step_kind == "decode"
+                                   else shape.seq_len)
+    mult = 6.0 if shape.step_kind == "train" else 2.0
+    return mult * n_active * tokens, float(n_total), float(n_active)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             fsdp=None, cfg_override=None) -> dict:
+    """Lower+compile one cell; returns the roofline record."""
+    cfg = cfg_override or C.get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    batch_axes, model_axis = SH._axes(mesh)
+    n_chips = mesh.size
+    model = API.build_model(cfg)
+    if fsdp is None:
+        fsdp = shape.step_kind == "train"
+
+    param_shapes = API.param_specs(model)
+    pspecs = SH.param_partition_specs(param_shapes, cfg, mesh, fsdp=fsdp)
+    batch_shapes = API.input_specs(cfg, shape)
+    bspecs = SH.batch_specs(batch_shapes, mesh)
+
+    ep = bool(cfg.n_experts) and model_axis is not None and \
+        cfg.n_experts % dict(mesh.shape)[model_axis] == 0
+    sizes = dict(mesh.shape)
+    n_dp = 1
+    for a in batch_axes:
+        n_dp *= sizes[a]
+    import contextlib
+    stack = contextlib.ExitStack()
+    stack.enter_context(hints.activation_hints(batch_axes, model_axis,
+                                               expert_parallel=ep,
+                                               n_data_shards=n_dp))
+    stack.enter_context(jax.sharding.set_mesh(mesh))
+    t0 = time.time()
+    if shape.step_kind == "train":
+        optimizer = adamw()
+        opt_shapes = jax.eval_shape(optimizer.init, param_shapes)
+        ospecs = SH.opt_state_specs_like(pspecs, opt_shapes)
+        step_fn, _ = API.make_train_step(model, optimizer)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(SH.to_shardings(pspecs, mesh),
+                          SH.to_shardings(ospecs, mesh),
+                          SH.to_shardings(bspecs, mesh)),
+            out_shardings=(SH.to_shardings(pspecs, mesh),
+                           SH.to_shardings(ospecs, mesh),
+                           NamedSharding(mesh, P())),
+            donate_argnums=(0, 1),  # params/opt update in place
+        )
+        lowered = jitted.lower(param_shapes, opt_shapes, batch_shapes)
+    elif shape.step_kind == "prefill":
+        step_fn = API.make_prefill_step(model)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(SH.to_shardings(pspecs, mesh),
+                          SH.to_shardings(bspecs, mesh)),
+        )
+        lowered = jitted.lower(param_shapes, batch_shapes)
+    else:  # decode
+        cache_shapes = API.cache_specs(model, shape.global_batch,
+                                       shape.seq_len)
+        cspecs = SH.cache_specs_tree(cache_shapes, cfg, mesh,
+                                     seq_shard=bool(
+                                         os.environ.get("REPRO_CACHE_SEQ")))
+        step_fn = API.make_serve_step(model)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(SH.to_shardings(pspecs, mesh),
+                          SH.to_shardings(cspecs, mesh),
+                          SH.to_shardings(bspecs, mesh)),
+            out_shardings=(NamedSharding(mesh, P()),
+                           SH.to_shardings(cspecs, mesh)),
+            donate_argnums=(1,),  # KV/SSM cache updates in place
+        )
+        lowered = jitted.lower(param_shapes, cache_shapes, batch_shapes)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    stack.close()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    # collectives inside the scanned layer body appear once in the HLO
+    # text but execute once per layer: scale by the stack depth
+    n_loop = cfg.n_layers + cfg.n_encoder_layers
+    coll_total = sum(coll.values()) * max(n_loop, 1)
+
+    # XLA:CPU cost_analysis counts while-loop bodies once — per-device
+    # values reported as *lower bounds*, cross-checked by the analytic
+    # closed forms below (which drive the bottleneck classification)
+    hlo_flops_dev = _cost_get(cost, "flops")
+    hlo_bytes_dev = _cost_get(cost, "bytes accessed")
+    mf, n_total, n_active = model_flops(cfg, shape)
+    ana = analytic_terms(cfg, shape, n_chips, fsdp, n_total, n_active)
+
+    t_compute = ana["analytic_compute_s"]
+    t_memory = ana["analytic_memory_s"]
+    t_coll = ana["analytic_collective_s"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    hlo_flops_global = hlo_flops_dev * n_chips * max(n_loop, 1)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "step_kind": shape.step_kind,
+        "fsdp": fsdp,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "hlo_flops_per_dev_body_once": hlo_flops_dev,
+        "hlo_bytes_per_dev_body_once": hlo_bytes_dev,
+        "collective_bytes": coll_total,
+        "collectives_body_once": coll,
+        "bytes_per_device": {
+            "argument": getattr(mem, "argument_size_in_bytes", 0),
+            "output": getattr(mem, "output_size_in_bytes", 0),
+            "temp": getattr(mem, "temp_size_in_bytes", 0),
+            "peak": (getattr(mem, "argument_size_in_bytes", 0)
+                     + getattr(mem, "temp_size_in_bytes", 0)),
+        },
+        **terms,
+        **ana,
+        "hlo_collective_s": coll_total / (n_chips * ICI_BW),
+        "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops": mf,
+        "n_params": n_total,
+        "n_active_params": n_active,
+        "useful_flops_frac": min(
+            mf / max(ana["analytic_flops"], 1.0), 1.0),
+        "roofline_frac": (
+            mf / (n_chips * PEAK_FLOPS_BF16)
+            / max(t_compute, t_memory, t_coll)
+            if max(t_compute, t_memory, t_coll) > 0 else 0.0),
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--fsdp", default=None,
+                    help="override fsdp on/off (default: train only)")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    if args.all:
+        todo = [(a, s.name) for a, s in C.cells()]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    os.makedirs(args.out, exist_ok=True)
+    fsdp = None if args.fsdp is None else args.fsdp == "on"
+    failures = 0
+    for arch, shape_name in todo:
+        for multi_pod in meshes:
+            tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+            try:
+                rec = run_cell(arch, shape_name, multi_pod, fsdp=fsdp)
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=2)
+                print(f"[OK] {tag}: compile={rec['compile_s']}s "
+                      f"bottleneck={rec['bottleneck']} "
+                      f"terms=({rec['compute_s']:.3e},{rec['memory_s']:.3e},"
+                      f"{rec['collective_s']:.3e})s "
+                      f"peak/dev={rec['bytes_per_device']['peak']/2**30:.2f}GiB",
+                      flush=True)
+            except Exception as e:
+                failures += 1
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

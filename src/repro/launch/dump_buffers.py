@@ -1,0 +1,116 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Debug tool: compile one cell and print the largest HLO tensors +
+memory_analysis fields.  Usage:
+  PYTHONPATH=src python -m repro.launch.dump_buffers --arch X --shape Y
+"""
+
+import argparse
+import re
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    from repro.launch import dryrun as DR
+
+    # reuse run_cell but keep the compiled object: monkeypatch-free rerun
+    import repro.launch.dryrun as mod
+    cfg = None
+    from repro import configs as C
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import api as API
+    from repro.models.config import SHAPES
+    from repro.optim import adamw
+    from repro.sharding import hints
+    from repro.sharding import partition as SH
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cfg = C.get_config(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi)
+    batch_axes, model_axis = SH._axes(mesh)
+    model = API.build_model(cfg)
+    fsdp = shape.step_kind == "train"
+    param_shapes = API.param_specs(model)
+    pspecs = SH.param_partition_specs(param_shapes, cfg, mesh, fsdp=fsdp)
+    batch_shapes = API.input_specs(cfg, shape)
+    bspecs = SH.batch_specs(batch_shapes, mesh)
+    sizes = dict(mesh.shape)
+    ep = bool(cfg.n_experts) and cfg.n_experts % sizes[model_axis] == 0
+    n_dp = 1
+    for a in batch_axes:
+        n_dp *= sizes[a]
+
+    with hints.activation_hints(batch_axes, model_axis, expert_parallel=ep,
+                                n_data_shards=n_dp), \
+            jax.sharding.set_mesh(mesh):
+        if shape.step_kind == "train":
+            optimizer = adamw()
+            opt_shapes = jax.eval_shape(optimizer.init, param_shapes)
+            ospecs = SH.opt_state_specs_like(pspecs, opt_shapes)
+            step_fn, _ = API.make_train_step(model, optimizer)
+            co = jax.jit(
+                step_fn,
+                in_shardings=(SH.to_shardings(pspecs, mesh),
+                              SH.to_shardings(ospecs, mesh),
+                              SH.to_shardings(bspecs, mesh)),
+                out_shardings=(SH.to_shardings(pspecs, mesh),
+                               SH.to_shardings(ospecs, mesh),
+                               NamedSharding(mesh, P())),
+                donate_argnums=(0, 1),
+            ).lower(param_shapes, opt_shapes, batch_shapes).compile()
+        elif shape.step_kind == "prefill":
+            step_fn = API.make_prefill_step(model)
+            co = jax.jit(
+                step_fn,
+                in_shardings=(SH.to_shardings(pspecs, mesh),
+                              SH.to_shardings(bspecs, mesh)),
+            ).lower(param_shapes, batch_shapes).compile()
+        else:
+            cache_shapes = API.cache_specs(model, shape.global_batch,
+                                           shape.seq_len)
+            cspecs = SH.cache_specs_tree(cache_shapes, cfg, mesh)
+            step_fn = API.make_serve_step(model)
+            co = jax.jit(
+                step_fn,
+                in_shardings=(SH.to_shardings(pspecs, mesh),
+                              SH.to_shardings(cspecs, mesh),
+                              SH.to_shardings(bspecs, mesh)),
+                out_shardings=(NamedSharding(mesh, P()),
+                               SH.to_shardings(cspecs, mesh)),
+                donate_argnums=(1,),
+            ).lower(param_shapes, cache_shapes, batch_shapes).compile()
+
+    mem = co.memory_analysis()
+    for f in dir(mem):
+        if f.endswith("bytes"):
+            print(f"{f}: {getattr(mem, f)/2**30:.2f} GiB")
+    hlo = co.as_text()
+    sizes_by_shape = {}
+    for m in re.finditer(r"(bf16|f32|f16|s32|u32|s8|u8|pred)\[([0-9,]+)\]",
+                         hlo):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        bytes_ = n * {"bf16": 2, "f16": 2, "pred": 1, "s8": 1,
+                      "u8": 1}.get(dt, 4)
+        key = f"{dt}[{dims}]"
+        prev = sizes_by_shape.get(key, (0, 0))
+        sizes_by_shape[key] = (bytes_, prev[1] + 1)
+    for k, (b, cnt) in sorted(sizes_by_shape.items(),
+                              key=lambda kv: -kv[1][0])[: args.top]:
+        print(f"{b/2**30:8.2f} GiB x{cnt:4d}  {k}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+Kept as functions (never module-level constants) so importing this
+module touches no jax device state — required for the dry-run's
+host-device-count trick to work and for smoke tests to keep seeing one
+device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips across two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(axis: str = "data"):
+    """All locally visible devices on one axis (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), (axis,))

@@ -1,0 +1,78 @@
+"""Photon-simulation launcher (the paper's workload).
+
+  PYTHONPATH=src python -m repro.launch.simulate --bench B1 \
+      --photons 100000 --lanes 4096 [--autotune] [--devices all]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import analysis as A
+from repro.core import loadbalance as LB
+from repro.core import simulator as S
+from repro.core import volume as V
+from repro.core.multidevice import ChunkScheduler, simulate_sharded
+
+
+def get_bench(name: str, size: int):
+    shape = (size, size, size)
+    if name == "B1":
+        return V.benchmark_b1(shape), V.SimConfig(do_reflect=False)
+    if name in ("B2", "B2a"):
+        return V.benchmark_b2(shape), V.SimConfig(do_reflect=True)
+    raise ValueError(name)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="B1", choices=["B1", "B2", "B2a"])
+    ap.add_argument("--photons", type=int, default=100_000)
+    ap.add_argument("--lanes", type=int, default=4096)
+    ap.add_argument("--size", type=int, default=60)
+    ap.add_argument("--seed", type=int, default=1234)
+    ap.add_argument("--autotune", action="store_true",
+                    help="Opt2: pilot-sweep the lane count")
+    ap.add_argument("--devices", default="one", choices=["one", "all"])
+    ap.add_argument("--chunk", type=int, default=0,
+                    help=">0: dynamic chunk scheduling (straggler-safe)")
+    args = ap.parse_args(argv)
+
+    vol, cfg = get_bench(args.bench, args.size)
+    lanes = args.lanes
+    if args.autotune:
+        lanes, timings = S.autotune_lanes(vol, cfg, n_pilot=args.photons // 10)
+        print("autotune:", {k: round(v, 3) for k, v in timings.items()},
+              "-> lanes =", lanes)
+
+    t0 = time.time()
+    if args.chunk:
+        sched = ChunkScheduler(vol, cfg, n_lanes=lanes)
+        res, stats = sched.run(args.photons, args.chunk, seed=args.seed)
+        print("per-device photons:", stats)
+    elif args.devices == "all" and len(jax.devices()) > 1:
+        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        res = simulate_sharded(vol, cfg, args.photons, mesh,
+                               n_lanes=lanes, seed=args.seed)
+    else:
+        res = S.simulate(vol, cfg, args.photons, lanes, args.seed)
+    jax.block_until_ready(res)
+    dt = time.time() - t0
+
+    bal = A.energy_balance(res)
+    print(f"{args.bench}: {args.photons} photons in {dt:.2f}s "
+          f"({args.photons/dt/1e3:.2f} photons/ms)")
+    print(f"energy balance: absorbed={bal['absorbed']:.1f} "
+          f"escaped={bal['escaped']:.1f} residue={bal['residue_frac']:.2e}")
+    phi = A.fluence_cw(res, vol)
+    print(f"fluence: max={float(np.max(np.asarray(phi))):.3e} "
+          f"nonzero voxels={int(np.sum(np.asarray(phi) > 0))}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

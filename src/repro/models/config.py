@@ -1,0 +1,105 @@
+"""Architecture configuration dataclass shared by all model families."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    kind: str                     # dense | moe | ssm | hybrid | vlm | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    rope_theta: float = 500_000.0
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0             # per-expert hidden dim
+    capacity_factor: float = 1.25
+    first_dense_layers: int = 0   # deepseek: first k layers stay dense
+
+    # --- MLA (deepseek) ---
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- attention variants ---
+    sliding_window: int = 0       # 0 = full attention (mixtral SWA = 4096)
+
+    # --- SSM (mamba2 / hymba) ---
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_ngroups: int = 1
+
+    # --- hybrid (hymba) ---
+    meta_tokens: int = 0
+
+    # --- vlm ---
+    cross_attn_every: int = 0     # insert a cross-attn layer every N layers
+    n_image_tokens: int = 0
+
+    # --- encdec (whisper) ---
+    n_encoder_layers: int = 0
+    encoder_frames: int = 1500    # stub audio frontend sequence length
+
+    # --- training ---
+    remat: bool = True
+
+    @property
+    def jax_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def kv_groups(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def is_subquadratic(self) -> bool:
+        """Can this arch decode at 500k context with bounded state?"""
+        return self.kind in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs autoregress (whisper via its decoder)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One of the assigned input-shape cells."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    step_kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

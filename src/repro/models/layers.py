@@ -1,0 +1,479 @@
+"""Shared neural net layers: norms, RoPE, MLPs, attention variants.
+
+All attention paths use a chunked online-softmax ("flash-style")
+formulation written with lax.scan so the S x S score matrix is never
+materialized — required for the 32k prefill and 4k x 256-batch train
+cells to fit the per-device memory budget.  A Pallas TPU kernel can be
+swapped in via ``attention_impl="pallas"`` (kernels/flash_attention);
+the XLA path is the portable default and the oracle.
+
+Parameters are plain nested dicts of jnp arrays.  Layer stacks are
+created by vmapping the per-layer init over a leading layer axis and
+consumed with lax.scan (MaxText-style), keeping HLO size O(1 layer).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.sharding import hints
+
+
+# ---------------------------------------------------------------------------
+# basics
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+
+
+def linear(p, x):
+    return x @ p["w"]
+
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * p["scale"]
+
+
+def rope(x, positions, theta):
+    """Rotary embedding.  x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_swiglu(key, d_model, d_ff, dtype):
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "wg": init_linear(kg, d_model, d_ff, dtype),
+        "wu": init_linear(ku, d_model, d_ff, dtype),
+        "wd": init_linear(kd, d_ff, d_model, dtype, scale=d_ff ** -0.5),
+    }
+
+
+def swiglu(p, x):
+    return linear(p["wd"], jax.nn.silu(linear(p["wg"], x)) * linear(p["wu"], x))
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) scaled dot-product attention — the XLA oracle
+# ---------------------------------------------------------------------------
+
+def _mask_for(qp, kp, causal, window, sk_valid):
+    mask = kp[None, :] <= qp[:, None] if causal else jnp.ones(
+        (qp.shape[0], kp.shape[0]), bool)
+    if window:
+        mask = mask & (kp[None, :] > qp[:, None] - window)
+    return mask & (kp[None, :] < sk_valid)
+
+
+def _flash_forward(q, k, v, causal, q_offset, window, cq, ck, sk_valid):
+    """Chunked online-softmax forward.  Blocked inputs:
+    q: (B, nq, cq, KV, G, D); k: (B, nk, ck, KV, D); v: (..., Dv).
+    Returns out (B, nq, cq, KV, G, Dv) and lse (B, nq, cq, KV, G)."""
+    b, nq, _, kv, groups, d = q.shape
+    nk = k.shape[1]
+    dv = v.shape[-1]
+    scale = d ** -0.5
+    q_pos = q_offset + jnp.arange(nq * cq).reshape(nq, cq)
+    k_pos = jnp.arange(nk * ck).reshape(nk, ck)
+
+    def q_block(args):
+        qb, qp = args  # (B, cq, KV, G, D), (cq,)
+
+        def kv_step(carry, blk):
+            m, l, acc = carry
+            kb, vb, kp = blk
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qb, kb) * scale
+            s = s.astype(jnp.float32)
+            mask = _mask_for(qp, kp, causal, window, sk_valid)
+            s = jnp.where(mask[None, None, None, :, :], s, -jnp.inf)
+            # running max kept at a finite floor so a fully-masked chunk
+            # (sliding window / padding) yields p == 0, never exp(-inf+inf)
+            m_new = jnp.maximum(jnp.maximum(m, s.max(axis=-1)), -1e30)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bckd->bkgqd", p.astype(vb.dtype), vb
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, groups, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kv, groups, cq), jnp.float32)
+        a0 = jnp.zeros((b, kv, groups, cq, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (k.transpose(1, 0, 2, 3, 4), v.transpose(1, 0, 2, 3, 4), k_pos),
+        )
+        safe_l = jnp.where(l > 0, l, 1.0)
+        out = acc / safe_l[..., None]            # (B, KV, G, cq, Dv)
+        lse = m + jnp.log(safe_l)                # (B, KV, G, cq)
+        return out.transpose(0, 3, 1, 2, 4), lse.transpose(0, 3, 1, 2)
+
+    outs, lses = jax.lax.map(q_block, (q.transpose(1, 0, 2, 3, 4, 5), q_pos))
+    # (nq, B, cq, KV, G, ...) -> (B, nq, cq, KV, G, ...)
+    return outs.transpose(1, 0, 2, 3, 4, 5), lses.transpose(1, 0, 2, 3, 4)
+
+
+def _blocked(q, k, v, cq, ck, kv, groups):
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    dv = v.shape[-1]
+    nq = -(-sq // cq)
+    nk = -(-sk // ck)
+    q = jnp.pad(q, ((0, 0), (0, nq * cq - sq), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, nk * ck - sk), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, nk * ck - sk), (0, 0), (0, 0)))
+    return (q.reshape(b, nq, cq, kv, groups, d),
+            k.reshape(b, nk, ck, kv, d),
+            v.reshape(b, nk, ck, kv, dv))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _chunked_attention_core(q, k, v, causal, q_offset, window, cq, ck):
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    groups = h // kv
+    qb, kb, vb = _blocked(q, k, v, cq, ck, kv, groups)
+    out, _ = _flash_forward(qb, kb, vb, causal, q_offset, window, cq, ck,
+                            k.shape[1])
+    nq = qb.shape[1]
+    dv = v.shape[-1]
+    out = out.reshape(b, nq * cq, h, dv)[:, :sq]
+    return out.astype(q.dtype)
+
+
+def _core_fwd(q, k, v, causal, q_offset, window, cq, ck):
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    groups = h // kv
+    qb, kb, vb = _blocked(q, k, v, cq, ck, kv, groups)
+    out, lse = _flash_forward(qb, kb, vb, causal, q_offset, window, cq, ck,
+                              k.shape[1])
+    nq = qb.shape[1]
+    dv = v.shape[-1]
+    out_flat = out.reshape(b, nq * cq, h, dv)[:, :sq].astype(q.dtype)
+    return out_flat, (q, k, v, out, lse)
+
+
+def _core_bwd(causal, q_offset, window, cq, ck, res, dout):
+    """Flash-attention backward: recompute per-chunk probabilities, never
+    store S_q x S_k.  Two sweeps: q-major for dq, kv-major for dk/dv."""
+    q, k, v, out, lse = res
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    groups = h // kv
+    dv_dim = v.shape[-1]
+    scale = d ** -0.5
+    qb, kb, vb = _blocked(q, k, v, cq, ck, kv, groups)
+    nq, nk = qb.shape[1], kb.shape[1]
+    dob = jnp.pad(dout.astype(jnp.float32),
+                  ((0, 0), (0, nq * cq - sq), (0, 0), (0, 0)))
+    dob = dob.reshape(b, nq, cq, kv, groups, dv_dim)
+    # D_i = rowsum(dout * out)
+    delta = jnp.sum(dob * out, axis=-1)          # (B, nq, cq, KV, G)
+    q_pos = q_offset + jnp.arange(nq * cq).reshape(nq, cq)
+    k_pos = jnp.arange(nk * ck).reshape(nk, ck)
+
+    kc = kb.transpose(1, 0, 2, 3, 4)
+    vc = vb.transpose(1, 0, 2, 3, 4)
+
+    # ---- sweep 1: dq (q-major, scan kv chunks) ----
+    def dq_block(args):
+        qq, do_, dl_, ls_, qp = args
+
+        def kv_step(dq_acc, blk):
+            kk, vv, kp = blk
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qq, kk).astype(jnp.float32)
+            s = s * scale
+            mask = _mask_for(qp, kp, causal, window, sk)
+            p = jnp.where(mask[None, None, None, :, :],
+                          jnp.exp(s - ls_.transpose(0, 2, 3, 1)[..., None]),
+                          0.0)
+            dp = jnp.einsum("bqkge,bcke->bkgqc", do_, vv).astype(jnp.float32)
+            ds = p * (dp - delta_t[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum(
+                "bkgqc,bckd->bqkgd", ds.astype(kk.dtype), kk
+            ).astype(jnp.float32)
+            return dq_acc, None
+
+        delta_t = dl_.transpose(0, 2, 3, 1)      # (B, KV, G, cq)
+        dq0 = jnp.zeros_like(qq, jnp.float32)
+        dq, _ = jax.lax.scan(kv_step, dq0, (kc, vc, k_pos))
+        return dq
+
+    dqs = jax.lax.map(
+        dq_block,
+        (qb.transpose(1, 0, 2, 3, 4, 5), dob.transpose(1, 0, 2, 3, 4, 5),
+         delta.transpose(1, 0, 2, 3, 4), lse.transpose(1, 0, 2, 3, 4), q_pos))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * cq, h, d)[:, :sq]
+
+    # ---- sweep 2: dk/dv (kv-major, scan q chunks) ----
+    qc = qb.transpose(1, 0, 2, 3, 4, 5)
+    doc = dob.transpose(1, 0, 2, 3, 4, 5)
+    dlc = delta.transpose(1, 0, 2, 3, 4)
+    lsc = lse.transpose(1, 0, 2, 3, 4)
+
+    def dkv_block(args):
+        kk, vv, kp = args
+
+        def q_step(carry, blk):
+            dk_acc, dv_acc = carry
+            qq, do_, dl_, ls_, qp = blk
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qq, kk).astype(jnp.float32)
+            s = s * scale
+            mask = _mask_for(qp, kp, causal, window, sk)
+            p = jnp.where(mask[None, None, None, :, :],
+                          jnp.exp(s - ls_.transpose(0, 2, 3, 1)[..., None]),
+                          0.0)
+            dv_acc = dv_acc + jnp.einsum(
+                "bkgqc,bqkge->bcke", p.astype(do_.dtype), do_
+            ).astype(jnp.float32)
+            dp = jnp.einsum("bqkge,bcke->bkgqc", do_, vv).astype(jnp.float32)
+            ds = p * (dp - dl_.transpose(0, 2, 3, 1)[..., None]) * scale
+            dk_acc = dk_acc + jnp.einsum(
+                "bkgqc,bqkgd->bckd", ds.astype(qq.dtype), qq
+            ).astype(jnp.float32)
+            return (dk_acc, dv_acc), None
+
+        dk0 = jnp.zeros_like(kk, jnp.float32)
+        dv0 = jnp.zeros_like(vv, jnp.float32)
+        (dk, dvv), _ = jax.lax.scan(q_step, (dk0, dv0),
+                                    (qc, doc, dlc, lsc, q_pos))
+        return dk, dvv
+
+    dks, dvs = jax.lax.map(dkv_block, (kc, vc, k_pos))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, nk * ck, kv, d)[:, :sk]
+    dvv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, nk * ck, kv, dv_dim)[:, :sk]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dvv.astype(v.dtype)
+
+
+_chunked_attention_core.defvjp(_core_fwd, _core_bwd)
+
+
+def _chunked_attention(q, k, v, *, causal, q_offset=0, window=0,
+                       chunk_q=512, chunk_k=1024):
+    """Online-softmax attention without materializing S_q x S_k.
+
+    q/k: (B, Sq|Sk, H|KV, D); v: (B, Sk, KV, Dv) — Dv may differ from D
+    (MLA).  ``q_offset`` is the absolute position of q[0] (prefill
+    chunking / decode).  ``window`` > 0 applies a sliding-window causal
+    mask.  Returns (B, Sq, H, Dv).
+
+    Differentiable via a flash-style custom VJP (_core_bwd) that
+    recomputes chunk probabilities instead of storing them — without it,
+    autodiff through the online-softmax scan keeps every (cq x ck) score
+    block alive and the train cells blow past HBM (EXPERIMENTS.md §Perf).
+    """
+    sq, sk = q.shape[1], k.shape[1]
+    cq = min(chunk_q, sq)
+    ck = min(chunk_k, sk)
+    return _chunked_attention_core(q, k, v, causal, q_offset, window, cq, ck)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (full / sliding-window / cross) + decode
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, d_model=None):
+    d_model = d_model or cfg.d_model
+    hd = cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dt = cfg.jax_dtype
+    return {
+        "wq": init_linear(kq, d_model, cfg.n_heads * hd, dt),
+        "wk": init_linear(kk, d_model, cfg.n_kv_heads * hd, dt),
+        "wv": init_linear(kv, d_model, cfg.n_kv_heads * hd, dt),
+        "wo": init_linear(ko, cfg.n_heads * hd, d_model, dt,
+                          scale=(cfg.n_heads * hd) ** -0.5),
+    }
+
+
+def attention(p, x, cfg: ModelConfig, *, positions=None, causal=True,
+              window=0, kv_x=None, use_rope=True):
+    """Self- (or cross-, via kv_x) attention over a full sequence."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    src = kv_x if kv_x is not None else x
+    sk = src.shape[1]
+    q = linear(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    k = linear(p["wk"], src).reshape(b, sk, cfg.n_kv_heads, hd)
+    v = linear(p["wv"], src).reshape(b, sk, cfg.n_kv_heads, hd)
+    if use_rope:
+        pos = positions if positions is not None else jnp.arange(s)[None, :]
+        q = rope(q, pos, cfg.rope_theta)
+        if kv_x is None:
+            k = rope(k, pos, cfg.rope_theta)
+    out = _chunked_attention(q, k, v, causal=causal and kv_x is None,
+                             window=window)
+    return linear(p["wo"], out.reshape(b, s, cfg.n_heads * hd))
+
+
+def attention_decode(p, x, cache, pos, cfg: ModelConfig, *, window=0):
+    """Single-token decode with an in-place KV cache update.
+
+    cache: dict(k=(B, S_cache, KV, D), v=...).  For sliding-window
+    attention the cache is a ring buffer of length ``window`` indexed by
+    pos % window, bounding decode memory for the long_500k cell.
+    """
+    b, s1, _ = x.shape  # s1 == 1
+    hd = cfg.head_dim
+    q = linear(p["wq"], x).reshape(b, s1, cfg.n_heads, hd)
+    k = linear(p["wk"], x).reshape(b, s1, cfg.n_kv_heads, hd)
+    v = linear(p["wv"], x).reshape(b, s1, cfg.n_kv_heads, hd)
+    posb = jnp.full((b, 1), pos)
+    q = rope(q, posb, cfg.rope_theta)
+    k = rope(k, posb, cfg.rope_theta)
+
+    s_cache = cache["k"].shape[1]
+    slot = pos % s_cache if window else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+
+    kv = cfg.n_kv_heads
+    groups = cfg.n_heads // kv
+    qg = q.reshape(b, kv, groups, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, ck) * hd ** -0.5
+    # decode scores scale with the cache length; keep them batch-sharded
+    scores = hints.constrain(scores.astype(jnp.float32),
+                             "batch", None, None, None)
+    idx = jnp.arange(s_cache)
+    if window:
+        # ring buffer holds the last min(pos+1, window) tokens; before the
+        # first wrap only slots [0, pos] are populated, afterwards all are
+        valid = jnp.where(pos + 1 >= s_cache,
+                          jnp.ones((s_cache,), bool),
+                          idx < jnp.minimum(pos + 1, s_cache))
+    else:
+        valid = idx <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, cv)
+    out = out.reshape(b, 1, cfg.n_heads * hd)
+    return linear(p["wo"], out), {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig):
+    dt = cfg.jax_dtype
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    qk_nope, qk_rope, v_hd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    h = cfg.n_heads
+    return {
+        "wq_a": init_linear(ks[0], d, cfg.q_lora_rank, dt),
+        "q_norm": init_rmsnorm(cfg.q_lora_rank, dt),
+        "wq_b": init_linear(ks[1], cfg.q_lora_rank,
+                            h * (qk_nope + qk_rope), dt),
+        "wkv_a": init_linear(ks[2], d, cfg.kv_lora_rank + qk_rope, dt),
+        "kv_norm": init_rmsnorm(cfg.kv_lora_rank, dt),
+        "wkv_b": init_linear(ks[3], cfg.kv_lora_rank,
+                             h * (qk_nope + v_hd), dt),
+        "wo": init_linear(ks[4], h * v_hd, d, dt, scale=(h * v_hd) ** -0.5),
+    }
+
+
+def mla_attention(p, x, cfg: ModelConfig, *, positions=None):
+    """Full-sequence MLA (train/prefill): expand latents, chunked attn."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rdim, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    pos = positions if positions is not None else jnp.arange(s)[None, :]
+
+    q = linear(p["wq_b"], rmsnorm(p["q_norm"], linear(p["wq_a"], x)))
+    q = q.reshape(b, s, h, nope + rdim)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, pos, cfg.rope_theta)
+
+    kv_a = linear(p["wkv_a"], x)
+    c_kv, k_rope = kv_a[..., : cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank:]
+    k_rope = rope(k_rope.reshape(b, s, 1, rdim), pos, cfg.rope_theta)
+    kv = linear(p["wkv_b"], rmsnorm(p["kv_norm"], c_kv))
+    kv = kv.reshape(b, s, h, nope + vdim)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, rdim))], axis=-1
+    )
+    out = _chunked_attention(q_full, k_full, v, causal=True)
+    return linear(p["wo"], out.reshape(b, s, h * vdim))
+
+
+def mla_decode(p, x, cache, pos, cfg: ModelConfig):
+    """Absorbed-form MLA decode: cache is the compressed latent + rope key.
+
+    cache: dict(c_kv=(B, S, kv_lora_rank), k_rope=(B, S, rope_dim)) — the
+    entire reason MLA exists: ~9x smaller KV cache than GQA-128.
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    nope, rdim, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lr = cfg.kv_lora_rank
+    posb = jnp.full((b, 1), pos)
+
+    q = linear(p["wq_b"], rmsnorm(p["q_norm"], linear(p["wq_a"], x)))
+    q = q.reshape(b, 1, h, nope + rdim)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, posb, cfg.rope_theta)[:, 0]  # (B, H, rdim)
+
+    kv_a = linear(p["wkv_a"], x)  # (B, 1, lr + rdim)
+    c_kv_new = rmsnorm(p["kv_norm"], kv_a[..., :lr])
+    k_rope_new = rope(kv_a[..., lr:].reshape(b, 1, 1, rdim), posb,
+                      cfg.rope_theta).reshape(b, 1, rdim)
+
+    c_cache = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+    r_cache = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+
+    # absorb W_uk into the query: score = q_nope W_uk . c_kv + q_rope . k_rope
+    wkv_b = p["wkv_b"]["w"].reshape(lr, h, nope + vdim)
+    w_uk = wkv_b[..., :nope]          # (lr, H, nope)
+    w_uv = wkv_b[..., nope:]          # (lr, H, vdim)
+    q_lat = jnp.einsum("bhn,lhn->bhl", q_nope[:, 0], w_uk)  # (B, H, lr)
+
+    s_cache = c_cache.shape[1]
+    scores = (
+        jnp.einsum("bhl,bsl->bhs", q_lat, c_cache)
+        + jnp.einsum("bhr,bsr->bhs", q_rope, r_cache)
+    ).astype(jnp.float32) * (nope + rdim) ** -0.5
+    valid = jnp.arange(s_cache) <= pos
+    scores = jnp.where(valid[None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(c_cache.dtype)
+    o_lat = jnp.einsum("bhs,bsl->bhl", probs, c_cache)      # (B, H, lr)
+    out = jnp.einsum("bhl,lhv->bhv", o_lat, w_uv)           # (B, H, vdim)
+    out = out.reshape(b, 1, h * vdim)
+    return linear(p["wo"], out), {"c_kv": c_cache, "k_rope": r_cache}

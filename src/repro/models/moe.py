@@ -1,0 +1,142 @@
+"""Mixture-of-experts FFN with sort-based capacity dispatch.
+
+Token-choice top-k routing (softmax over expert logits), GShard-style
+fixed capacity per expert, dispatch via argsort + scatter into an
+(E, C, d) buffer, batched expert GEMMs (``ecd,edf->ecf``), and weighted
+un-permute.  This formulation is pure XLA (no shard_map), so GSPMD can
+shard it two ways (sharding/partition.py picks per arch):
+
+  * expert-parallel:  expert dim E on the "model" mesh axis when E is
+    divisible by it (deepseek-v3: 256 experts / 16 = 16 per device);
+  * tensor-parallel:  per-expert hidden dim d_ff on "model" when E is
+    small (mixtral: 8 experts, d_ff 14336 = 16 x 896).
+
+Tokens overflowing an expert's capacity are dropped (contribute zero),
+standard GShard semantics; tests check the no-drop regime against a
+dense reference.  DeepSeek's shared experts are dense SwiGLU branches
+added unconditionally.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.sharding import hints
+
+
+def init_moe(key, cfg: ModelConfig):
+    dt = cfg.jax_dtype
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": {"w": (jax.random.normal(ks[0], (d, e)) * d**-0.5)
+                   .astype(jnp.float32)},
+        "wg": (jax.random.normal(ks[1], (e, d, f)) * d**-0.5).astype(dt),
+        "wu": (jax.random.normal(ks[2], (e, d, f)) * d**-0.5).astype(dt),
+        "wd": (jax.random.normal(ks[3], (e, f, d)) * f**-0.5).astype(dt),
+    }
+    if cfg.n_shared_experts:
+        params["shared"] = L.init_swiglu(
+            ks[4], d, cfg.moe_d_ff * cfg.n_shared_experts, dt)
+    return params
+
+
+def _dispatch_group(xg, top_p, top_e, p, cfg):
+    """Shard-local dispatch + expert GEMMs for one routing group.
+
+    xg: (Tl, d); top_p/top_e: (Tl, k).  Returns (Tl, d) fp32.
+    """
+    tl, d = xg.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(cfg.capacity_factor * tl * k / e) or 1
+
+    flat_e = top_e.reshape(-1)                          # (Tl*k,)
+    order = jnp.argsort(flat_e)                         # stable
+    sorted_e = flat_e[order]
+    # rank of each sorted slot within its expert
+    same = jnp.cumsum(jnp.ones_like(sorted_e)) - 1
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    rank = same - seg_start[sorted_e]
+    keep = rank < cap
+    dest = jnp.where(keep, sorted_e * cap + rank, e * cap)  # drop bucket
+
+    tok_idx = order // k                                 # source token
+    buf = jnp.zeros((e * cap + 1, d), cfg.jax_dtype)
+    buf = buf.at[dest].set(xg[tok_idx].astype(cfg.jax_dtype))
+    buf = buf[: e * cap].reshape(e, cap, d)
+
+    # --- expert compute: batched GEMMs ---
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    y = jnp.einsum("ecf,efd->ecd", h, p["wd"])          # (E, C, d)
+
+    # --- un-permute with routing weights ---
+    y_flat = jnp.concatenate(
+        [y.reshape(e * cap, d), jnp.zeros((1, d), y.dtype)], axis=0
+    )
+    slot_y = y_flat[jnp.where(keep, dest, e * cap)]     # (Tl*k, d)
+    w_slot = top_p.reshape(-1)[order] * keep            # dropped -> 0
+    contrib = slot_y * w_slot[:, None].astype(y.dtype)
+    return jnp.zeros((tl, d), jnp.float32).at[tok_idx].add(
+        contrib.astype(jnp.float32))
+
+
+def moe_ffn(p, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (B, S, d).
+
+    Routing is computed per *data shard group* (hints.data_shard_count):
+    a single global argsort/scatter cannot be partitioned by GSPMD and
+    replicates every dispatch buffer (122 GiB/dev on mixtral/prefill_32k
+    before this change — EXPERIMENTS.md §Perf).  With G groups vmapped
+    over the data axis, dispatch is shard-local (capacity per group) and
+    the expert GEMMs carry E over the model axis (EP) or d_ff over it
+    (TP) per the arch's divisibility.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    g = hints.data_shard_count()
+    if t % g:
+        g = 1
+    xf = x.reshape(t, d)
+
+    # --- route (always fp32: routing is precision-sensitive) ---
+    logits = (xf.astype(jnp.float32) @ p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)              # (T, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    xg = hints.constrain(xf.reshape(g, t // g, d), "batch", None, None)
+    tp = hints.constrain(top_p.reshape(g, t // g, k), "batch", None, None)
+    te = hints.constrain(top_e.reshape(g, t // g, k), "batch", None, None)
+    out = jax.vmap(lambda a, bb, c: _dispatch_group(a, bb, c, p, cfg))(
+        xg, tp, te)
+    out = hints.constrain(out, "batch", None, None).reshape(t, d)
+
+    if cfg.n_shared_experts:
+        out = out + L.swiglu(p["shared"], xf).astype(jnp.float32)
+    return out.reshape(b, s, d).astype(x.dtype)
+
+
+def moe_ffn_dense_reference(p, x, cfg: ModelConfig):
+    """Oracle: compute every expert on every token (no capacity, no drops)."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    gates = jnp.zeros_like(probs).at[
+        jnp.arange(xf.shape[0])[:, None], top_e
+    ].set(top_p)                                         # (T, E)
+
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xf, p["wg"]))
+    h = h * jnp.einsum("td,edf->tef", xf, p["wu"])
+    y = jnp.einsum("tef,efd->ted", h, p["wd"])
+    out = jnp.einsum("ted,te->td", y.astype(jnp.float32), gates)
+    if cfg.n_shared_experts:
+        out = out + L.swiglu(p["shared"], xf).astype(jnp.float32)
+    return out.reshape(b, s, d).astype(x.dtype)

@@ -1,0 +1,222 @@
+"""Mamba-2 (SSD, state-space duality) mixer — train scan + O(1) decode.
+
+Chunked SSD algorithm (arXiv:2405.21060 §6): the sequence is split into
+chunks of length L; within a chunk the recurrence is computed as a
+masked attention-like quadratic form, across chunks a (cheap) scan
+carries the (H, P, N) state.  Decode is the pure recurrence: constant
+memory and compute per token, which is what makes the long_500k cell
+feasible for the ssm/hybrid archs (DESIGN.md §long-context).
+
+The layer carries its own causal depthwise conv (width ssm_conv) over
+the x/B/C streams as in the reference implementation; its rolling state
+is part of the decode cache.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.sharding import hints
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.d_inner
+    h = cfg.ssm_nheads
+    p = cfg.ssm_headdim
+    g = cfg.ssm_ngroups
+    n = cfg.ssm_state
+    return d_in, h, p, g, n
+
+
+def init_ssm(key, cfg: ModelConfig):
+    dt = cfg.jax_dtype
+    d_in, h, p, g, n = _dims(cfg)
+    d = cfg.d_model
+    conv_dim = d_in + 2 * g * n
+    ks = jax.random.split(key, 6)
+    return {
+        # projects to [z, x, B, C, dt]
+        "in_proj": L.init_linear(
+            ks[0], d, 2 * d_in + 2 * g * n + h, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim))
+                   * cfg.ssm_conv**-0.5).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": L.init_rmsnorm(d_in, dt),
+        "out_proj": L.init_linear(ks[2], d_in, d, dt, scale=d_in**-0.5),
+    }
+
+
+def _split_proj(p, x, cfg):
+    d_in, h, _, g, n = _dims(cfg)
+    zxbcdt = L.linear(p["in_proj"], x)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : 2 * d_in + 2 * g * n]
+    dt_raw = zxbcdt[..., 2 * d_in + 2 * g * n :]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(p, xbc):
+    """Depthwise causal conv over the sequence axis.  xbc: (B, S, C)."""
+    k = p["conv_w"].shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * p["conv_w"][i]
+        for i in range(k)
+    )
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def _segsum(a):
+    """Stable lower-triangular cumulative-sum matrix of log-decays.
+
+    a: (..., L) log decay per step.  Returns (..., L, L) with
+    out[i, j] = sum_{k=j+1..i} a_k for j <= i, -inf above diagonal.
+    """
+    l = a.shape[-1]
+    cums = jnp.cumsum(a, axis=-1)
+    diff = cums[..., :, None] - cums[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x, dt, a_log, b, c, d_skip, chunk=128):
+    """Chunked SSD.  x: (B,S,H,P); dt: (B,S,H); b,c: (B,S,G,N).
+
+    Returns y: (B, S, H, P).  fp32 state math throughout.
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    reps = h // g
+    l = min(chunk, s)
+    nc = -(-s // l)
+    pad = nc * l - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    xc = x.reshape(bsz, nc, l, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, l, h).astype(jnp.float32)
+    bc = b.reshape(bsz, nc, l, g, n).astype(jnp.float32)
+    cc = c.reshape(bsz, nc, l, g, n).astype(jnp.float32)
+    # broadcast kv groups over heads
+    bh = jnp.repeat(bc, reps, axis=3)  # (B, nc, L, H, N)
+    ch = jnp.repeat(cc, reps, axis=3)
+
+    alog = dtc * a_log[None, None, None, :] * -1.0  # A negative: decay
+    # within-chunk decay matrix (B, nc, H, L, L) — the SSD memory hot
+    # spot; shard heads over the model axis (45 GiB/dev replicated
+    # otherwise, EXPERIMENTS.md §Perf)
+    seg = _segsum(alog.transpose(0, 1, 3, 2))
+    decay = hints.constrain(jnp.exp(seg), "batch", None, "model", None, None)
+
+    # intra-chunk (quadratic, attention-like)
+    scores = jnp.einsum("bclhn,bcshn->bchls", ch, bh)
+    scores = hints.constrain(scores, "batch", None, "model", None, None)
+    m = scores * decay
+    y_intra = jnp.einsum("bchls,bcsh,bcshp->bclhp", m, dtc, xc)
+    y_intra = hints.constrain(y_intra, "batch", None, None, "model", None)
+
+    # chunk-final states: (B, nc, H, N, P)
+    decay_to_end = jnp.exp(
+        jnp.cumsum(alog, axis=2)[:, :, -1:, :] - jnp.cumsum(alog, axis=2)
+    )  # (B, nc, L, H)
+    states = jnp.einsum(
+        "bclhn,bclh,bclh,bclhp->bchnp", bh, decay_to_end, dtc, xc
+    )
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(jnp.sum(alog, axis=2))  # (B, nc, H)
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp  # (B, H, N, P), (B, H)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, h_before = jax.lax.scan(
+        scan_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_before = h_before.transpose(1, 0, 2, 3, 4)  # (B, nc, H, N, P)
+
+    # inter-chunk contribution
+    decay_from_start = jnp.exp(jnp.cumsum(alog, axis=2))  # (B, nc, L, H)
+    y_inter = jnp.einsum(
+        "bclhn,bclh,bchnp->bclhp", ch, decay_from_start, h_before
+    )
+
+    y = y_intra + y_inter + xc * d_skip[None, None, None, :, None]
+    y = y.reshape(bsz, nc * l, h, p)[:, :s]
+    return y
+
+
+def ssm_forward(p, x, cfg: ModelConfig):
+    """Full-sequence Mamba-2 mixer.  x: (B, S, d_model)."""
+    d_in, h, hp, g, n = _dims(cfg)
+    z, xbc, dt_raw = _split_proj(p, x, cfg)
+    xbc = _causal_conv(p, xbc)
+    xs = xbc[..., :d_in]
+    b = xbc[..., d_in : d_in + g * n]
+    c = xbc[..., d_in + g * n :]
+    bsz, s, _ = x.shape
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a_log = jnp.exp(p["a_log"])
+    y = ssd_scan(
+        xs.reshape(bsz, s, h, hp),
+        dt,
+        a_log,
+        b.reshape(bsz, s, g, n),
+        c.reshape(bsz, s, g, n),
+        p["d_skip"],
+    )
+    y = y.reshape(bsz, s, d_in).astype(x.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return L.linear(p["out_proj"], y)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch, dtype):
+    d_in, h, p, g, n = _dims(cfg)
+    conv_dim = d_in + 2 * g * n
+    return {
+        "h": jnp.zeros((batch, h, n, p), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode(p, x, cache, cfg: ModelConfig):
+    """One-token recurrent update.  x: (B, 1, d_model)."""
+    d_in, h, hp, g, n = _dims(cfg)
+    z, xbc, dt_raw = _split_proj(p, x, cfg)
+
+    # rolling conv state
+    hist = jnp.concatenate([cache["conv"], xbc.astype(cache["conv"].dtype)],
+                           axis=1)  # (B, k, C)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = hist[:, 1:]
+
+    xs = conv_out[..., :d_in]
+    b = conv_out[..., d_in : d_in + g * n]
+    c = conv_out[..., d_in + g * n :]
+    bsz = x.shape[0]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]
+    a = jnp.exp(-jnp.exp(p["a_log"])[None, :] * dt)      # (B, H)
+    xh = xs.reshape(bsz, h, hp).astype(jnp.float32)
+    bh = jnp.repeat(b.reshape(bsz, g, n), h // g, axis=1)  # (B, H, N)
+    ch = jnp.repeat(c.reshape(bsz, g, n), h // g, axis=1)
+
+    h_new = (cache["h"] * a[..., None, None]
+             + jnp.einsum("bh,bhn,bhp->bhnp", dt, bh, xh))
+    y = jnp.einsum("bhn,bhnp->bhp", ch, h_new) + xh * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return L.linear(p["out_proj"], y), {"h": h_new, "conv": new_conv}

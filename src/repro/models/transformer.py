@@ -1,0 +1,442 @@
+"""Model assembly for all assigned architectures.
+
+One ``Model`` facade with three entry points:
+
+  * ``forward(params, batch)``            — full-sequence logits (train/prefill)
+  * ``init_cache(batch_size, max_len)``   — decode cache pytree (ShapeDtype-
+                                            compatible, so the dry-run can
+                                            build it without allocation)
+  * ``decode_step(params, cache, tok, pos)`` — one-token serve step
+
+Layer stacks are scanned (params stacked on a leading layer axis) so HLO
+size stays O(1 layer) even for deepseek's 61 layers at 512 devices —
+critical for dry-run compile times.  Heterogeneous stacks (deepseek's
+first-k-dense, the VLM's every-5th-cross-attn) are expressed as scans
+over homogeneous groups.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as SSM
+from repro.models.config import ModelConfig
+from repro.sharding import hints
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# per-layer blocks: init + forward + decode
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, kind: str):
+    dt = cfg.jax_dtype
+    ks = jax.random.split(key, 4)
+    p: dict = {"ln1": L.init_rmsnorm(cfg.d_model, dt)}
+    if kind in ("dense", "moe", "vlm_self"):
+        p["attn"] = (L.init_mla(ks[0], cfg) if cfg.use_mla
+                     else L.init_attention(ks[0], cfg))
+        p["ln2"] = L.init_rmsnorm(cfg.d_model, dt)
+        if kind == "moe":
+            p["ffn"] = M.init_moe(ks[1], cfg)
+        else:
+            p["ffn"] = L.init_swiglu(ks[1], cfg.d_model, cfg.d_ff, dt)
+    elif kind == "ssm":
+        p["mixer"] = SSM.init_ssm(ks[0], cfg)
+    elif kind == "hybrid":
+        p["attn"] = L.init_attention(ks[0], cfg)
+        p["mixer"] = SSM.init_ssm(ks[1], cfg)
+        p["attn_norm"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["mixer_norm"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["ln2"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["ffn"] = L.init_swiglu(ks[2], cfg.d_model, cfg.d_ff, dt)
+    elif kind == "cross":
+        p["attn"] = L.init_attention(ks[0], cfg)
+        p["ln2"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["ffn"] = L.init_swiglu(ks[1], cfg.d_model, cfg.d_ff, dt)
+    elif kind == "enc":
+        p["attn"] = L.init_attention(ks[0], cfg)
+        p["ln2"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["ffn"] = L.init_swiglu(ks[1], cfg.d_model, cfg.d_ff, dt)
+    elif kind == "encdec_dec":
+        p["attn"] = L.init_attention(ks[0], cfg)
+        p["xattn"] = L.init_attention(ks[1], cfg)
+        p["ln_x"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["ln2"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["ffn"] = L.init_swiglu(ks[2], cfg.d_model, cfg.d_ff, dt)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _block_forward(p, x, cfg: ModelConfig, kind: str, *, ctx=None):
+    """Full-sequence block.  ctx = encoder output / image tokens for cross."""
+    if kind in ("dense", "moe", "vlm_self"):
+        h = L.rmsnorm(p["ln1"], x)
+        if cfg.use_mla:
+            a = L.mla_attention(p["attn"], h, cfg)
+        else:
+            a = L.attention(p["attn"], h, cfg, window=cfg.sliding_window)
+        x = x + a
+        h = L.rmsnorm(p["ln2"], x)
+        f = (M.moe_ffn(p["ffn"], h, cfg) if kind == "moe"
+             else L.swiglu(p["ffn"], h))
+        return x + f
+    if kind == "ssm":
+        return x + SSM.ssm_forward(p["mixer"], L.rmsnorm(p["ln1"], x), cfg)
+    if kind == "hybrid":
+        h = L.rmsnorm(p["ln1"], x)
+        a = L.attention(p["attn"], h, cfg, window=cfg.sliding_window)
+        s = SSM.ssm_forward(p["mixer"], h, cfg)
+        mixed = 0.5 * (L.rmsnorm(p["attn_norm"], a)
+                       + L.rmsnorm(p["mixer_norm"], s))
+        x = x + mixed
+        return x + L.swiglu(p["ffn"], L.rmsnorm(p["ln2"], x))
+    if kind == "cross":
+        h = L.rmsnorm(p["ln1"], x)
+        a = L.attention(p["attn"], h, cfg, kv_x=ctx, causal=False,
+                        use_rope=False)
+        x = x + a
+        return x + L.swiglu(p["ffn"], L.rmsnorm(p["ln2"], x))
+    if kind == "enc":
+        h = L.rmsnorm(p["ln1"], x)
+        a = L.attention(p["attn"], h, cfg, causal=False, use_rope=False)
+        x = x + a
+        return x + L.swiglu(p["ffn"], L.rmsnorm(p["ln2"], x))
+    if kind == "encdec_dec":
+        h = L.rmsnorm(p["ln1"], x)
+        x = x + L.attention(p["attn"], h, cfg)
+        h = L.rmsnorm(p["ln_x"], x)
+        x = x + L.attention(p["xattn"], h, cfg, kv_x=ctx, causal=False,
+                            use_rope=False)
+        return x + L.swiglu(p["ffn"], L.rmsnorm(p["ln2"], x))
+    raise ValueError(kind)
+
+
+def _block_decode(p, x, cache, pos, cfg: ModelConfig, kind: str, *, ctx=None):
+    """One-token block step; returns (x, new_cache)."""
+    if kind in ("dense", "moe", "vlm_self"):
+        h = L.rmsnorm(p["ln1"], x)
+        if cfg.use_mla:
+            a, cache_a = L.mla_decode(p["attn"], h, cache["attn"], pos, cfg)
+        else:
+            a, cache_a = L.attention_decode(p["attn"], h, cache["attn"], pos,
+                                            cfg, window=cfg.sliding_window)
+        x = x + a
+        h = L.rmsnorm(p["ln2"], x)
+        f = (M.moe_ffn(p["ffn"], h, cfg) if kind == "moe"
+             else L.swiglu(p["ffn"], h))
+        return x + f, {"attn": cache_a}
+    if kind == "ssm":
+        y, c = SSM.ssm_decode(p["mixer"], L.rmsnorm(p["ln1"], x), cache["ssm"],
+                              cfg)
+        return x + y, {"ssm": c}
+    if kind == "hybrid":
+        h = L.rmsnorm(p["ln1"], x)
+        a, cache_a = L.attention_decode(p["attn"], h, cache["attn"], pos, cfg,
+                                        window=cfg.sliding_window)
+        s, cache_s = SSM.ssm_decode(p["mixer"], h, cache["ssm"], cfg)
+        mixed = 0.5 * (L.rmsnorm(p["attn_norm"], a)
+                       + L.rmsnorm(p["mixer_norm"], s))
+        x = x + mixed
+        x = x + L.swiglu(p["ffn"], L.rmsnorm(p["ln2"], x))
+        return x, {"attn": cache_a, "ssm": cache_s}
+    if kind == "cross":
+        h = L.rmsnorm(p["ln1"], x)
+        a = L.attention(p["attn"], h, cfg, kv_x=ctx, causal=False,
+                        use_rope=False)
+        x = x + a
+        return x + L.swiglu(p["ffn"], L.rmsnorm(p["ln2"], x)), {}
+    if kind == "encdec_dec":
+        h = L.rmsnorm(p["ln1"], x)
+        a, cache_a = L.attention_decode(p["attn"], h, cache["attn"], pos, cfg)
+        x = x + a
+        h = L.rmsnorm(p["ln_x"], x)
+        x = x + L.attention(p["xattn"], h, cfg, kv_x=ctx, causal=False,
+                            use_rope=False)
+        return x + L.swiglu(p["ffn"], L.rmsnorm(p["ln2"], x)), {"attn": cache_a}
+    raise ValueError(kind)
+
+
+def _init_block_cache(cfg: ModelConfig, kind: str, batch, max_len, dtype):
+    if kind in ("dense", "moe", "vlm_self", "encdec_dec"):
+        if cfg.use_mla:
+            attn = {
+                "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim),
+                                    dtype),
+            }
+        else:
+            s = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+            attn = {
+                "k": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
+            }
+        return {"attn": attn}
+    if kind == "ssm":
+        return {"ssm": SSM.init_ssm_cache(cfg, batch, dtype)}
+    if kind == "hybrid":
+        s = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        return {
+            "attn": {
+                "k": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
+            },
+            "ssm": SSM.init_ssm_cache(cfg, batch, dtype),
+        }
+    if kind == "cross":
+        return {}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# stacks: scan over layer groups
+# ---------------------------------------------------------------------------
+
+def _stack_init(key, cfg, kind, n):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_block(k, cfg, kind))(keys)
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _stack_forward(params, x, cfg, kind, *, ctx=None):
+    # pin the residual stream to (batch, seq)-sharding at layer
+    # boundaries: (1) the per-layer scan saves otherwise pick a
+    # batch-replicated layout that poisons the backward matmuls; (2) the
+    # seq dim over the model axis is Megatron-style sequence parallelism
+    # — layer-boundary ops are per-token, so the saves shrink by the TP
+    # width and GSPMD inserts the gathers only inside attention
+    # (EXPERIMENTS.md §Perf).
+    body = _maybe_remat(
+        lambda x_, p_: (hints.constrain(
+            _block_forward(p_, x_, cfg, kind, ctx=ctx),
+            "batch", "seq", None), None),
+        cfg)
+
+    def scan_body(x_, p_):
+        return body(x_, p_)
+
+    x, _ = jax.lax.scan(scan_body, x, params)
+    return x
+
+
+def _stack_decode(params, caches, x, pos, cfg, kind, *, ctx=None):
+    def scan_body(x_, pc):
+        p_, c_ = pc
+        x_, c_new = _block_decode(p_, x_, c_, pos, cfg, kind, ctx=ctx)
+        return x_, c_new
+
+    x, new_caches = jax.lax.scan(scan_body, x, (params, caches))
+    return x, new_caches
+
+
+def _stack_cache(cfg, kind, n, batch, max_len, dtype):
+    one = _init_block_cache(cfg, kind, batch, max_len, dtype)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy()
+                        if n else a, one)
+
+
+# ---------------------------------------------------------------------------
+# the Model facade
+# ---------------------------------------------------------------------------
+
+class Model:
+    """Architecture-dispatching model: build via ``Model(config)``."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.groups = self._layer_groups(cfg)
+
+    @staticmethod
+    def _layer_groups(cfg) -> list[tuple[str, int]]:
+        """[(block_kind, n_layers), ...] in execution order."""
+        if cfg.kind == "dense":
+            return [("dense", cfg.n_layers)]
+        if cfg.kind == "moe":
+            groups = []
+            if cfg.first_dense_layers:
+                groups.append(("dense", cfg.first_dense_layers))
+            groups.append(("moe", cfg.n_layers - cfg.first_dense_layers))
+            return groups
+        if cfg.kind == "ssm":
+            return [("ssm", cfg.n_layers)]
+        if cfg.kind == "hybrid":
+            return [("hybrid", cfg.n_layers)]
+        if cfg.kind == "vlm":
+            # pattern: (cross_attn_every - 1) self layers then 1 cross layer
+            n_groups = cfg.n_layers // cfg.cross_attn_every
+            return [("vlm_group", n_groups)]
+        if cfg.kind == "encdec":
+            return [("enc", cfg.n_encoder_layers),
+                    ("encdec_dec", cfg.n_layers)]
+        raise ValueError(cfg.kind)
+
+    # -- init ---------------------------------------------------------------
+
+    def init(self, key) -> PyTree:
+        cfg = self.cfg
+        dt = cfg.jax_dtype
+        k_embed, k_head, k_meta, *k_groups = jax.random.split(
+            key, 3 + len(self.groups))
+        params: dict = {
+            "embed": (jax.random.normal(k_embed, (cfg.vocab, cfg.d_model))
+                      * cfg.d_model**-0.5).astype(dt),
+            "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+            "lm_head": L.init_linear(k_head, cfg.d_model, cfg.vocab, dt),
+        }
+        if cfg.meta_tokens:
+            params["meta"] = (jax.random.normal(
+                k_meta, (cfg.meta_tokens, cfg.d_model)) * 0.02).astype(dt)
+        for (kind, n), kg in zip(self.groups, k_groups):
+            if kind == "vlm_group":
+                k1, k2 = jax.random.split(kg)
+                params["stack_vlm_self"] = _stack_init_nested(
+                    k1, cfg, "vlm_self", n, cfg.cross_attn_every - 1)
+                params["stack_vlm_cross"] = _stack_init(k2, cfg, "cross", n)
+            else:
+                params[f"stack_{kind}"] = _stack_init(kg, cfg, kind, n)
+        return params
+
+    # -- full-sequence forward (train / prefill) -----------------------------
+
+    def forward(self, params, tokens, *, ctx_embeds=None) -> jnp.ndarray:
+        """tokens: (B, S) int32.  ctx_embeds: stub modality context
+        (image patches / audio frames), (B, T_ctx, d_model)."""
+        cfg = self.cfg
+        x = hints.constrain(params["embed"][tokens], "batch", None, None)
+        if cfg.meta_tokens:
+            meta = jnp.broadcast_to(
+                params["meta"], (x.shape[0],) + params["meta"].shape)
+            x = jnp.concatenate([meta.astype(x.dtype), x], axis=1)
+
+        if cfg.kind == "encdec":
+            enc = ctx_embeds.astype(x.dtype)
+            enc = _stack_forward(params["stack_enc"], enc, cfg, "enc")
+            x = _stack_forward(params["stack_encdec_dec"], x, cfg,
+                               "encdec_dec", ctx=enc)
+        elif cfg.kind == "vlm":
+            x = _vlm_forward(params, x, cfg, ctx_embeds.astype(x.dtype))
+        else:
+            for kind, _ in self.groups:
+                x = _stack_forward(params[f"stack_{kind}"], x, cfg, kind)
+
+        if cfg.meta_tokens:
+            x = x[:, cfg.meta_tokens:]
+        x = L.rmsnorm(params["final_norm"], x)
+        logits = L.linear(params["lm_head"], x)
+        # the (B, S, V) logits dwarf everything else; shard V over the
+        # model axis (sharding/hints.py) before the fp32 upcast
+        logits = hints.constrain(logits, "batch", None, "model")
+        return logits.astype(jnp.float32)
+
+    # -- decode -------------------------------------------------------------
+
+    def init_cache(self, batch, max_len, dtype=None) -> PyTree:
+        cfg = self.cfg
+        dt = dtype or cfg.jax_dtype
+        caches = {}
+        for kind, n in self.groups:
+            if kind == "enc":
+                continue  # encoder is prefill-only context
+            if kind == "vlm_group":
+                caches["stack_vlm_self"] = jax.tree.map(
+                    lambda a: a,  # nested (G, K) stack
+                    _stack_cache_nested(cfg, "vlm_self", n,
+                                        cfg.cross_attn_every - 1, batch,
+                                        max_len, dt))
+            else:
+                caches[f"stack_{kind}"] = _stack_cache(cfg, kind, n, batch,
+                                                       max_len, dt)
+        return caches
+
+    def decode_step(self, params, cache, tokens, pos, *, ctx_embeds=None):
+        """tokens: (B, 1) int32; pos: scalar int32 absolute position."""
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        new_cache = {}
+        if cfg.kind == "encdec":
+            enc = ctx_embeds.astype(x.dtype)
+            enc = _stack_forward(params["stack_enc"], enc, cfg, "enc")
+            x, c = _stack_decode(params["stack_encdec_dec"],
+                                 cache["stack_encdec_dec"], x, pos, cfg,
+                                 "encdec_dec", ctx=enc)
+            new_cache["stack_encdec_dec"] = c
+        elif cfg.kind == "vlm":
+            x, c = _vlm_decode(params, cache["stack_vlm_self"], x, pos, cfg,
+                               ctx_embeds.astype(x.dtype))
+            new_cache["stack_vlm_self"] = c
+        else:
+            for kind, _ in self.groups:
+                x, c = _stack_decode(params[f"stack_{kind}"],
+                                     cache[f"stack_{kind}"], x, pos, cfg, kind)
+                new_cache[f"stack_{kind}"] = c
+        x = L.rmsnorm(params["final_norm"], x)
+        logits = hints.constrain(L.linear(params["lm_head"], x),
+                                 "batch", None, "model")
+        return logits.astype(jnp.float32), new_cache
+
+
+# ---------------------------------------------------------------------------
+# VLM pattern: scan over groups of (K self layers + 1 cross layer)
+# ---------------------------------------------------------------------------
+
+def _stack_init_nested(key, cfg, kind, n_groups, per_group):
+    keys = jax.random.split(key, n_groups * per_group).reshape(
+        n_groups, per_group, 2)
+    return jax.vmap(jax.vmap(lambda k: _init_block(k, cfg, kind)))(keys)
+
+
+def _stack_cache_nested(cfg, kind, n_groups, per_group, batch, max_len, dt):
+    one = _init_block_cache(cfg, kind, batch, max_len, dt)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_groups, per_group) + a.shape).copy(),
+        one)
+
+
+def _vlm_forward(params, x, cfg, img):
+    self_p = params["stack_vlm_self"]
+    cross_p = params["stack_vlm_cross"]
+    body_self = _maybe_remat(
+        lambda x_, p_: (_block_forward(p_, x_, cfg, "vlm_self"), None), cfg)
+    body_cross = _maybe_remat(
+        lambda x_, p_: (_block_forward(p_, x_, cfg, "cross", ctx=img), None),
+        cfg)
+
+    def group(x_, ps):
+        sp, cp = ps
+        x_, _ = jax.lax.scan(lambda xx, pp: body_self(xx, pp), x_, sp)
+        x_, _ = body_cross(x_, cp)
+        return x_, None
+
+    x, _ = jax.lax.scan(group, x, (self_p, cross_p))
+    return x
+
+
+def _vlm_decode(params, cache, x, pos, cfg, img):
+    self_p = params["stack_vlm_self"]
+    cross_p = params["stack_vlm_cross"]
+
+    def group(x_, pcs):
+        sp, cp, cc = pcs
+
+        def inner(xx, pc):
+            p_, c_ = pc
+            xx, c_new = _block_decode(p_, xx, c_, pos, cfg, "vlm_self")
+            return xx, c_new
+
+        x_, c_new = jax.lax.scan(inner, x_, (sp, cc))
+        x_, _ = _block_decode(cp, x_, {}, pos, cfg, "cross", ctx=img)
+        return x_, c_new
+
+    x, new_cache = jax.lax.scan(group, x, (self_p, cross_p, cache))
+    return x, new_cache

@@ -1,0 +1,4 @@
+from repro.optim.adamw import adamw, apply_updates, global_norm  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    compressed_psum, dequantize_int8, quantize_int8,
+)

@@ -1,0 +1,81 @@
+"""Minimal functional AdamW with global-norm clipping (optax-style API).
+
+Optimizer moments are fp32 regardless of param dtype; state inherits the
+param sharding (sharding/partition.py), so under the fsdp axis the
+12 bytes/param of Adam state spread over the full mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Any
+    update: Any
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: float = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        if clip_norm:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * g * g
+            mhat = m_new / (1 - b1 ** step.astype(jnp.float32))
+            vhat = v_new / (1 - b2 ** step.astype(jnp.float32))
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), m_new, v_new
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_v = tdef.flatten_up_to(state.nu)
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = tdef.unflatten([o[0] for o in out])
+        mu = tdef.unflatten([o[1] for o in out])
+        nu = tdef.unflatten([o[2] for o in out])
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,3 @@
+from repro.sharding.partition import (  # noqa: F401
+    batch_specs, cache_specs_tree, param_partition_specs, to_shardings,
+)

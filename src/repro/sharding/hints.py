@@ -1,0 +1,75 @@
+"""Activation-sharding hints for model code.
+
+Model code calls ``constrain(x, *dims)`` with *logical* dims ("batch",
+"model", "seq", None).  When a launcher has activated hints (dry-run,
+train, serve), these lower to ``with_sharding_constraint``; in
+single-device smoke tests they are no-ops.  This is how the big
+intermediates (fp32 logits above all) get their model-axis sharding
+instead of relying on GSPMD propagation, which replicates them.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACTIVE: dict = {"batch": None, "model": None, "ep": False, "dp": 1}
+_ENABLED = False
+
+
+@contextlib.contextmanager
+def activation_hints(batch_axes, model_axis, *, expert_parallel=False,
+                     n_data_shards=1):
+    """Enable logical->mesh-axis resolution inside this context.
+
+    ``expert_parallel`` switches the MoE logical dims: with EP, "expert"
+    maps to the model axis and "ffn" is unsharded; without EP (expert
+    count < axis size, e.g. mixtral-8x7b) experts replicate and the
+    per-expert FFN dim carries the model axis.  ``n_data_shards`` tells
+    the MoE dispatch how many shard-local routing groups to use — a
+    global argsort/scatter cannot be partitioned by GSPMD and replicates
+    the dispatch buffers.
+    """
+    global _ENABLED, _ACTIVE
+    prev = (_ENABLED, dict(_ACTIVE))
+    _ENABLED = True
+    _ACTIVE = {"batch": batch_axes, "model": model_axis,
+               "ep": expert_parallel, "dp": max(int(n_data_shards), 1)}
+    try:
+        yield
+    finally:
+        _ENABLED, _ACTIVE = prev[0], prev[1]
+
+
+def data_shard_count() -> int:
+    return _ACTIVE["dp"] if _ENABLED else 1
+
+
+def resolve(*dims) -> Optional[P]:
+    if not _ENABLED:
+        return None
+    out = []
+    for d in dims:
+        if d is None:
+            out.append(None)
+        elif d == "batch":
+            out.append(_ACTIVE["batch"])
+        elif d in ("model", "seq"):  # "seq" = sequence parallelism on model
+            out.append(_ACTIVE["model"])
+        elif d == "expert":
+            out.append(_ACTIVE["model"] if _ACTIVE["ep"] else None)
+        elif d == "ffn":
+            out.append(None if _ACTIVE["ep"] else _ACTIVE["model"])
+        else:
+            raise ValueError(f"unknown logical dim {d}")
+    return P(*out)
+
+
+def constrain(x, *dims):
+    spec = resolve(*dims)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,188 @@
+"""Parameter / activation partition rules (DP + FSDP + TP + EP).
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  Conventions (MaxText-style):
+
+  * batch axes   = ("pod", "data")    — DP over pods and the data axis;
+  * fsdp axes    = batch axes         — in train mode, every weight
+    matrix additionally shards its non-TP dim over the DP axes (ZeRO-3):
+    671B-param deepseek does not fit 512 x 16 GB any other way.  GSPMD
+    all-gathers one scanned layer at a time inside the loop body;
+  * "model" axis = TP: head dims / FFN hidden / MoE experts.
+
+Expert placement: experts shard on "model" when E is divisible by the
+axis size (deepseek 256/16), otherwise the per-expert FFN dim shards
+(mixtral 8 experts -> TP within experts).  Uneven head counts (phi3: 40
+heads on 16-way TP) are allowed — GSPMD pads; see DESIGN.md.
+
+Rules are keyed on the parameter's path, matching on the *trailing*
+dimensions so the same rule serves plain stacks (L, ...), nested VLM
+stacks (G, K, ...) and unstacked leaves.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+def _axes(mesh: Mesh):
+    names = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in names)
+    model_axis = "model" if "model" in names else None
+    return batch_axes, model_axis
+
+
+def _pad_leading(spec_tail: tuple, ndim: int) -> P:
+    """Left-pad a trailing-dims spec with None for stack dims."""
+    pad = (None,) * (ndim - len(spec_tail))
+    return P(*(pad + spec_tail))
+
+
+def _enforce_divisible(spec: P, shape: tuple, axis_sizes: dict) -> P:
+    """Explicit in_shardings (unlike constraints) require every sharded
+    dim to divide evenly; drop the sharding of dims that don't (e.g.
+    odd vocab sizes 50280/32001/51865, kv_heads=8 on a 16-way axis)."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for a in axes:
+            prod *= axis_sizes.get(a, 1)
+        out.append(entry if dim % prod == 0 else None)
+    return P(*out)
+
+
+def _rule(path: str, shape: tuple, cfg: ModelConfig, batch_axes, model_axis,
+          fsdp: bool, axis_sizes: dict):
+    """Return the trailing-dims partition spec for one parameter."""
+    f = batch_axes if (fsdp and batch_axes) else None
+    m = model_axis
+    nd = len(shape)
+
+    # Embedding tables: vocab over the model axis ONLY, d_model dim
+    # replicated.  Measured alternatives (EXPERIMENTS.md §Perf): fsdp on
+    # the d_model (contraction) dim makes GSPMD replicate the (B,S,V)
+    # activations (131 GiB/dev); vocab over (data x model) conflicts with
+    # the batch's data sharding and replicates the lm_head input
+    # (8 GiB/dev).  Model-only vocab sharding makes the logits matmul
+    # communication-free: (B/dp, S, D) @ (D, V/tp) -> (B/dp, S, V/tp).
+    if path.endswith("embed"):
+        return P(m, None)
+    if "lm_head" in path:
+        return P(None, m)
+    if path.endswith(("scale", "a_log", "dt_bias", "d_skip", "conv_b",
+                      "meta")):
+        return P(*((None,) * nd))
+    if "conv_w" in path:
+        return _pad_leading((None, None), nd)
+    if "router" in path:
+        return _pad_leading((f, None), nd)
+
+    # MoE expert tensors: trailing (E, D, F) or (E, F, D)
+    if any(s in path for s in ("ffn", "shared")) and nd >= 3 and \
+            shape[-3] == cfg.n_experts and cfg.n_experts > 0:
+        ep = (m is not None and cfg.n_experts % axis_sizes.get(m, 1) == 0)
+        if "wd" in path:
+            return _pad_leading((m, None, f) if ep else (None, m, f), nd)
+        return _pad_leading((m, f, None) if ep else (None, f, m), nd)
+
+    # column-parallel (input-dim fsdp, output-dim TP)
+    if any(s in path for s in ("wq", "wk", "wv", "wg", "wu", "in_proj",
+                               "wq_b", "wkv_b", "wq_a")):
+        return _pad_leading((f, m), nd)
+    # kv_a latent projection: small odd output dim — replicate outputs
+    if "wkv_a" in path:
+        return _pad_leading((f, None), nd)
+    # row-parallel (input-dim TP, output-dim fsdp)
+    if any(s in path for s in ("wo", "wd", "out_proj")):
+        return _pad_leading((m, f), nd)
+    # fallback: shard nothing
+    return P(*((None,) * nd))
+
+
+def param_partition_specs(param_shapes: PyTree, cfg: ModelConfig, mesh: Mesh,
+                          *, fsdp: bool = True) -> PyTree:
+    """PartitionSpec pytree matching ``param_shapes`` (ShapeDtypeStructs)."""
+    batch_axes, model_axis = _axes(mesh)
+    axis_sizes = dict(mesh.shape)
+
+    def one(path_tuple, leaf):
+        path = "/".join(str(getattr(k, "key", k)) for k in path_tuple)
+        spec = _rule(path, leaf.shape, cfg, batch_axes, model_axis, fsdp,
+                     axis_sizes)
+        return _enforce_divisible(spec, leaf.shape, axis_sizes)
+
+    return jax.tree_util.tree_map_with_path(one, param_shapes)
+
+
+def batch_specs(batch_tree: PyTree, mesh: Mesh) -> PyTree:
+    """Shard the global batch dim over the DP axes; everything else replicated."""
+    batch_axes, _ = _axes(mesh)
+    ba = batch_axes if batch_axes else None
+    axis_sizes = dict(mesh.shape)
+
+    def one(path_tuple, leaf):
+        name = str(getattr(path_tuple[-1], "key", path_tuple[-1]))
+        if name == "pos" or leaf.ndim == 0:
+            return P()
+        spec = P(*((ba,) + (None,) * (leaf.ndim - 1)))
+        return _enforce_divisible(spec, leaf.shape, axis_sizes)
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def cache_specs_tree(cache_shapes: PyTree, cfg: ModelConfig, mesh: Mesh,
+                     *, seq_shard: bool = False) -> PyTree:
+    """Decode caches: (L, B, ...) -> batch dim over DP axes, head/latent
+    dims over the model axis where aligned.
+
+    ``seq_shard=True`` shards the cache *length* dim over the model axis
+    instead (flash-decoding style context parallelism): archs whose
+    kv_heads don't divide the TP width (8 kv on 16-way) otherwise
+    replicate the entire cache across the model axis — the dominant
+    decode memory + collective cost (EXPERIMENTS.md §Perf hillclimb).
+    """
+    batch_axes, m = _axes(mesh)
+    ba = batch_axes if batch_axes else None
+    axis_sizes = dict(mesh.shape)
+    s_ax, kv_ax = (m, None) if seq_shard else (None, m)
+
+    def one(path_tuple, leaf):
+        path = "/".join(str(getattr(k, "key", k)) for k in path_tuple)
+        nd = leaf.ndim
+        if path.endswith(("/k", "/v")):        # (L, B, S, KV, hd)
+            spec = _pad_leading((ba, s_ax, kv_ax, None), nd)
+        elif "c_kv" in path or "k_rope" in path:  # (L, B, S, lora)
+            spec = _pad_leading((ba, s_ax, None), nd)
+        elif path.endswith("/h"):               # (L, B, H, N, P)
+            spec = _pad_leading((ba, m, None, None), nd)
+        elif path.endswith("/conv"):            # (L, B, k, conv_dim)
+            spec = _pad_leading((ba, None, None), nd)
+        else:
+            spec = P(*((None,) * nd))
+        return _enforce_divisible(spec, leaf.shape, axis_sizes)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def to_shardings(spec_tree: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs_like(param_specs: PyTree, opt_state_shapes) -> PyTree:
+    """AdamW state: moments inherit param specs; step replicated."""
+    from repro.optim.adamw import AdamWState
+
+    return AdamWState(step=P(), mu=param_specs, nu=param_specs)

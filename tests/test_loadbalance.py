@@ -1,0 +1,128 @@
+"""Tests for the device-level load-balancing strategies (paper Fig. 3b)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import loadbalance as LB
+
+
+def _paper_devices():
+    """Device models with the overheads reported in the paper:
+    1080Ti/980Ti/R9 Nano/RX480 with T0 = 53/63/631/652 ms and throughput
+    ratios chosen to match their reported relative speeds."""
+    return [
+        LB.DeviceModel("1080Ti", a=4.4e-8, t0=0.053, cores=3584),
+        LB.DeviceModel("980Ti", a=8.0e-8, t0=0.063, cores=2816),
+        LB.DeviceModel("R9Nano", a=6.0e-8, t0=0.631, cores=4096),
+        LB.DeviceModel("RX480", a=1.1e-7, t0=0.652, cores=2304),
+    ]
+
+
+def test_fit_pilot_two_points_exact():
+    m = LB.fit_pilot([1e6, 5e6], [0.097, 0.273], name="x")
+    np.testing.assert_allclose(m.a, (0.273 - 0.097) / 4e6)
+    np.testing.assert_allclose(m.t0, 0.097 - m.a * 1e6)
+    assert m.predict(0) == 0.0
+    np.testing.assert_allclose(m.predict(1e6), 0.097)
+
+
+def test_fit_pilot_lstsq():
+    a_true, t0_true = 5e-8, 0.1
+    ns = [1e6, 2e6, 5e6, 8e6]
+    ts = [a_true * n + t0_true for n in ns]
+    m = LB.fit_pilot(ns, ts)
+    np.testing.assert_allclose(m.a, a_true, rtol=1e-6)
+    np.testing.assert_allclose(m.t0, t0_true, rtol=1e-5)
+
+
+def test_partitions_sum_and_sign():
+    devs = _paper_devices()
+    for strat in ("S1", "S2", "S3"):
+        part = LB.PARTITIONERS[strat](10**8, devs)
+        assert sum(part) == 10**8
+        assert all(p >= 0 for p in part)
+
+
+def test_s2_matches_throughput_ratios():
+    devs = _paper_devices()
+    part = LB.partition_s2(10**8, devs)
+    tps = np.asarray([d.throughput for d in devs])
+    expect = tps / tps.sum()
+    got = np.asarray(part) / 1e8
+    np.testing.assert_allclose(got, expect, rtol=1e-6)
+
+
+def test_s3_beats_or_ties_s1_s2_makespan():
+    """The paper's core claim: S2/S3 beat S1 by ~10-14%; S3 is optimal."""
+    devs = _paper_devices()
+    n = 10**8
+    ms = {s: LB.makespan(LB.PARTITIONERS[s](n, devs), devs)
+          for s in ("S1", "S2", "S3")}
+    assert ms["S3"] <= ms["S1"] * (1 + 1e-9)
+    assert ms["S3"] <= ms["S2"] * (1 + 1e-9)
+    # S1 (core-count) should be measurably worse on this device mix
+    assert ms["S3"] < ms["S1"] * 0.95
+
+
+def test_s3_accounts_for_overhead_small_budget():
+    """With a tiny budget, S3 should starve high-overhead devices."""
+    devs = [
+        LB.DeviceModel("fast_low_t0", a=1e-6, t0=0.0),
+        LB.DeviceModel("fast_high_t0", a=1e-6, t0=10.0),
+    ]
+    part = LB.partition_s3(1000, devs)
+    assert part[0] == 1000 and part[1] == 0
+    # S2 ignores overhead and splits evenly — S3 must be better here
+    s2 = LB.partition_s2(1000, devs)
+    assert LB.makespan(part, devs) < LB.makespan(s2, devs)
+
+
+def test_ideal_makespan_lower_bound():
+    devs = _paper_devices()
+    n = 10**8
+    ideal = LB.ideal_makespan(n, devs)
+    for s in ("S1", "S2", "S3"):
+        assert LB.makespan(LB.PARTITIONERS[s](n, devs), devs) >= ideal
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n=st.integers(0, 10**7),
+    seed=st.integers(0, 2**31),
+    k=st.integers(2, 6),
+)
+def test_property_partitions_valid(n, seed, k):
+    rng = np.random.default_rng(seed)
+    devs = [
+        LB.DeviceModel(
+            f"d{i}",
+            a=float(10 ** rng.uniform(-8, -5)),
+            t0=float(rng.uniform(0, 2.0)),
+            cores=int(rng.integers(1, 8192)),
+        )
+        for i in range(k)
+    ]
+    for strat in ("S1", "S2", "S3"):
+        part = LB.PARTITIONERS[strat](n, devs)
+        assert sum(part) == n
+        assert all(p >= 0 for p in part)
+    # minimax optimality within integer rounding slack
+    s3 = LB.PARTITIONERS["S3"](n, devs)
+    for other in ("S1", "S2"):
+        po = LB.PARTITIONERS[other](n, devs)
+        slack = max(d.a for d in devs) * k  # rounding slack
+        assert LB.makespan(s3, devs) <= LB.makespan(po, devs) + slack
+
+
+def test_run_pilot_with_synthetic_clock():
+    calls = []
+
+    def fake_run(n):
+        calls.append(n)
+        return 3e-8 * n + 0.4
+
+    m = LB.run_pilot(fake_run, 10**6, 5 * 10**6, name="sim")
+    np.testing.assert_allclose(m.a, 3e-8, rtol=1e-9)
+    np.testing.assert_allclose(m.t0, 0.4, rtol=1e-9)
+    assert calls == [10**6, 5 * 10**6]

@@ -1,0 +1,116 @@
+"""Multi-device distribution tests.
+
+These run in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
+(the flag must be set before jax initializes, and the main test process
+must keep seeing exactly 1 device, per the dry-run isolation rule).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ENV = dict(os.environ)
+_ENV["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+_ENV["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(script: str) -> str:
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        env=_ENV,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    return proc.stdout
+
+
+_PRELUDE = """
+import jax, numpy as np, jax.numpy as jnp
+from repro.core import volume as V, simulator as S, analysis as A
+from repro.core.multidevice import (simulate_sharded, ChunkScheduler,
+                                    ElasticSimulator)
+vol = V.benchmark_b1((30, 30, 30)); cfg = V.b1_config()
+ref = S.simulate(vol, cfg, 6000, 2048, 5)
+"""
+
+
+def test_sharded_equals_single_device():
+    out = _run(_PRELUDE + """
+mesh = jax.make_mesh((8,), ("data",))
+res = simulate_sharded(vol, cfg, 6000, mesh, n_lanes=256, seed=5)
+assert int(res.n_launched) == 6000
+bal = A.energy_balance(res)
+assert abs(bal["residue_frac"]) < 1e-4, bal
+diff = np.abs(np.asarray(res.energy) - np.asarray(ref.energy)).max()
+rel = diff / np.asarray(ref.energy).max()
+assert rel < 1e-3, (diff, rel)
+print("OK", rel)
+""")
+    assert "OK" in out
+
+
+def test_sharded_uneven_partition():
+    out = _run(_PRELUDE + """
+mesh = jax.make_mesh((8,), ("data",))
+part = [1500, 1500, 750, 750, 375, 375, 375, 375]
+res = simulate_sharded(vol, cfg, 6000, mesh, partition=part, n_lanes=256, seed=5)
+diff = np.abs(np.asarray(res.energy) - np.asarray(ref.energy)).max()
+rel = diff / np.asarray(ref.energy).max()
+assert rel < 1e-3, rel
+print("OK", rel)
+""")
+    assert "OK" in out
+
+
+def test_multipod_axes_lower_and_run():
+    """2x4 mesh with ('pod', 'data') axes — the multi-pod photon sharding."""
+    out = _run(_PRELUDE + """
+mesh = jax.make_mesh((2, 4), ("pod", "data"))
+res = simulate_sharded(vol, cfg, 6000, mesh, axis_names=("pod", "data"),
+                       n_lanes=256, seed=5)
+assert int(res.n_launched) == 6000
+diff = np.abs(np.asarray(res.energy) - np.asarray(ref.energy)).max()
+rel = diff / np.asarray(ref.energy).max()
+assert rel < 1e-3, rel
+print("OK", rel)
+""")
+    assert "OK" in out
+
+
+def test_chunk_scheduler_covers_and_matches():
+    out = _run(_PRELUDE + """
+sched = ChunkScheduler(vol, cfg, n_lanes=256)
+tot, stats = sched.run(6000, 400, seed=5)
+assert int(tot.n_launched) == 6000
+assert sum(stats.values()) == 6000
+assert len([d for d, n in stats.items() if n > 0]) >= 2  # used >1 device
+diff = np.abs(np.asarray(tot.energy) - np.asarray(ref.energy)).max()
+rel = diff / np.asarray(ref.energy).max()
+assert rel < 1e-3, rel
+print("OK", stats)
+""")
+    assert "OK" in out
+
+
+def test_elastic_failure_and_restart_deterministic():
+    out = _run(_PRELUDE + """
+es = ElasticSimulator(vol, cfg, 6000, 400, n_lanes=256, seed=5)
+killed = [True]
+es.run_round(fail=lambda ch, dev: ch.start_id == 0 and killed
+             and (killed.pop(), True)[1])
+state = es.state_dict()
+# restart from checkpoint in a fresh instance (simulates process loss)
+es2 = ElasticSimulator(vol, cfg, 6000, 400, n_lanes=256, seed=5)
+es2.load_state_dict(state)
+res = es2.run_to_completion()
+assert int(res.n_launched) == 6000
+diff = np.abs(np.asarray(res.energy) - np.asarray(ref.energy)).max()
+rel = diff / np.asarray(ref.energy).max()
+assert rel < 1e-3, rel
+print("OK", rel)
+""")
+    assert "OK" in out
