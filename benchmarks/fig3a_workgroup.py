@@ -15,7 +15,7 @@ import jax
 
 from benchmarks.common import get_bench, time_sim
 from repro.core import simulator as S
-from repro.core.volume import SimConfig, Source
+from repro.core.volume import SimConfig
 
 
 def run(n_photons=30_000, lanes=4096, size=40, quick=False):
@@ -27,8 +27,7 @@ def run(n_photons=30_000, lanes=4096, size=40, quick=False):
     for mode in ("static", "dynamic"):
         t = time_sim(vol, cfg, n_photons, lanes, mode=mode)
         fn = S.make_simulator(vol, cfg, lanes, mode)
-        res = fn(vol.labels.reshape(-1), vol.media, Source().pos_array(),
-                 Source().dir_array(), n_photons, 11)
+        res = fn(vol.labels.reshape(-1), vol.media, n_photons, 11)
         jax.block_until_ready(res)
         out[mode] = {
             "photons_per_ms": n_photons / t / 1e3,

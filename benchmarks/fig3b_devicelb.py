@@ -17,7 +17,7 @@ import json
 from benchmarks.common import get_bench
 from repro.core import loadbalance as LB
 from repro.core import simulator as S
-from repro.core.volume import SimConfig, Source
+from repro.core.volume import SimConfig
 
 
 PAPER_DEVICES = [
@@ -50,8 +50,7 @@ def run(quick=False):
     import jax
 
     def run_n(k):
-        args = (vol.labels.reshape(-1), vol.media, Source().pos_array(),
-                Source().dir_array(), k, 11)
+        args = (vol.labels.reshape(-1), vol.media, k, 11)
         jax.block_until_ready(fn(*args))  # includes compile on first call
         t0 = _t.perf_counter()
         jax.block_until_ready(fn(*args))

@@ -60,7 +60,6 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 sh = NamedSharding(mesh, P("data")); rep = NamedSharding(mesh, P())
 lo = fn.lower(jax.device_put(vol.labels.reshape(-1), rep),
               jax.device_put(vol.media, rep),
-              jax.device_put(jnp.zeros(3), rep), jax.device_put(jnp.asarray([0.,0.,1.]), rep),
               jax.device_put(jnp.full((8,), 32, jnp.int32), sh),
               jax.device_put(jnp.arange(8, dtype=jnp.int32)*32, sh),
               jnp.uint32(1))

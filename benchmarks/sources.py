@@ -1,0 +1,51 @@
+"""Per-source-type throughput sweep (regeneration-mode launch cost).
+
+Every dead lane re-samples its source each lock-step iteration
+(simulator regeneration), so launch cost rides the hot loop: a source
+drawing more launch uniforms or touching a pattern table pays per
+regeneration, not per run.  This sweep measures photons/ms per source
+type against the pencil baseline, in both workload modes.
+
+  PYTHONPATH=src python -m benchmarks.sources [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.common import get_bench, time_sim
+from repro import sources as SRC
+from repro.core.volume import SimConfig
+
+
+def run(n_photons=30_000, lanes=4096, size=40, quick=False,
+        modes=("dynamic", "static")):
+    if quick:
+        n_photons, size, lanes = 10_000, 30, 2048
+    vol, phys = get_bench("B1", size)
+    cfg = SimConfig(do_reflect=phys["do_reflect"])
+    out = {}
+    for mode in modes:
+        per_source = {}
+        for name, src in SRC.demo_menu(size).items():
+            t = time_sim(vol, cfg, n_photons, lanes, mode=mode, source=src)
+            per_source[name] = n_photons / t / 1e3
+            print(f"[sources] {mode:7s} {name:18s} "
+                  f"{per_source[name]:8.2f} photons/ms", flush=True)
+        base = per_source["pencil"]
+        out[mode] = {
+            "photons_per_ms": per_source,
+            "relative_to_pencil": {k: v / base for k, v in per_source.items()},
+        }
+        worst = min(out[mode]["relative_to_pencil"].values())
+        print(f"[sources] {mode}: worst source at {worst * 100:.0f}% of "
+              f"pencil throughput", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print(json.dumps(run(quick=args.quick), indent=2))

@@ -25,12 +25,10 @@ N = 40_000
 
 # --- pilot fit on the real simulator (the paper's two-run protocol) ---
 fn = S.make_simulator(vol, cfg, 2048)
-src = V.Source()
 
 
 def run_n(k):
-    args = (vol.labels.reshape(-1), vol.media, src.pos_array(),
-            src.dir_array(), k, 7)
+    args = (vol.labels.reshape(-1), vol.media, k, 7)
     jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     jax.block_until_ready(fn(*args))

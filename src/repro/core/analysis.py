@@ -20,11 +20,16 @@ from repro.core.volume import Volume
 
 
 def fluence_cw(result: SimResult, volume: Volume) -> jnp.ndarray:
-    """CW fluence (1/mm^2 per launched photon) from deposited energy."""
+    """CW fluence (1/mm^2 per unit launched weight) from deposited energy.
+
+    Normalizes by ``launched_w`` rather than the photon count so weighted
+    launches (e.g. Planar pattern sources, w0 != 1) stay correctly scaled;
+    the two coincide for unit-weight sources.
+    """
     labels = volume.labels.astype(jnp.int32)
     mua = volume.media[:, 0][labels]  # (nx, ny, nz), 1/mm
     vvox = volume.unitinmm**3
-    denom = jnp.maximum(mua * vvox * result.n_launched.astype(jnp.float32), 1e-20)
+    denom = jnp.maximum(mua * vvox * result.launched_w, 1e-20)
     return jnp.where(mua > 0, result.energy / denom, 0.0)
 
 
@@ -36,7 +41,7 @@ def energy_balance(result: SimResult) -> dict[str, float]:
     """
     absorbed = float(jnp.sum(result.energy))
     escaped = float(result.escaped_w)
-    launched = float(result.n_launched)
+    launched = float(result.launched_w)
     return {
         "launched": launched,
         "absorbed": absorbed,

@@ -22,6 +22,7 @@ onto JAX-native constructs:
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from functools import partial
 from typing import Callable, Sequence
@@ -34,6 +35,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.loadbalance import DeviceModel, partition_s2
 from repro.core.simulator import SimResult, build_sim_fn
 from repro.core.volume import SimConfig, Source, Volume
+from repro.sources import PhotonSource, as_source
+
+# jax >= 0.6 exposes shard_map at the top level (vma type check); older
+# releases keep it in jax.experimental (replication rule check).  Either
+# check must be off: the while_loop carry mixes shard-varying (photon
+# counts) and replicated (volume) values.
+if hasattr(jax, "shard_map"):
+    _shard_map = partial(jax.shard_map, check_vma=False)
+else:  # pragma: no cover - exercised on jax < 0.6 only
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    _shard_map = partial(_exp_shard_map, check_rep=False)
 
 
 # ---------------------------------------------------------------------------
@@ -42,44 +55,44 @@ from repro.core.volume import SimConfig, Source, Volume
 
 def sharded_sim_fn(volume: Volume, cfg: SimConfig, n_lanes: int,
                    mesh: Mesh, axis_names: tuple[str, ...] = ("data",),
-                   mode: str = "dynamic"):
+                   mode: str = "dynamic",
+                   source: PhotonSource | Source | None = None):
     """Build a shard_map'd simulator over ``axis_names`` of ``mesh``.
 
     The returned fn takes per-device photon counts/offsets (one entry per
     device on the sharded axes) and returns a globally-reduced SimResult.
-    Volume data and source are replicated; the fluence volume is psum'd.
+    Volume data is replicated and the source is baked in statically; the
+    fluence volume is psum'd.
     """
-    raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes, mode)
+    raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes, mode,
+                       source)
     ax = axis_names
 
-    def worker(labels_flat, media, source_pos, source_dir, counts, offsets,
-               seed):
-        res = raw(labels_flat, media, source_pos, source_dir,
-                  counts[0], seed, offsets[0])
+    def worker(labels_flat, media, counts, offsets, seed):
+        res = raw(labels_flat, media, counts[0], seed, offsets[0])
         energy = res.energy
         exitance = res.exitance
         escaped = res.escaped_w
         launched = res.n_launched
+        launched_w = res.launched_w
         for a in ax:
             energy = jax.lax.psum(energy, a)
             exitance = jax.lax.psum(exitance, a)
             escaped = jax.lax.psum(escaped, a)
             launched = jax.lax.psum(launched, a)
+            launched_w = jax.lax.psum(launched_w, a)
         # steps stays per-shard (rank-1 so it can concatenate over the mesh)
         return SimResult(energy=energy, exitance=exitance, escaped_w=escaped,
-                         n_launched=launched, steps=res.steps[None])
+                         n_launched=launched, launched_w=launched_w,
+                         steps=res.steps[None])
 
     pspec = P(ax)  # counts/offsets sharded across the photon axes
-    mapped = jax.shard_map(
+    mapped = _shard_map(
         worker,
         mesh=mesh,
-        in_specs=(P(), P(), P(), P(), pspec, pspec, P()),
+        in_specs=(P(), P(), pspec, pspec, P()),
         out_specs=SimResult(energy=P(), exitance=P(), escaped_w=P(),
-                            n_launched=P(), steps=P(ax)),
-        # the while_loop carry mixes shard-varying (photon counts) and
-        # replicated (volume) values; disable the vma type check rather
-        # than pcast every carry leaf
-        check_vma=False,
+                            n_launched=P(), launched_w=P(), steps=P(ax)),
     )
     return jax.jit(mapped)
 
@@ -88,10 +101,9 @@ def simulate_sharded(volume: Volume, cfg: SimConfig, n_photons: int,
                      mesh: Mesh, axis_names: tuple[str, ...] = ("data",),
                      partition: Sequence[int] | None = None,
                      n_lanes: int = 1024, seed: int = 1234,
-                     source: Source | None = None,
+                     source: PhotonSource | Source | None = None,
                      mode: str = "dynamic") -> SimResult:
     """Run one distributed simulation over the mesh's photon axes."""
-    source = source or Source()
     n_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
     if partition is None:
         base = n_photons // n_shards
@@ -104,7 +116,7 @@ def simulate_sharded(volume: Volume, cfg: SimConfig, n_photons: int,
                              "sum to n_photons")
     offsets = np.concatenate([[0], np.cumsum(counts)[:-1]]).astype(np.int32)
 
-    fn = sharded_sim_fn(volume, cfg, n_lanes, mesh, axis_names, mode)
+    fn = sharded_sim_fn(volume, cfg, n_lanes, mesh, axis_names, mode, source)
     shard_sharding = NamedSharding(mesh, P(axis_names))
     repl = NamedSharding(mesh, P())
     dev_counts = jax.device_put(jnp.asarray(counts), shard_sharding)
@@ -112,8 +124,6 @@ def simulate_sharded(volume: Volume, cfg: SimConfig, n_photons: int,
     return fn(
         jax.device_put(volume.labels.reshape(-1), repl),
         jax.device_put(volume.media, repl),
-        jax.device_put(source.pos_array(), repl),
-        jax.device_put(source.dir_array(), repl),
         dev_counts,
         dev_offsets,
         jnp.uint32(seed),
@@ -143,35 +153,46 @@ class ChunkScheduler:
 
     def __init__(self, volume: Volume, cfg: SimConfig, n_lanes: int = 1024,
                  devices: Sequence[jax.Device] | None = None,
-                 mode: str = "dynamic"):
+                 mode: str = "dynamic",
+                 source: PhotonSource | Source | None = None):
         self.volume = volume
         self.cfg = cfg
         self.devices = list(devices or jax.devices())
-        raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes, mode)
-        # one jitted fn; placement follows the device_put of the inputs
-        self._fn = jax.jit(raw)
+        self._n_lanes = n_lanes
+        self._mode = mode
+        self._default_source = as_source(source)
+        # one jitted fn per source (sources are frozen/hashable);
+        # placement follows the device_put of the inputs
+        self._fns: dict[PhotonSource, Callable] = {}
         self._labels = volume.labels.reshape(-1)
         self._media = volume.media
 
+    def _fn_for(self, source: PhotonSource):
+        if source not in self._fns:
+            raw = build_sim_fn(self.volume.shape, self.volume.unitinmm,
+                               self.cfg, self._n_lanes, self._mode, source)
+            self._fns[source] = jax.jit(raw)
+        return self._fns[source]
+
     def run(self, n_photons: int, chunk_size: int, seed: int = 1234,
-            source: Source | None = None) -> tuple[SimResult, dict]:
-        source = source or Source()
+            source: PhotonSource | Source | None = None
+            ) -> tuple[SimResult, dict]:
+        fn = self._fn_for(
+            as_source(source) if source is not None else self._default_source
+        )
         chunks = [
             Chunk(s, min(chunk_size, n_photons - s))
             for s in range(0, n_photons, chunk_size)
         ]
         queue = list(reversed(chunks))
         inflight: dict[jax.Device, tuple[Chunk, SimResult]] = {}
-        done: list[SimResult] = []
         stats = {d.id: 0 for d in self.devices}
 
         def dispatch(dev: jax.Device):
             ch = queue.pop()
-            res = self._fn(
+            res = fn(
                 jax.device_put(self._labels, dev),
                 jax.device_put(self._media, dev),
-                jax.device_put(source.pos_array(), dev),
-                jax.device_put(source.dir_array(), dev),
                 ch.count, seed, ch.start_id,
             )
             inflight[dev] = (ch, res)
@@ -185,6 +206,7 @@ class ChunkScheduler:
             "exitance": np.zeros((nx, ny), np.float32),
             "escaped_w": 0.0,
             "n_launched": 0,
+            "launched_w": 0.0,
             "steps": 0,
         }
 
@@ -193,6 +215,7 @@ class ChunkScheduler:
             acc["exitance"] += np.asarray(res.exitance)
             acc["escaped_w"] += float(res.escaped_w)
             acc["n_launched"] += int(res.n_launched)
+            acc["launched_w"] += float(res.launched_w)
             acc["steps"] += int(res.steps)
 
         while inflight:
@@ -208,13 +231,13 @@ class ChunkScheduler:
                         dispatch(dev)
             if not progressed:
                 time.sleep(0.001)
-        del done
 
         total = SimResult(
             energy=jnp.asarray(acc["energy"]),
             exitance=jnp.asarray(acc["exitance"]),
             escaped_w=jnp.float32(acc["escaped_w"]),
             n_launched=jnp.int32(acc["n_launched"]),
+            launched_w=jnp.float32(acc["launched_w"]),
             steps=jnp.int32(acc["steps"]),
         )
         return total, stats
@@ -237,11 +260,11 @@ class ElasticSimulator:
 
     def __init__(self, volume: Volume, cfg: SimConfig, n_photons: int,
                  chunk_size: int, n_lanes: int = 1024, seed: int = 1234,
-                 source: Source | None = None):
+                 source: PhotonSource | Source | None = None):
         self.volume = volume
         self.cfg = cfg
         self.seed = seed
-        self.source = source or Source()
+        self.source = as_source(source)
         self.chunk_size = chunk_size
         self.n_photons = n_photons
         self.pending: list[Chunk] = [
@@ -254,7 +277,9 @@ class ElasticSimulator:
         self.exitance = np.zeros((nx, ny), np.float32)
         self.escaped_w = 0.0
         self.n_launched = 0
-        self._raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes)
+        self.launched_w = 0.0
+        self._raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes,
+                                 source=self.source)
         self._jit = jax.jit(self._raw)
 
     # -- execution ---------------------------------------------------------
@@ -294,8 +319,6 @@ class ElasticSimulator:
         return self._jit(
             jax.device_put(vol.labels.reshape(-1), dev),
             jax.device_put(vol.media, dev),
-            jax.device_put(self.source.pos_array(), dev),
-            jax.device_put(self.source.dir_array(), dev),
             ch.count, self.seed, ch.start_id,
         )
 
@@ -304,6 +327,7 @@ class ElasticSimulator:
         self.exitance += np.asarray(res.exitance)
         self.escaped_w += float(res.escaped_w)
         self.n_launched += int(res.n_launched)
+        self.launched_w += float(res.launched_w)
         self.completed.append(ch)
 
     def result(self) -> SimResult:
@@ -312,10 +336,23 @@ class ElasticSimulator:
             exitance=jnp.asarray(self.exitance),
             escaped_w=jnp.float32(self.escaped_w),
             n_launched=jnp.int32(self.n_launched),
+            launched_w=jnp.float32(self.launched_w),
             steps=jnp.int32(0),
         )
 
     # -- checkpoint / restart ------------------------------------------------
+
+    def _source_key(self) -> str:
+        """Canonical string for the source config.  Registered sources
+        serialize via to_dict; custom protocol sources get a class-name
+        sentinel (stable across process restarts, unlike repr/id) — it
+        catches switching source *types* but not reparameterizing the
+        same custom class."""
+        from repro.sources import to_dict as _source_to_dict
+
+        if hasattr(self.source, "type_name"):
+            return json.dumps(_source_to_dict(self.source), sort_keys=True)
+        return f"<custom:{type(self.source).__qualname__}>"
 
     def state_dict(self) -> dict:
         return {
@@ -323,6 +360,7 @@ class ElasticSimulator:
             "exitance": self.exitance.copy(),
             "escaped_w": np.float64(self.escaped_w),
             "n_launched": np.int64(self.n_launched),
+            "launched_w": np.float64(self.launched_w),
             "pending": np.asarray(
                 [(c.start_id, c.count) for c in self.pending], np.int64
             ).reshape(-1, 2),
@@ -331,15 +369,31 @@ class ElasticSimulator:
             ).reshape(-1, 2),
             "seed": np.int64(self.seed),
             "n_photons": np.int64(self.n_photons),
+            # the grids are only mergeable with chunks from the same source;
+            # stored as a uint8-encoded string so every leaf stays a numeric
+            # array the Checkpointer can write to npz
+            "source": np.frombuffer(self._source_key().encode(), np.uint8),
         }
 
     def load_state_dict(self, state: dict):
         assert int(state["n_photons"]) == self.n_photons, "photon budget mismatch"
         assert int(state["seed"]) == self.seed, "seed mismatch"
+        # "source"/"launched_w" may be absent only in state dicts handed
+        # over directly (not via Checkpointer, whose restore template
+        # requires every current key)
+        if "source" in state:
+            raw = state["source"]
+            key = (bytes(np.asarray(raw, np.uint8)).decode()
+                   if not isinstance(raw, str) else raw)
+            assert key == self._source_key(), (
+                f"source mismatch: checkpoint {key} vs "
+                f"simulator {self._source_key()}"
+            )
         self.energy = np.asarray(state["energy"], np.float32).copy()
         self.exitance = np.asarray(state["exitance"], np.float32).copy()
         self.escaped_w = float(state["escaped_w"])
         self.n_launched = int(state["n_launched"])
+        self.launched_w = float(state.get("launched_w", state["n_launched"]))
         self.pending = [Chunk(int(s), int(c)) for s, c in state["pending"]]
         self.completed = [Chunk(int(s), int(c)) for s, c in state["completed"]]
 

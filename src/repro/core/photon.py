@@ -50,6 +50,14 @@ _EPS_STEP = 1e-4   # minimum-progress guard, voxel units
 _INF = 1e30
 _DIR_EPS = 1e-9
 
+# Escape positions within this distance (voxel units) of the z=0 plane
+# count as exits through the illuminated face and are binned into the 2-D
+# exitance (diffuse reflectance) image.  Exit positions land exactly on a
+# voxel wall up to fp32 rounding, so any value in (0, 1) separates the
+# z=0 face from the z=1 wall; a quarter voxel leaves slack on both sides.
+# Shared with the exitance binning in simulator.py.
+Z_EXIT_FACE_VOX = 0.25
+
 
 class PhotonState(NamedTuple):
     pos: jnp.ndarray     # (N, 3) float32, voxel units
@@ -74,27 +82,38 @@ class StepResult(NamedTuple):
     esc_pos: jnp.ndarray  # (N, 3) float32 exit position (voxel units)
 
 
-def launch(source_pos, source_dir, photon_ids, seed, active,
-           shape) -> PhotonState:
-    """Create fresh photons at the source for each lane.
+def launch(pos, direc, w0, rng, active, shape) -> PhotonState:
+    """Assemble fresh photons from per-lane source samples.
 
-    ``photon_ids`` drives counter-based RNG seeding; ``active`` masks
-    lanes that have no photon to simulate.  ``shape`` clips the initial
-    voxel index for sources sitting exactly on the domain surface.
+    ``pos``/``direc``/``w0``/``rng`` come from a source's
+    ``sample(photon_ids, seed)`` (repro.sources): per-lane positions and
+    unit directions, initial packet weights, and the counter-seeded
+    in-flight RNG state.  ``active`` masks lanes that have no photon to
+    simulate.
+
+    Sources are expected to lie within the domain; a sampled position
+    outside ``[0, shape]`` (e.g. the tail of a wide Gaussian beam, or a
+    disk overhanging a face) is clamped onto the domain boundary so
+    ``pos`` and the voxel index stay geometrically consistent — without
+    the position clamp a lane could carry an in-bounds ``ivox`` with an
+    exterior ``pos`` and mis-deposit along a wall it never crossed.  For
+    in-domain sources (including ones sitting exactly on a face, like
+    the default pencil) both clamps are no-ops.
     """
-    n = photon_ids.shape[0]
-    pos = jnp.broadcast_to(source_pos, (n, 3)).astype(jnp.float32)
-    direc = jnp.broadcast_to(source_dir, (n, 3)).astype(jnp.float32)
+    pos = jnp.clip(jnp.asarray(pos, jnp.float32), 0.0,
+                   jnp.asarray(shape, jnp.float32))
+    direc = jnp.asarray(direc, jnp.float32)
+    n = pos.shape[0]
     bounds = jnp.asarray(shape, jnp.int32) - 1
     ivox = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, bounds)
     return PhotonState(
         pos=pos,
         dir=direc,
         ivox=ivox,
-        w=jnp.where(active, 1.0, 0.0).astype(jnp.float32),
+        w=jnp.where(active, w0, 0.0).astype(jnp.float32),
         s_left=jnp.zeros((n,), jnp.float32),
         t=jnp.zeros((n,), jnp.float32),
-        rng=xrng.seed_state(seed, photon_ids),
+        rng=rng,
         alive=active,
     )
 

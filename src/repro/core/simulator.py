@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core import photon as ph
 from repro.core.volume import SimConfig, Source, Volume
+from repro.sources import PhotonSource, as_source
 
 
 class SimResult(NamedTuple):
@@ -35,6 +36,9 @@ class SimResult(NamedTuple):
     exitance: jnp.ndarray   # (nx, ny) float32 weight escaping the z=0 face
     escaped_w: jnp.ndarray  # () float32 total escaped weight
     n_launched: jnp.ndarray  # () int32 photons actually launched
+    launched_w: jnp.ndarray  # () float32 total initial weight launched
+    #                          (== n_launched for unit-weight sources; differs
+    #                          for weighted launches, e.g. Planar patterns)
     steps: jnp.ndarray      # () int32 lock-step iterations executed
 
 
@@ -46,11 +50,12 @@ class _Carry(NamedTuple):
     remaining: jnp.ndarray   # dynamic mode: shared photon counter
     launched_per_lane: jnp.ndarray  # static mode: per-lane launch count
     next_id: jnp.ndarray     # global photon id counter (RNG seeding)
+    launched_w: jnp.ndarray  # total initial weight launched so far
     steps: jnp.ndarray
 
 
 def _regenerate(state, remaining, launched_per_lane, next_id, quota,
-                source_pos, source_dir, seed, mode, shape):
+                source, seed, mode, shape):
     """Relaunch photons in dead lanes according to the workload mode."""
     dead = ~state.alive
     if mode == "dynamic":
@@ -61,7 +66,8 @@ def _regenerate(state, remaining, launched_per_lane, next_id, quota,
     n_relaunch = jnp.sum(relaunch.astype(jnp.int32))
     rank = jnp.cumsum(relaunch.astype(jnp.int32)) - 1  # 0-based among relaunched
     ids = (next_id + rank).astype(jnp.uint32)
-    fresh = ph.launch(source_pos, source_dir, ids, seed, relaunch, shape)
+    pos, direc, w0, rng = source.sample(ids, seed)
+    fresh = ph.launch(pos, direc, w0, rng, relaunch, shape)
 
     def merge(new, old):
         mask = relaunch
@@ -76,32 +82,37 @@ def _regenerate(state, remaining, launched_per_lane, next_id, quota,
         remaining - n_relaunch,
         launched_per_lane + relaunch.astype(jnp.int32),
         next_id + n_relaunch,
-        n_relaunch,
+        jnp.sum(jnp.where(relaunch, w0, 0.0)),
     )
 
 
 def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
-                 cfg: SimConfig, n_lanes: int, mode: str = "dynamic"):
+                 cfg: SimConfig, n_lanes: int, mode: str = "dynamic",
+                 source: PhotonSource | None = None):
     """Build the raw (unjitted) simulation function.
 
-    Returns ``sim_fn(labels_flat, media, source_pos, source_dir,
-    n_photons, seed, id_offset=0) -> SimResult``; ``n_photons``,
-    ``seed`` and ``id_offset`` are traced, so one executable serves
-    pilot runs and production runs.  ``id_offset`` gives this shard a
-    disjoint global photon-id range — the counter-based RNG then makes
-    multi-device / elastic / restarted runs simulate *exactly* the same
-    photon set as a single-device run (DESIGN.md §determinism).
+    Returns ``sim_fn(labels_flat, media, n_photons, seed, id_offset=0)
+    -> SimResult``; ``n_photons``, ``seed`` and ``id_offset`` are
+    traced, so one executable serves pilot runs and production runs.
+    ``source`` is any registered photon source (repro.sources; pencil
+    beam by default) and is baked in at trace time — its parameters are
+    static, its randomness counter-seeded per photon id.  ``id_offset``
+    gives this shard a disjoint global photon-id range — the
+    counter-based RNG (both the source's launch stream and the in-flight
+    stream) then makes multi-device / elastic / restarted runs simulate
+    *exactly* the same photon set as a single-device run
+    (DESIGN.md §determinism, §sources).
 
     The raw function is shard_map-composable; ``make_simulator`` wraps
     it in jit for single-device use.
     """
     if mode not in ("dynamic", "static"):
         raise ValueError(f"unknown workload mode: {mode}")
+    source = as_source(source)
     nx, ny, nz = shape
     nvox = nx * ny * nz
 
-    def sim_fn(labels_flat, media, source_pos, source_dir, n_photons, seed,
-               id_offset=0):
+    def sim_fn(labels_flat, media, n_photons, seed, id_offset=0):
         n_photons = jnp.asarray(n_photons, jnp.int32)
         seed = jnp.asarray(seed, jnp.uint32)
         id_offset = jnp.asarray(id_offset, jnp.int32)
@@ -128,6 +139,7 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
             remaining=n_photons,
             launched_per_lane=jnp.zeros((n_lanes,), jnp.int32),
             next_id=id_offset,
+            launched_w=jnp.float32(0.0),
             steps=jnp.int32(0),
         )
 
@@ -140,15 +152,15 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
             return has_work & (c.steps < cfg.max_steps)
 
         def body(c: _Carry):
-            state, remaining, launched, next_id, _ = _regenerate(
+            state, remaining, launched, next_id, w_new = _regenerate(
                 c.state, c.remaining, c.launched_per_lane, c.next_id,
-                quota, source_pos, source_dir, seed, mode, shape,
+                quota, source, seed, mode, shape,
             )
             res = ph.step(state, labels_flat, media, shape, unitinmm, cfg)
             energy = c.energy.at[res.dep_idx].add(res.dep_w)
             escaped_w = c.escaped_w + jnp.sum(res.esc_w)
             # bin exits through the z=0 face into the exitance image
-            z_exit = res.esc_pos[:, 2] < 0.25
+            z_exit = res.esc_pos[:, 2] < ph.Z_EXIT_FACE_VOX
             hit = (res.esc_w > 0) & z_exit
             ex = jnp.clip(jnp.floor(res.esc_pos[:, 0]).astype(jnp.int32), 0, nx - 1)
             ey = jnp.clip(jnp.floor(res.esc_pos[:, 1]).astype(jnp.int32), 0, ny - 1)
@@ -163,6 +175,7 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
                 remaining=remaining,
                 launched_per_lane=launched,
                 next_id=next_id,
+                launched_w=c.launched_w + w_new,
                 steps=c.steps + 1,
             )
 
@@ -172,6 +185,7 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
             exitance=final.exitance,
             escaped_w=final.escaped_w,
             n_launched=final.next_id - id_offset,
+            launched_w=final.launched_w,
             steps=final.steps,
         )
 
@@ -179,24 +193,29 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
 
 
 def make_simulator(volume: Volume, cfg: SimConfig, n_lanes: int,
-                   mode: str = "dynamic"):
-    """Jitted single-device simulator for a fixed (volume, cfg, lanes)."""
-    raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes, mode)
+                   mode: str = "dynamic",
+                   source: PhotonSource | Source | None = None):
+    """Jitted single-device simulator for a fixed (volume, cfg, lanes,
+    source)."""
+    raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes, mode,
+                       source)
     return jax.jit(raw)
 
 
 def simulate(volume: Volume, cfg: SimConfig, n_photons: int,
              n_lanes: int = 4096, seed: int = 1234,
-             source: Source | None = None,
+             source: PhotonSource | Source | None = None,
              mode: str = "dynamic") -> SimResult:
-    """Convenience one-shot simulation on the current default device."""
-    source = source or Source()
-    sim_fn = make_simulator(volume, cfg, n_lanes, mode)
+    """Convenience one-shot simulation on the current default device.
+
+    ``source`` accepts any registered source type (repro.sources), the
+    legacy pencil :class:`Source`, or a ``sources.to_dict``-style config
+    dict; ``None`` is the paper's pencil beam.
+    """
+    sim_fn = make_simulator(volume, cfg, n_lanes, mode, source)
     return sim_fn(
         volume.labels.reshape(-1),
         volume.media,
-        source.pos_array(),
-        source.dir_array(),
         n_photons,
         seed,
     )
@@ -208,7 +227,8 @@ def simulate(volume: Volume, cfg: SimConfig, n_photons: int,
 
 def autotune_lanes(volume: Volume, cfg: SimConfig, n_pilot: int = 20_000,
                    candidates=(1024, 2048, 4096, 8192, 16384),
-                   seed: int = 7, source: Source | None = None,
+                   seed: int = 7,
+                   source: PhotonSource | Source | None = None,
                    repeats: int = 2) -> tuple[int, dict[int, float]]:
     """Pick the lane count with the highest pilot throughput.
 
@@ -217,13 +237,11 @@ def autotune_lanes(volume: Volume, cfg: SimConfig, n_pilot: int = 20_000,
     runtime, we measure it — a pilot sweep, exactly how the device-level
     balancer estimates throughput.  Returns (best_lane_count, timings_s).
     """
-    source = source or Source()
     labels_flat = volume.labels.reshape(-1)
     timings: dict[int, float] = {}
     for lanes in candidates:
-        sim_fn = make_simulator(volume, cfg, lanes, "dynamic")
-        args = (labels_flat, volume.media, source.pos_array(),
-                source.dir_array(), n_pilot, seed)
+        sim_fn = make_simulator(volume, cfg, lanes, "dynamic", source)
+        args = (labels_flat, volume.media, n_pilot, seed)
         jax.block_until_ready(sim_fn(*args))  # compile + warm up
         best = float("inf")
         for _ in range(repeats):

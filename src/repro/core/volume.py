@@ -131,7 +131,12 @@ def benchmark_b2(shape: tuple[int, int, int] = (60, 60, 60)) -> Volume:
 
 @dataclasses.dataclass(frozen=True)
 class Source:
-    """Pencil-beam source (the paper's configuration)."""
+    """Legacy pencil-beam source (the paper's configuration).
+
+    Kept for backward compatibility; anywhere a source is accepted this
+    is coerced to ``repro.sources.Pencil`` (bit-identical results).
+    Prefer the registered source types in ``repro.sources``.
+    """
 
     pos: tuple[float, float, float] = (30.0, 30.0, 0.0)
     dir: tuple[float, float, float] = (0.0, 0.0, 1.0)

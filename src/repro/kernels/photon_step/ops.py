@@ -9,6 +9,7 @@ import jax
 from repro.core import photon as ph
 from repro.core.volume import SimConfig, Source, Volume
 from repro.kernels.photon_step.photon_step import photon_step_pallas
+from repro.sources import PhotonSource, as_source
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -22,13 +23,18 @@ def photon_steps(labels_flat, media, state, shape, unitinmm, cfg: SimConfig,
 
 def simulate_kernel(volume: Volume, cfg: SimConfig, n_photons: int,
                     n_steps: int, seed: int = 1234,
-                    source: Source | None = None, block_lanes: int = 256,
-                    interpret: bool = True):
-    """Launch one photon per lane and advance n_steps with the kernel."""
-    source = source or Source()
+                    source: PhotonSource | Source | None = None,
+                    block_lanes: int = 256, interpret: bool = True):
+    """Launch one photon per lane and advance n_steps with the kernel.
+
+    Any registered source (repro.sources) works: the source samples the
+    launch states outside the kernel, so the Pallas step body is
+    source-agnostic.
+    """
+    source = as_source(source)
     ids = jax.numpy.arange(n_photons, dtype=jax.numpy.uint32)
-    state = ph.launch(source.pos_array(), source.dir_array(), ids,
-                      jax.numpy.uint32(seed),
+    pos, direc, w0, rng = source.sample(ids, jax.numpy.uint32(seed))
+    state = ph.launch(pos, direc, w0, rng,
                       jax.numpy.ones((n_photons,), bool), volume.shape)
     return photon_steps(volume.labels.reshape(-1), volume.media, state,
                         volume.shape, volume.unitinmm, cfg, n_steps,

@@ -7,6 +7,7 @@
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -40,26 +41,33 @@ def main(argv=None):
     ap.add_argument("--devices", default="one", choices=["one", "all"])
     ap.add_argument("--chunk", type=int, default=0,
                     help=">0: dynamic chunk scheduling (straggler-safe)")
+    ap.add_argument("--source", default=None,
+                    help="JSON source spec (repro.sources), e.g. "
+                         '\'{"type": "disk", "pos": [30, 30, 0], '
+                         '"radius": 5}\'; default: pencil beam')
     args = ap.parse_args(argv)
 
+    source = json.loads(args.source) if args.source else None
     vol, cfg = get_bench(args.bench, args.size)
     lanes = args.lanes
     if args.autotune:
-        lanes, timings = S.autotune_lanes(vol, cfg, n_pilot=args.photons // 10)
+        lanes, timings = S.autotune_lanes(vol, cfg, n_pilot=args.photons // 10,
+                                          source=source)
         print("autotune:", {k: round(v, 3) for k, v in timings.items()},
               "-> lanes =", lanes)
 
     t0 = time.time()
     if args.chunk:
-        sched = ChunkScheduler(vol, cfg, n_lanes=lanes)
+        sched = ChunkScheduler(vol, cfg, n_lanes=lanes, source=source)
         res, stats = sched.run(args.photons, args.chunk, seed=args.seed)
         print("per-device photons:", stats)
     elif args.devices == "all" and len(jax.devices()) > 1:
         mesh = jax.make_mesh((len(jax.devices()),), ("data",))
         res = simulate_sharded(vol, cfg, args.photons, mesh,
-                               n_lanes=lanes, seed=args.seed)
+                               n_lanes=lanes, seed=args.seed, source=source)
     else:
-        res = S.simulate(vol, cfg, args.photons, lanes, args.seed)
+        res = S.simulate(vol, cfg, args.photons, lanes, args.seed,
+                         source=source)
     jax.block_until_ready(res)
     dt = time.time() - t0
 

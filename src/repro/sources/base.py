@@ -1,0 +1,223 @@
+"""Source subsystem core: protocol, registry, RNG streams, geometry helpers.
+
+A *source* turns global photon ids into launch states.  Every source is a
+frozen dataclass with static (Python-scalar / tuple) parameters and one
+method::
+
+    sample(photon_ids, seed) -> (pos, dir, w0, rng)
+
+with ``pos``/``dir`` of shape (N, 3) float32 (voxel units / unit
+vectors), ``w0`` the (N,) initial packet weight and ``rng`` the (N, 4)
+uint32 in-flight xorshift128 state.
+
+Determinism contract (DESIGN.md §sources):
+
+  * ``sample`` is a pure function of (photon_ids, seed) and the static
+    source parameters — no hidden state, no host randomness.
+  * Launch-time randomness is drawn from a dedicated *launch stream*,
+    counter-seeded from ``(seed ^ LAUNCH_STREAM_SALT, photon_id)``.  The
+    in-flight stream stays seeded from ``(seed, photon_id)`` exactly as
+    before, so switching source type never perturbs trajectories-given-
+    launch-state, and the pencil beam (zero draws) is bit-identical to
+    the historical hard-coded launch.
+  * Each source type consumes a fixed number of launch-stream uniforms
+    per photon (``N_DRAWS``), independent of runtime values.
+
+Together with the counter-based seeding this makes every source
+bit-reproducible across single-device, shard_map multi-device
+(``id_offset`` ranges), chunked, and restarted runs: photon ``k`` gets
+the same launch state and trajectory no matter which lane, device, or
+process simulates it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rng as xrng
+
+# Domain-separation salt for the launch stream.  XORed into the master
+# seed so launch-time draws are decorrelated from the in-flight stream
+# (which keeps using the unsalted seed) without consuming from it.
+LAUNCH_STREAM_SALT = 0xA511CE50
+
+
+@runtime_checkable
+class PhotonSource(Protocol):
+    """Structural type every registered source satisfies."""
+
+    def sample(self, photon_ids, seed):
+        """(photon_ids, seed) -> (pos, dir, w0, rng) per-lane launch state."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# RNG streams
+# ---------------------------------------------------------------------------
+
+def launch_stream(seed, photon_ids) -> jnp.ndarray:
+    """Per-photon launch-time RNG state (salted counter seed)."""
+    seed = jnp.asarray(seed, jnp.uint32) ^ jnp.uint32(LAUNCH_STREAM_SALT)
+    return xrng.seed_state(seed, photon_ids)
+
+
+def flight_stream(seed, photon_ids) -> jnp.ndarray:
+    """Per-photon in-flight RNG state — identical to the historical seeding."""
+    return xrng.seed_state(jnp.asarray(seed, jnp.uint32), photon_ids)
+
+
+# ---------------------------------------------------------------------------
+# geometry helpers (static params -> trace-time numpy, lane math -> jnp)
+# ---------------------------------------------------------------------------
+
+def unit(v) -> jnp.ndarray:
+    """Normalize a static 3-vector in float64, return float32 (matches the
+    historical ``Source.dir_array`` arithmetic bit-for-bit)."""
+    d = np.asarray(v, np.float64)
+    return jnp.asarray(d / np.linalg.norm(d), jnp.float32)
+
+
+def orthonormal_frame(axis) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Two unit vectors spanning the plane perpendicular to a static axis."""
+    a = np.asarray(axis, np.float64)
+    a = a / np.linalg.norm(a)
+    h = np.array([0.0, 0.0, 1.0]) if abs(a[2]) < 0.9 else np.array([1.0, 0.0, 0.0])
+    e1 = np.cross(h, a)
+    e1 = e1 / np.linalg.norm(e1)
+    e2 = np.cross(a, e1)
+    return jnp.asarray(e1, jnp.float32), jnp.asarray(e2, jnp.float32)
+
+
+def isotropic_direction(u_cos, u_phi) -> jnp.ndarray:
+    """Unit directions uniform over the sphere from two launch uniforms.
+
+    Shared by every isotropically-emitting source so the arithmetic (and
+    therefore the bit-level result for a given launch stream) is defined
+    in exactly one place.
+    """
+    cost = 2.0 * u_cos - 1.0
+    sint = jnp.sqrt(jnp.maximum(1.0 - cost * cost, 0.0))
+    phi = (2.0 * np.pi) * u_phi
+    return jnp.stack(
+        [sint * jnp.cos(phi), sint * jnp.sin(phi), cost], axis=-1
+    )
+
+
+def radial_offset(pos, r, u_phi, e1, e2) -> jnp.ndarray:
+    """Offset (N, 3) positions by radius ``r`` at azimuth ``2π·u_phi`` in
+    the plane spanned by ``(e1, e2)``.
+
+    Shared by every radial beam profile (disk, Gaussian) so the offset
+    arithmetic — and thus the bit-level launch state for a given stream —
+    is defined in exactly one place; only the r(u) formula differs.
+    """
+    phi = (2.0 * np.pi) * u_phi
+    return (
+        pos
+        + (r * jnp.cos(phi))[:, None] * e1
+        + (r * jnp.sin(phi))[:, None] * e2
+    )
+
+
+def direction_from_axis(cost, phi, axis, e1, e2) -> jnp.ndarray:
+    """Unit directions at polar cosine ``cost`` / azimuth ``phi`` around
+    a static ``axis`` with perpendicular frame ``(e1, e2)``."""
+    cost = jnp.clip(cost, -1.0, 1.0)
+    sint = jnp.sqrt(jnp.maximum(1.0 - cost * cost, 0.0))
+    d = (
+        (sint * jnp.cos(phi))[:, None] * e1
+        + (sint * jnp.sin(phi))[:, None] * e2
+        + cost[:, None] * jnp.asarray(axis, jnp.float32)
+    )
+    norm = jnp.sqrt(jnp.sum(d * d, axis=-1, keepdims=True))
+    return d / jnp.maximum(norm, 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# registry + config serialization
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register(name: str):
+    """Class decorator: add a source type to the registry under ``name``."""
+
+    def deco(cls):
+        cls.type_name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def available_sources() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_source_cls(name: str) -> type:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown source type {name!r}; registered: {available_sources()}"
+        ) from None
+
+
+def _jsonify(v):
+    if isinstance(v, tuple):
+        return [_jsonify(x) for x in v]
+    return v
+
+
+def _unjsonify(v):
+    if isinstance(v, (list, tuple)):
+        return tuple(_unjsonify(x) for x in v)
+    return v
+
+
+def to_dict(source) -> dict:
+    """Serialize a registered source to a JSON-friendly campaign config."""
+    d = dataclasses.asdict(source)
+    return {"type": source.type_name, **{k: _jsonify(v) for k, v in d.items()}}
+
+
+def from_dict(d: dict):
+    """Rebuild a source from :func:`to_dict` output (lists become tuples
+    so the instance stays frozen/hashable)."""
+    d = dict(d)
+    cls = get_source_cls(d.pop("type"))
+    return cls(**{k: _unjsonify(v) for k, v in d.items()})
+
+
+def as_source(source=None) -> PhotonSource:
+    """Coerce user input to a source instance.
+
+    Accepts ``None`` (pencil-beam default — the paper's configuration),
+    a registered source instance, the legacy :class:`repro.core.volume.
+    Source` pencil dataclass, or a :func:`to_dict`-style config dict.
+    """
+    from repro.core.volume import Source as LegacySource
+    from repro.sources.types import Pencil
+
+    if source is None:
+        return Pencil()
+    if isinstance(source, LegacySource):
+        return Pencil(pos=tuple(source.pos), dir=tuple(source.dir))
+    if isinstance(source, dict):
+        return from_dict(source)
+    if isinstance(source, PhotonSource):
+        try:
+            hash(source)
+        except TypeError:
+            if hasattr(source, "type_name"):
+                # e.g. a registered dataclass built with list-typed fields:
+                # normalize to tuples so jit caches keyed by source work
+                return from_dict(to_dict(source))
+            raise
+        return source
+    raise TypeError(f"cannot interpret {source!r} as a photon source")

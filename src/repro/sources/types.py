@@ -1,0 +1,256 @@
+"""The source menu: MCX-style illumination patterns as frozen dataclasses.
+
+All positions/lengths are in *voxel units* (like everything in the
+engine; multiply mm by ``1/unitinmm`` to convert), directions need not
+be normalized.  Sources should lie within the simulation domain; any
+sampled launch position outside it is clamped onto the domain boundary
+(see ``photon.launch``).  Each type documents its launch-stream draw count
+(``N_DRAWS``) — part of the determinism contract in DESIGN.md §sources.
+
+Registered types (see ``repro.sources.available_sources()``):
+
+  pencil     zero-width collimated beam (the paper's configuration)
+  isotropic  point source radiating uniformly over 4π
+  cone       uniform solid-angle cone around an axis
+  gaussian   collimated beam with Gaussian intensity profile
+  disk       uniform-intensity flat circular beam
+  planar     uniform parallelogram patch, optional intensity pattern
+  line       line segment, collimated (slit) or isotropic emission
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+from repro.core import rng as xrng
+from repro.sources import base
+
+_TWO_PI = 2.0 * math.pi
+
+Vec3 = tuple[float, float, float]
+
+
+def _broadcast_pos(pos, n: int) -> jnp.ndarray:
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.float32), (n, 3))
+
+
+def _ones(n: int) -> jnp.ndarray:
+    return jnp.ones((n,), jnp.float32)
+
+
+@base.register("pencil")
+@dataclasses.dataclass(frozen=True)
+class Pencil:
+    """Zero-width collimated beam — bit-identical to the historical
+    hard-coded launch (consumes no launch-stream draws)."""
+
+    pos: Vec3 = (30.0, 30.0, 0.0)
+    dir: Vec3 = (0.0, 0.0, 1.0)
+
+    N_DRAWS = 0
+
+    def sample(self, photon_ids, seed):
+        n = photon_ids.shape[0]
+        direc = jnp.broadcast_to(base.unit(self.dir), (n, 3))
+        return (_broadcast_pos(self.pos, n), direc, _ones(n),
+                base.flight_stream(seed, photon_ids))
+
+
+@base.register("isotropic")
+@dataclasses.dataclass(frozen=True)
+class IsotropicPoint:
+    """Point source radiating uniformly over the full sphere."""
+
+    pos: Vec3 = (30.0, 30.0, 30.0)
+
+    N_DRAWS = 2  # u_cos, u_phi
+
+    def sample(self, photon_ids, seed):
+        n = photon_ids.shape[0]
+        ls = base.launch_stream(seed, photon_ids)
+        ls, u_cos = xrng.next_uniform(ls)
+        ls, u_phi = xrng.next_uniform(ls)
+        direc = base.isotropic_direction(u_cos, u_phi)
+        return (_broadcast_pos(self.pos, n), direc, _ones(n),
+                base.flight_stream(seed, photon_ids))
+
+
+@base.register("cone")
+@dataclasses.dataclass(frozen=True)
+class Cone:
+    """Point source emitting uniformly into a cone of ``half_angle_deg``
+    around ``dir`` (an optical-fiber numerical-aperture model)."""
+
+    pos: Vec3 = (30.0, 30.0, 0.0)
+    dir: Vec3 = (0.0, 0.0, 1.0)
+    half_angle_deg: float = 15.0
+
+    N_DRAWS = 2  # u_cos, u_phi
+
+    def sample(self, photon_ids, seed):
+        n = photon_ids.shape[0]
+        axis = base.unit(self.dir)
+        e1, e2 = base.orthonormal_frame(self.dir)
+        cos_half = math.cos(math.radians(self.half_angle_deg))
+        ls = base.launch_stream(seed, photon_ids)
+        ls, u_cos = xrng.next_uniform(ls)
+        ls, u_phi = xrng.next_uniform(ls)
+        # uniform over the spherical cap [cos_half, 1]
+        cost = 1.0 - u_cos * (1.0 - cos_half)
+        direc = base.direction_from_axis(cost, _TWO_PI * u_phi, axis, e1, e2)
+        return (_broadcast_pos(self.pos, n), direc, _ones(n),
+                base.flight_stream(seed, photon_ids))
+
+
+@base.register("gaussian")
+@dataclasses.dataclass(frozen=True)
+class GaussianBeam:
+    """Collimated beam with Gaussian intensity profile of 1/e² radius
+    ``waist`` (voxel units), centered on ``pos`` and propagating along
+    ``dir``: r = waist·sqrt(-ln u / 2)."""
+
+    pos: Vec3 = (30.0, 30.0, 0.0)
+    dir: Vec3 = (0.0, 0.0, 1.0)
+    waist: float = 3.0
+
+    N_DRAWS = 2  # u_r, u_phi
+
+    def sample(self, photon_ids, seed):
+        n = photon_ids.shape[0]
+        e1, e2 = base.orthonormal_frame(self.dir)
+        ls = base.launch_stream(seed, photon_ids)
+        ls, u_r = xrng.next_uniform(ls)
+        ls, u_phi = xrng.next_uniform(ls)
+        r = self.waist * jnp.sqrt(-jnp.log(u_r) * 0.5)
+        pos = base.radial_offset(_broadcast_pos(self.pos, n), r, u_phi, e1, e2)
+        direc = jnp.broadcast_to(base.unit(self.dir), (n, 3))
+        return pos, direc, _ones(n), base.flight_stream(seed, photon_ids)
+
+
+@base.register("disk")
+@dataclasses.dataclass(frozen=True)
+class Disk:
+    """Uniform-intensity collimated circular beam of ``radius`` voxels."""
+
+    pos: Vec3 = (30.0, 30.0, 0.0)
+    dir: Vec3 = (0.0, 0.0, 1.0)
+    radius: float = 5.0
+
+    N_DRAWS = 2  # u_r, u_phi
+
+    def sample(self, photon_ids, seed):
+        n = photon_ids.shape[0]
+        e1, e2 = base.orthonormal_frame(self.dir)
+        ls = base.launch_stream(seed, photon_ids)
+        ls, u_r = xrng.next_uniform(ls)
+        ls, u_phi = xrng.next_uniform(ls)
+        r = self.radius * jnp.sqrt(u_r)  # uniform over the disk area
+        pos = base.radial_offset(_broadcast_pos(self.pos, n), r, u_phi, e1, e2)
+        direc = jnp.broadcast_to(base.unit(self.dir), (n, 3))
+        return pos, direc, _ones(n), base.flight_stream(seed, photon_ids)
+
+
+@base.register("planar")
+@dataclasses.dataclass(frozen=True)
+class Planar:
+    """Collimated area source over the parallelogram ``pos + a·v1 + b·v2``
+    (a, b uniform in [0, 1)).
+
+    ``pattern`` (optional, row-major tuple-of-tuples) modulates the
+    initial packet weight like MCX's pattern source: the patch is split
+    into len(pattern) × len(pattern[0]) cells along (v1, v2) and a photon
+    launched in cell (i, j) starts with w0 = pattern[i][j].  Positions
+    stay uniform; only weights vary — SDS-style structured illumination
+    without rejection sampling.
+    """
+
+    pos: Vec3 = (20.0, 20.0, 0.0)
+    v1: Vec3 = (20.0, 0.0, 0.0)
+    v2: Vec3 = (0.0, 20.0, 0.0)
+    dir: Vec3 = (0.0, 0.0, 1.0)
+    pattern: tuple = ()
+
+    N_DRAWS = 2  # u_a, u_b
+
+    def sample(self, photon_ids, seed):
+        n = photon_ids.shape[0]
+        ls = base.launch_stream(seed, photon_ids)
+        ls, u_a = xrng.next_uniform(ls)
+        ls, u_b = xrng.next_uniform(ls)
+        v1 = jnp.asarray(self.v1, jnp.float32)
+        v2 = jnp.asarray(self.v2, jnp.float32)
+        pos = (
+            _broadcast_pos(self.pos, n)
+            + u_a[:, None] * v1
+            + u_b[:, None] * v2
+        )
+        if self.pattern:
+            pat = jnp.asarray(self.pattern, jnp.float32)
+            rows, cols = pat.shape
+            ia = jnp.clip((u_a * rows).astype(jnp.int32), 0, rows - 1)
+            ib = jnp.clip((u_b * cols).astype(jnp.int32), 0, cols - 1)
+            w0 = jnp.take(pat.reshape(-1), ia * cols + ib)
+        else:
+            w0 = _ones(n)
+        direc = jnp.broadcast_to(base.unit(self.dir), (n, 3))
+        return pos, direc, w0, base.flight_stream(seed, photon_ids)
+
+
+@base.register("line")
+@dataclasses.dataclass(frozen=True)
+class Line:
+    """Line-segment source from ``start`` to ``end``.
+
+    With ``dir`` set this is a slit (collimated along ``dir``); with
+    ``dir=None`` each photon emits isotropically from its launch point.
+    Always draws 3 launch uniforms so the stream layout is identical for
+    both variants.
+    """
+
+    start: Vec3 = (20.0, 30.0, 0.0)
+    end: Vec3 = (40.0, 30.0, 0.0)
+    dir: Vec3 | None = (0.0, 0.0, 1.0)
+
+    N_DRAWS = 3  # u_t, u_cos, u_phi
+
+    def sample(self, photon_ids, seed):
+        n = photon_ids.shape[0]
+        ls = base.launch_stream(seed, photon_ids)
+        ls, u_t = xrng.next_uniform(ls)
+        ls, u_cos = xrng.next_uniform(ls)
+        ls, u_phi = xrng.next_uniform(ls)
+        start = jnp.asarray(self.start, jnp.float32)
+        end = jnp.asarray(self.end, jnp.float32)
+        pos = start[None, :] + u_t[:, None] * (end - start)[None, :]
+        if self.dir is not None:
+            direc = jnp.broadcast_to(base.unit(self.dir), (n, 3))
+        else:
+            direc = base.isotropic_direction(u_cos, u_phi)
+        return pos, direc, _ones(n), base.flight_stream(seed, photon_ids)
+
+
+def demo_menu(size: int) -> dict:
+    """One representative instance of every source type, scaled to a
+    cubic domain of edge ``size`` voxels.  Shared by the source gallery
+    example and the per-source throughput benchmark so both always
+    exercise the same configurations."""
+    c = size / 2.0
+    q = size / 4.0
+    return {
+        "pencil": Pencil(pos=(c, c, 0.0)),
+        "isotropic": IsotropicPoint(pos=(c, c, c)),
+        "cone": Cone(pos=(c, c, 0.0), half_angle_deg=20.0),
+        "gaussian": GaussianBeam(pos=(c, c, 0.0), waist=size / 12.0),
+        "disk": Disk(pos=(c, c, 0.0), radius=size / 6.0),
+        # checkerboard: structured illumination via launch weights
+        "planar+pattern": Planar(
+            pos=(q, q, 0.0), v1=(2 * q, 0.0, 0.0), v2=(0.0, 2 * q, 0.0),
+            pattern=((1.0, 0.1, 1.0), (0.1, 1.0, 0.1), (1.0, 0.1, 1.0)),
+        ),
+        "line (slit)": Line(start=(q, c, 0.0), end=(3 * q, c, 0.0)),
+        "line (isotropic)": Line(start=(q, c, c), end=(3 * q, c, c),
+                                 dir=None),
+    }

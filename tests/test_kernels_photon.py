@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import sources as SRC
 from repro.core import photon as ph
 from repro.core import volume as V
 from repro.kernels.photon_step.photon_step import photon_step_pallas
@@ -17,10 +18,10 @@ from repro.kernels.photon_step.ref import photon_steps_ref
 
 
 def _mk_state(n, vol, seed=7):
-    src = V.Source(pos=(vol.shape[0] / 2, vol.shape[1] / 2, 0.0))
+    src = SRC.Pencil(pos=(vol.shape[0] / 2, vol.shape[1] / 2, 0.0))
     ids = jnp.arange(n, dtype=jnp.uint32)
-    return ph.launch(src.pos_array(), src.dir_array(), ids,
-                     jnp.uint32(seed), jnp.ones((n,), bool), vol.shape)
+    pos, direc, w0, rng = src.sample(ids, jnp.uint32(seed))
+    return ph.launch(pos, direc, w0, rng, jnp.ones((n,), bool), vol.shape)
 
 
 @pytest.mark.parametrize("shape,n,block,steps,reflect", [

@@ -2,6 +2,7 @@
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # keep tier-1 collection alive without the extra dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core import loadbalance as LB

@@ -3,6 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # keep tier-1 collection alive without the extra dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core import rng as xrng

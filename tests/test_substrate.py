@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # keep tier-1 collection alive without the extra dep
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import Checkpointer
