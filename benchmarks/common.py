@@ -20,9 +20,9 @@ def get_bench(name: str, size: int = 40):
 
 
 def time_sim(vol, cfg, n_photons, lanes, seed=11, mode="dynamic",
-             repeats=2, source=None) -> float:
+             repeats=2, source=None, engine="jnp") -> float:
     """Best-of-N wall seconds for one simulation (compile excluded)."""
-    fn = S.make_simulator(vol, cfg, lanes, mode, source)
+    fn = S.make_simulator(vol, cfg, lanes, mode, source, engine)
     args = (vol.labels.reshape(-1), vol.media, n_photons, seed)
     jax.block_until_ready(fn(*args))  # compile + warm
     best = float("inf")

@@ -1,0 +1,115 @@
+"""Fused-round throughput: photons/s across K = steps_per_round.
+
+Measures the DESIGN.md §rounds tradeoff — regeneration/flush
+amortization vs masked-lane waste — for both round executors
+(``engine="jnp"`` and ``engine="pallas"``) on the pencil-beam B1
+benchmark, and writes a machine-readable ``BENCH_fused.json`` at the
+repo root: the perf-trajectory record tracked per PR by CI.
+
+  PYTHONPATH=src python -m benchmarks.fused [--quick] [--engines jnp]
+
+Note on the Pallas numbers off-TPU: the kernel auto-detects the backend
+and runs under the Pallas *interpreter* on CPU/GPU (correctness rig,
+not a perf path), so off-TPU the jnp engine rows are the meaningful
+throughput trajectory and the pallas rows only track interpreter
+overhead.  ``meta.interpreted`` records which mode ran.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import platform
+from pathlib import Path
+
+import jax
+
+from benchmarks.common import get_bench, time_sim
+from repro.core import simulator as S
+from repro.core.volume import SimConfig
+from repro.kernels.photon_step.photon_step import default_interpret
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+ROUNDS = (1, 4, 8, 16, 32)
+
+
+def run(quick=False, engines=("jnp", "pallas"), rounds=ROUNDS,
+        out_path: Path | str = REPO_ROOT / "BENCH_fused.json"):
+    vol, phys = get_bench("B1", 24 if quick else 40)
+    cfg0 = SimConfig(do_reflect=phys["do_reflect"])
+    # sizing: the pallas interpreter is orders of magnitude slower than
+    # compiled XLA, so off-TPU it gets a reduced workload
+    interpreted = default_interpret()
+    jnp_load = (8_000, 1024) if quick else (40_000, 4096)
+    workload = {
+        "jnp": jnp_load,
+        "pallas": (2_000, 512) if interpreted else jnp_load,
+    }
+
+    results: dict = {
+        "meta": {
+            "bench": "B1-pencil",
+            "size": 24 if quick else 40,
+            "quick": quick,
+            "backend": jax.default_backend(),
+            "interpreted_pallas": interpreted,
+            "jax": jax.__version__,
+            "machine": platform.machine(),
+            "rounds": list(rounds),
+        },
+        "engines": {},
+    }
+    for engine in engines:
+        n_photons, lanes = workload[engine]
+        rows = {}
+        for k in rounds:
+            cfg = dataclasses.replace(cfg0, steps_per_round=int(k))
+            secs = time_sim(vol, cfg, n_photons, lanes, engine=engine,
+                            repeats=2 if quick else 3)
+            rows[str(k)] = {
+                "seconds": secs,
+                "photons_per_s": n_photons / secs,
+            }
+            print(f"[fused] {engine:6s} K={k:2d}: "
+                  f"{n_photons / secs / 1e3:8.2f} photons/ms "
+                  f"({secs * 1e3:.1f} ms)", flush=True)
+        # baseline for the speedup column: K=1 when swept, else smallest K
+        base_k = "1" if "1" in rows else str(min(int(k) for k in rows))
+        base = rows[base_k]["photons_per_s"]
+        best_k = max(rows, key=lambda k: rows[k]["photons_per_s"])
+        rows_meta = {
+            "n_photons": n_photons,
+            "lanes": lanes,
+            "baseline_k": int(base_k),
+            "best_k": int(best_k),
+            "best_speedup_vs_k1": rows[best_k]["photons_per_s"] / base,
+        }
+        print(f"[fused] {engine}: best K={best_k} "
+              f"({rows_meta['best_speedup_vs_k1']:.3f}x vs K={base_k})",
+              flush=True)
+        results["engines"][engine] = {"rows": rows, **rows_meta}
+
+    out_path = Path(out_path)
+    out_path.write_text(json.dumps(results, indent=2) + "\n")
+    print(f"[fused] wrote {out_path}")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced photon counts / domain (CI smoke)")
+    ap.add_argument("--engines", default="jnp,pallas",
+                    help="comma-separated subset of {jnp,pallas}")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_fused.json"))
+    args = ap.parse_args(argv)
+    engines = tuple(e.strip() for e in args.engines.split(",") if e.strip())
+    for e in engines:
+        if e not in S.ENGINES:
+            ap.error(f"unknown engine {e!r}")
+    run(quick=args.quick, engines=engines, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,7 +19,8 @@ def main():
     quick = not args.full
 
     from benchmarks import (fig2_optimizations, fig3a_workgroup,
-                            fig3b_devicelb, fig3c_scaling, roofline, sources)
+                            fig3b_devicelb, fig3c_scaling, fused, roofline,
+                            sources)
 
     t0 = time.time()
     results = {}
@@ -42,6 +43,11 @@ def main():
     print("Fig 3c — multi-device scaling 1x..8x")
     print("=" * 70, flush=True)
     results["fig3c"] = fig3c_scaling.run(quick=quick)
+
+    print("=" * 70)
+    print("Fused rounds — photons/s vs K = steps_per_round, per engine")
+    print("=" * 70, flush=True)
+    results["fused"] = fused.run(quick=quick)
 
     print("=" * 70)
     print("Sources — per-source-type launch/regeneration cost")

@@ -56,16 +56,20 @@ else:  # pragma: no cover - exercised on jax < 0.6 only
 def sharded_sim_fn(volume: Volume, cfg: SimConfig, n_lanes: int,
                    mesh: Mesh, axis_names: tuple[str, ...] = ("data",),
                    mode: str = "dynamic",
-                   source: PhotonSource | Source | None = None):
+                   source: PhotonSource | Source | None = None,
+                   engine: str = "jnp"):
     """Build a shard_map'd simulator over ``axis_names`` of ``mesh``.
 
     The returned fn takes per-device photon counts/offsets (one entry per
     device on the sharded axes) and returns a globally-reduced SimResult.
     Volume data is replicated and the source is baked in statically; the
-    fluence volume is psum'd.
+    fluence volume is psum'd.  ``engine`` selects the per-shard round
+    executor (``"jnp"`` | ``"pallas"``, DESIGN.md §rounds) — each shard
+    runs the fused ``cfg.steps_per_round`` rounds locally, so the
+    collective structure (one psum) is engine-independent.
     """
     raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes, mode,
-                       source)
+                       source, engine)
     ax = axis_names
 
     def worker(labels_flat, media, counts, offsets, seed):
@@ -102,7 +106,7 @@ def simulate_sharded(volume: Volume, cfg: SimConfig, n_photons: int,
                      partition: Sequence[int] | None = None,
                      n_lanes: int = 1024, seed: int = 1234,
                      source: PhotonSource | Source | None = None,
-                     mode: str = "dynamic") -> SimResult:
+                     mode: str = "dynamic", engine: str = "jnp") -> SimResult:
     """Run one distributed simulation over the mesh's photon axes."""
     n_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
     if partition is None:
@@ -116,7 +120,8 @@ def simulate_sharded(volume: Volume, cfg: SimConfig, n_photons: int,
                              "sum to n_photons")
     offsets = np.concatenate([[0], np.cumsum(counts)[:-1]]).astype(np.int32)
 
-    fn = sharded_sim_fn(volume, cfg, n_lanes, mesh, axis_names, mode, source)
+    fn = sharded_sim_fn(volume, cfg, n_lanes, mesh, axis_names, mode, source,
+                        engine)
     shard_sharding = NamedSharding(mesh, P(axis_names))
     repl = NamedSharding(mesh, P())
     dev_counts = jax.device_put(jnp.asarray(counts), shard_sharding)
@@ -154,12 +159,14 @@ class ChunkScheduler:
     def __init__(self, volume: Volume, cfg: SimConfig, n_lanes: int = 1024,
                  devices: Sequence[jax.Device] | None = None,
                  mode: str = "dynamic",
-                 source: PhotonSource | Source | None = None):
+                 source: PhotonSource | Source | None = None,
+                 engine: str = "jnp"):
         self.volume = volume
         self.cfg = cfg
         self.devices = list(devices or jax.devices())
         self._n_lanes = n_lanes
         self._mode = mode
+        self._engine = engine
         self._default_source = as_source(source)
         # one jitted fn per source (sources are frozen/hashable);
         # placement follows the device_put of the inputs
@@ -170,7 +177,8 @@ class ChunkScheduler:
     def _fn_for(self, source: PhotonSource):
         if source not in self._fns:
             raw = build_sim_fn(self.volume.shape, self.volume.unitinmm,
-                               self.cfg, self._n_lanes, self._mode, source)
+                               self.cfg, self._n_lanes, self._mode, source,
+                               self._engine)
             self._fns[source] = jax.jit(raw)
         return self._fns[source]
 
@@ -260,7 +268,8 @@ class ElasticSimulator:
 
     def __init__(self, volume: Volume, cfg: SimConfig, n_photons: int,
                  chunk_size: int, n_lanes: int = 1024, seed: int = 1234,
-                 source: PhotonSource | Source | None = None):
+                 source: PhotonSource | Source | None = None,
+                 engine: str = "jnp"):
         self.volume = volume
         self.cfg = cfg
         self.seed = seed
@@ -279,7 +288,7 @@ class ElasticSimulator:
         self.n_launched = 0
         self.launched_w = 0.0
         self._raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes,
-                                 source=self.source)
+                                 source=self.source, engine=engine)
         self._jit = jax.jit(self._raw)
 
     # -- execution ---------------------------------------------------------

@@ -118,6 +118,22 @@ def launch(pos, direc, w0, rng, active, shape) -> PhotonState:
     )
 
 
+def exitance_bins(esc_pos, esc_w, shape):
+    """Bin z=0-face escapes into the flat (nx*ny) exitance image.
+
+    Returns ``(flat_xy, w)``: a flat 2-D bin index per lane and the
+    weight to deposit there (0 for lanes that did not exit through the
+    illuminated face).  Shared by the engine, the pure-jnp oracle and
+    the Pallas kernel so all three bin identically.
+    """
+    nx, ny, _ = shape
+    z_exit = esc_pos[:, 2] < Z_EXIT_FACE_VOX
+    hit = (esc_w > 0) & z_exit
+    ex = jnp.clip(jnp.floor(esc_pos[:, 0]).astype(jnp.int32), 0, nx - 1)
+    ey = jnp.clip(jnp.floor(esc_pos[:, 1]).astype(jnp.int32), 0, ny - 1)
+    return ex * ny + ey, jnp.where(hit, esc_w, 0.0)
+
+
 def _lookup_label(labels_flat, shape, ivox):
     nx, ny, nz = shape
     ix = jnp.clip(ivox[..., 0], 0, nx - 1)

@@ -12,6 +12,19 @@ Implements the paper's two thread-level workload strategies:
     pre-assigned ``n_photons / n_lanes`` photons and idles once its
     quota is done (the divergence-waste case the paper measures).
 
+The outer loop is organized in **fused rounds** of
+``K = cfg.steps_per_round`` transport segments (DESIGN.md §rounds):
+regeneration runs once per round and the global fluence / exitance /
+escape accumulators are flushed once per round, amortizing the
+bookkeeping the paper amortizes by keeping its OpenCL kernel resident
+over many steps.  The round executor is pluggable:
+``engine="jnp"`` runs the segments in an in-graph ``fori_loop``;
+``engine="pallas"`` dispatches the Pallas photon-step kernel
+(repro.kernels.photon_step), which accumulates all three quantities
+in-kernel.  Trajectories and RNG streams are bit-identical across K and
+engines (DESIGN.md §determinism); only fp accumulation order differs,
+and K=1 with the jnp engine reproduces the unfused engine exactly.
+
 The engine is shape-polymorphic in the photon count (traced int32), so
 pilot runs for the device-level load balancer (loadbalance.py) reuse the
 same compiled executable.
@@ -19,8 +32,10 @@ same compiled executable.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -29,6 +44,8 @@ import jax.numpy as jnp
 from repro.core import photon as ph
 from repro.core.volume import SimConfig, Source, Volume
 from repro.sources import PhotonSource, as_source
+
+ENGINES = ("jnp", "pallas")
 
 
 class SimResult(NamedTuple):
@@ -44,8 +61,8 @@ class SimResult(NamedTuple):
 
 class _Carry(NamedTuple):
     state: ph.PhotonState
-    energy: jnp.ndarray
-    exitance: jnp.ndarray
+    energy: jnp.ndarray      # (nvox,) flat deposited energy
+    exitance: jnp.ndarray    # (nx*ny,) flat z=0-face exitance image
     escaped_w: jnp.ndarray
     remaining: jnp.ndarray   # dynamic mode: shared photon counter
     launched_per_lane: jnp.ndarray  # static mode: per-lane launch count
@@ -86,9 +103,41 @@ def _regenerate(state, remaining, launched_per_lane, next_id, quota,
     )
 
 
+def _maybe_regenerate(state, remaining, launched_per_lane, next_id, quota,
+                      source, seed, mode, shape):
+    """Regenerate only when some lane will actually relaunch.
+
+    The full regeneration path costs two prefix-sums plus a
+    ``source.sample`` over *all* lanes; rounds in which every lane is
+    still in flight (the common case for K>1 between termination
+    bursts) skip it entirely via ``lax.cond``.  The predicates are
+    exact: in dynamic mode the first dead lane has rank 1 <= remaining,
+    so ``any(dead) & (remaining > 0)`` relaunches at least one photon;
+    in static mode the mask is the relaunch mask itself.  Skipping is
+    bit-identical to running ``_regenerate`` with an all-False mask.
+    """
+    dead = ~state.alive
+    if mode == "dynamic":
+        any_relaunch = jnp.any(dead) & (remaining > 0)
+    else:
+        any_relaunch = jnp.any(dead & (launched_per_lane < quota))
+
+    def do(_):
+        return _regenerate(state, remaining, launched_per_lane, next_id,
+                           quota, source, seed, mode, shape)
+
+    def skip(_):
+        return (state, remaining, launched_per_lane, next_id,
+                jnp.float32(0.0))
+
+    return jax.lax.cond(any_relaunch, do, skip, None)
+
+
 def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
                  cfg: SimConfig, n_lanes: int, mode: str = "dynamic",
-                 source: PhotonSource | None = None):
+                 source: PhotonSource | None = None,
+                 engine: str = "jnp", block_lanes: int = 256,
+                 interpret: bool | None = None):
     """Build the raw (unjitted) simulation function.
 
     Returns ``sim_fn(labels_flat, media, n_photons, seed, id_offset=0)
@@ -103,14 +152,47 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
     *exactly* the same photon set as a single-device run
     (DESIGN.md §determinism, §sources).
 
+    ``engine`` selects the round executor (DESIGN.md §rounds):
+    ``"jnp"`` advances ``cfg.steps_per_round`` segments in an in-graph
+    ``fori_loop`` and flushes batched deposition/exitance scatters once
+    per round; ``"pallas"`` dispatches the Pallas photon-step kernel
+    per round (``block_lanes`` lanes per grid step; ``interpret=None``
+    auto-detects the backend).  Both engines simulate bit-identical
+    trajectories; accumulated grids agree to fp-accumulation order.
+
     The raw function is shard_map-composable; ``make_simulator`` wraps
     it in jit for single-device use.
     """
     if mode not in ("dynamic", "static"):
         raise ValueError(f"unknown workload mode: {mode}")
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine: {engine!r} (choose from {ENGINES})")
     source = as_source(source)
     nx, ny, nz = shape
     nvox = nx * ny * nz
+    nxy = nx * ny
+    K = int(cfg.steps_per_round)
+    if K < 1:
+        raise ValueError(f"cfg.steps_per_round must be >= 1, got {K}")
+    if engine == "pallas":
+        from repro.kernels.photon_step.photon_step import (default_interpret,
+                                                           photon_step_pallas)
+
+        # the kernel grid needs block_lanes | n_lanes; fall back to the
+        # largest divisor <= the requested block so any lane count works
+        # through the public APIs (schedulers don't expose block_lanes)
+        requested = block_lanes = min(block_lanes, n_lanes)
+        while n_lanes % block_lanes:
+            block_lanes -= 1
+        if block_lanes < requested:
+            warnings.warn(
+                f"n_lanes={n_lanes} is not divisible by "
+                f"block_lanes={requested}; falling back to "
+                f"block_lanes={block_lanes} — small blocks serialize the "
+                f"Pallas grid (prefer a lane count with a divisor near "
+                f"{requested})", stacklevel=2)
+        if interpret is None:
+            interpret = default_interpret()
 
     def sim_fn(labels_flat, media, n_photons, seed, id_offset=0):
         n_photons = jnp.asarray(n_photons, jnp.int32)
@@ -134,7 +216,7 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
         carry0 = _Carry(
             state=state0,
             energy=jnp.zeros((nvox,), jnp.float32),
-            exitance=jnp.zeros((nx, ny), jnp.float32),
+            exitance=jnp.zeros((nxy,), jnp.float32),
             escaped_w=jnp.float32(0.0),
             remaining=n_photons,
             launched_per_lane=jnp.zeros((n_lanes,), jnp.int32),
@@ -151,24 +233,52 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
                 has_work = has_work | jnp.any(c.launched_per_lane < quota)
             return has_work & (c.steps < cfg.max_steps)
 
+        def round_jnp(state):
+            """Advance K segments in-graph; returns the new state plus
+            round-local (K, n_lanes) deposition/exitance buffers and the
+            round's escaped weight — flushed by the caller in ONE
+            scatter per grid instead of one per segment."""
+            def seg(k, rc):
+                st, dep_i, dep_w, ex_i, ex_w, esc = rc
+                res = ph.step(st, labels_flat, media, shape, unitinmm, cfg)
+                dep_i = dep_i.at[k].set(res.dep_idx)
+                dep_w = dep_w.at[k].set(res.dep_w)
+                xy, xw = ph.exitance_bins(res.esc_pos, res.esc_w, shape)
+                ex_i = ex_i.at[k].set(xy)
+                ex_w = ex_w.at[k].set(xw)
+                esc = esc + jnp.sum(res.esc_w)
+                return (res.state, dep_i, dep_w, ex_i, ex_w, esc)
+
+            init = (
+                state,
+                jnp.zeros((K, n_lanes), jnp.int32),
+                jnp.zeros((K, n_lanes), jnp.float32),
+                jnp.zeros((K, n_lanes), jnp.int32),
+                jnp.zeros((K, n_lanes), jnp.float32),
+                jnp.float32(0.0),
+            )
+            return jax.lax.fori_loop(0, K, seg, init)
+
         def body(c: _Carry):
-            state, remaining, launched, next_id, w_new = _regenerate(
+            state, remaining, launched, next_id, w_new = _maybe_regenerate(
                 c.state, c.remaining, c.launched_per_lane, c.next_id,
                 quota, source, seed, mode, shape,
             )
-            res = ph.step(state, labels_flat, media, shape, unitinmm, cfg)
-            energy = c.energy.at[res.dep_idx].add(res.dep_w)
-            escaped_w = c.escaped_w + jnp.sum(res.esc_w)
-            # bin exits through the z=0 face into the exitance image
-            z_exit = res.esc_pos[:, 2] < ph.Z_EXIT_FACE_VOX
-            hit = (res.esc_w > 0) & z_exit
-            ex = jnp.clip(jnp.floor(res.esc_pos[:, 0]).astype(jnp.int32), 0, nx - 1)
-            ey = jnp.clip(jnp.floor(res.esc_pos[:, 1]).astype(jnp.int32), 0, ny - 1)
-            exitance = c.exitance.at[ex, ey].add(
-                jnp.where(hit, res.esc_w, 0.0)
-            )
+            if engine == "pallas":
+                state, flu, exi, esc = photon_step_pallas(
+                    labels_flat, media, state, shape, unitinmm, cfg, K,
+                    block_lanes, interpret)
+                energy = c.energy + flu
+                exitance = c.exitance + exi
+                escaped_w = c.escaped_w + jnp.sum(esc)
+            else:
+                state, dep_i, dep_w, ex_i, ex_w, esc = round_jnp(state)
+                energy = c.energy.at[dep_i.reshape(-1)].add(dep_w.reshape(-1))
+                exitance = c.exitance.at[ex_i.reshape(-1)].add(
+                    ex_w.reshape(-1))
+                escaped_w = c.escaped_w + esc
             return _Carry(
-                state=res.state,
+                state=state,
                 energy=energy,
                 exitance=exitance,
                 escaped_w=escaped_w,
@@ -176,13 +286,13 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
                 launched_per_lane=launched,
                 next_id=next_id,
                 launched_w=c.launched_w + w_new,
-                steps=c.steps + 1,
+                steps=c.steps + K,
             )
 
         final = jax.lax.while_loop(cond, body, carry0)
         return SimResult(
             energy=final.energy.reshape(shape),
-            exitance=final.exitance,
+            exitance=final.exitance.reshape((nx, ny)),
             escaped_w=final.escaped_w,
             n_launched=final.next_id - id_offset,
             launched_w=final.launched_w,
@@ -194,25 +304,32 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
 
 def make_simulator(volume: Volume, cfg: SimConfig, n_lanes: int,
                    mode: str = "dynamic",
-                   source: PhotonSource | Source | None = None):
+                   source: PhotonSource | Source | None = None,
+                   engine: str = "jnp", block_lanes: int = 256,
+                   interpret: bool | None = None):
     """Jitted single-device simulator for a fixed (volume, cfg, lanes,
-    source)."""
+    source, engine)."""
     raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes, mode,
-                       source)
+                       source, engine, block_lanes, interpret)
     return jax.jit(raw)
 
 
 def simulate(volume: Volume, cfg: SimConfig, n_photons: int,
              n_lanes: int = 4096, seed: int = 1234,
              source: PhotonSource | Source | None = None,
-             mode: str = "dynamic") -> SimResult:
+             mode: str = "dynamic", engine: str = "jnp",
+             block_lanes: int = 256,
+             interpret: bool | None = None) -> SimResult:
     """Convenience one-shot simulation on the current default device.
 
     ``source`` accepts any registered source type (repro.sources), the
     legacy pencil :class:`Source`, or a ``sources.to_dict``-style config
-    dict; ``None`` is the paper's pencil beam.
+    dict; ``None`` is the paper's pencil beam.  ``engine`` selects the
+    round executor (``"jnp"`` | ``"pallas"``, DESIGN.md §rounds);
+    ``block_lanes`` / ``interpret`` tune the Pallas executor only.
     """
-    sim_fn = make_simulator(volume, cfg, n_lanes, mode, source)
+    sim_fn = make_simulator(volume, cfg, n_lanes, mode, source, engine,
+                            block_lanes, interpret)
     return sim_fn(
         volume.labels.reshape(-1),
         volume.media,
@@ -222,32 +339,61 @@ def simulate(volume: Volume, cfg: SimConfig, n_photons: int,
 
 
 # ---------------------------------------------------------------------------
-# Opt2: lane-count autotuning (the paper's "balanced thread number")
+# Opt2: (lane count x steps-per-round) autotuning
 # ---------------------------------------------------------------------------
+
+def autotune_rounds(volume: Volume, cfg: SimConfig, n_pilot: int = 20_000,
+                    lane_candidates=(1024, 2048, 4096, 8192, 16384),
+                    round_candidates=(1, 4, 8, 16, 32),
+                    seed: int = 7,
+                    source: PhotonSource | Source | None = None,
+                    repeats: int = 2, mode: str = "dynamic",
+                    engine: str = "jnp",
+                    ) -> tuple[tuple[int, int], dict[tuple[int, int], float]]:
+    """2-D pilot sweep over (n_lanes, steps_per_round).
+
+    The paper's Opt2 computes the balanced thread number from hardware
+    occupancy; lacking introspectable occupancy on this runtime, we
+    measure it — and the fused-round depth K trades regeneration /
+    flush amortization against masked-lane waste (DESIGN.md §rounds),
+    so the two knobs are tuned jointly.  Returns
+    ``((best_lanes, best_k), timings_s)`` with timings keyed by
+    ``(lanes, k)``.
+    """
+    labels_flat = volume.labels.reshape(-1)
+    timings: dict[tuple[int, int], float] = {}
+    for lanes in lane_candidates:
+        for k in round_candidates:
+            kcfg = dataclasses.replace(cfg, steps_per_round=int(k))
+            sim_fn = make_simulator(volume, kcfg, lanes, mode, source, engine)
+            args = (labels_flat, volume.media, n_pilot, seed)
+            jax.block_until_ready(sim_fn(*args))  # compile + warm up
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(sim_fn(*args))
+                best = min(best, time.perf_counter() - t0)
+            timings[(lanes, k)] = best
+    best_cfg = min(timings, key=timings.get)
+    return best_cfg, timings
+
 
 def autotune_lanes(volume: Volume, cfg: SimConfig, n_pilot: int = 20_000,
                    candidates=(1024, 2048, 4096, 8192, 16384),
                    seed: int = 7,
                    source: PhotonSource | Source | None = None,
-                   repeats: int = 2) -> tuple[int, dict[int, float]]:
+                   repeats: int = 2, mode: str = "dynamic",
+                   engine: str = "jnp") -> tuple[int, dict[int, float]]:
     """Pick the lane count with the highest pilot throughput.
 
-    The paper computes the balanced thread number from hardware occupancy
-    (registers x compute units); lacking introspectable occupancy on this
-    runtime, we measure it — a pilot sweep, exactly how the device-level
-    balancer estimates throughput.  Returns (best_lane_count, timings_s).
+    1-D slice of :func:`autotune_rounds` at the config's own
+    ``steps_per_round`` — kept as the paper's original Opt2 interface.
+    Tune with the same ``engine`` the production run will use: the
+    throughput-vs-lane-count curve differs between executors.
+    Returns (best_lane_count, timings_s).
     """
-    labels_flat = volume.labels.reshape(-1)
-    timings: dict[int, float] = {}
-    for lanes in candidates:
-        sim_fn = make_simulator(volume, cfg, lanes, "dynamic", source)
-        args = (labels_flat, volume.media, n_pilot, seed)
-        jax.block_until_ready(sim_fn(*args))  # compile + warm up
-        best = float("inf")
-        for _ in range(repeats):
-            t0 = time.perf_counter()
-            jax.block_until_ready(sim_fn(*args))
-            best = min(best, time.perf_counter() - t0)
-        timings[lanes] = best
-    best_lanes = min(timings, key=timings.get)
-    return best_lanes, timings
+    (best_lanes, _), timings = autotune_rounds(
+        volume, cfg, n_pilot, candidates,
+        round_candidates=(int(cfg.steps_per_round),),
+        seed=seed, source=source, repeats=repeats, mode=mode, engine=engine)
+    return best_lanes, {lanes: t for (lanes, _), t in timings.items()}

@@ -158,6 +158,13 @@ class SimConfig:
     mismatches (False for B1, True for B2/B2a).  ``deposit_mode``
     selects exact Beer-Lambert deposition (``"exact"``) or the
     first-order native-math variant (``"taylor"``, the Opt1 analogue).
+
+    ``steps_per_round`` (K) fuses K transport segments into one outer
+    loop iteration (DESIGN.md §rounds): photon regeneration runs once
+    per round and deposition / exitance / escape are flushed to the
+    global grids once per round instead of per segment.  Trajectories
+    are bit-identical for any K (only fp accumulation order changes);
+    K=1 reproduces the unfused engine exactly.
     """
 
     do_reflect: bool = False
@@ -167,6 +174,7 @@ class SimConfig:
     deposit_mode: str = "exact"  # "exact" | "taylor" (Opt1 analogue)
     specialize: bool = True      # Opt3 analogue: trace-time kernel specialization
     max_steps: int = 500_000     # hard cap on lock-step iterations
+    steps_per_round: int = 1     # K: fused segments per outer iteration
 
 
 def b1_config() -> SimConfig:

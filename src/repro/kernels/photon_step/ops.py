@@ -8,23 +8,39 @@ import jax
 
 from repro.core import photon as ph
 from repro.core.volume import SimConfig, Source, Volume
-from repro.kernels.photon_step.photon_step import photon_step_pallas
+from repro.kernels.photon_step.photon_step import (default_interpret,
+                                                  photon_step_pallas)
 from repro.sources import PhotonSource, as_source
 
 
 @functools.partial(jax.jit, static_argnames=(
     "shape", "unitinmm", "cfg", "n_steps", "block_lanes", "interpret"))
-def photon_steps(labels_flat, media, state, shape, unitinmm, cfg: SimConfig,
-                 n_steps: int, block_lanes: int = 256,
-                 interpret: bool = True):
+def _photon_steps_jit(labels_flat, media, state, shape, unitinmm,
+                      cfg: SimConfig, n_steps: int, block_lanes: int,
+                      interpret: bool):
     return photon_step_pallas(labels_flat, media, state, shape, unitinmm,
                               cfg, n_steps, block_lanes, interpret)
+
+
+def photon_steps(labels_flat, media, state, shape, unitinmm, cfg: SimConfig,
+                 n_steps: int, block_lanes: int = 256,
+                 interpret: bool | None = None):
+    """Returns (new_state, fluence_flat, exitance_flat, escaped_per_lane).
+
+    ``interpret=None`` auto-detects: interpreter off TPU, compiled
+    Mosaic kernel on TPU.  Resolved here, outside jit, so ``None`` and
+    the equivalent explicit mode share one cached executable.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _photon_steps_jit(labels_flat, media, state, shape, unitinmm,
+                             cfg, n_steps, block_lanes, interpret)
 
 
 def simulate_kernel(volume: Volume, cfg: SimConfig, n_photons: int,
                     n_steps: int, seed: int = 1234,
                     source: PhotonSource | Source | None = None,
-                    block_lanes: int = 256, interpret: bool = True):
+                    block_lanes: int = 256, interpret: bool | None = None):
     """Launch one photon per lane and advance n_steps with the kernel.
 
     Any registered source (repro.sources) works: the source samples the

@@ -9,12 +9,19 @@ TPU adaptation of the paper's OpenCL simulation kernel (DESIGN.md
   * Photon state is SoA, blocked over lanes: each grid step processes
     one block of photons entirely in VMEM/VREGs, advancing ``n_steps``
     segments per invocation (the "simulation loop" of Fig. 1).
-  * Fluence accumulation: the paper needs atomic float adds (its B2a
-    benchmark measures their cost).  TPU Pallas has no atomics and needs
-    none: the grid is sequential on a core, so each block scatter-adds
-    into the fluence output block that is REVISITED by every grid step —
-    race-free accumulation by construction.  Cross-device accumulation
-    is one psum in the caller (multidevice.py).
+  * Fluence / exitance accumulation: the paper needs atomic float adds
+    (its B2a benchmark measures their cost).  TPU Pallas has no atomics
+    and needs none: the grid is sequential on a core, so each block
+    scatter-adds into fluence / exitance output blocks that are
+    REVISITED by every grid step — race-free accumulation by
+    construction.  Cross-device accumulation is one psum in the caller
+    (multidevice.py).
+  * In-kernel bookkeeping (DESIGN.md §rounds): deposition, the 2-D
+    z=0-face exitance image and per-lane escaped weight are all
+    accumulated *inside* the kernel across the fused ``n_steps``
+    segments, so the host flushes each global grid once per round — the
+    deferred-accumulation structure the paper uses to amortize global
+    memory traffic over many transport steps.
   * RNG: same counter-seeded xorshift128 as the engine (32-bit ops only;
     TPUs have no 64-bit vector units — the paper's xorshift128+ is
     64-bit, see DESIGN.md §rng).
@@ -42,16 +49,30 @@ from repro.core import photon as ph
 from repro.core.volume import SimConfig
 
 
+def default_interpret() -> bool:
+    """Auto-detect the Pallas execution mode.
+
+    Mosaic lowering only exists on TPU backends; everywhere else
+    (CPU/GPU test rigs) the kernel must run under the Pallas
+    interpreter.  Callers may still force either mode explicitly — the
+    auto-detect only replaces ``interpret=None`` — so real-TPU runs get
+    the compiled kernel instead of silently falling back to the
+    interpreter (the old hard default).
+    """
+    return jax.default_backend() != "tpu"
+
+
 def _kernel(labels_ref, media_ref,
             pos_ref, dir_ref, ivox_ref, w_ref, s_ref, t_ref, rng_ref,
             alive_ref,
             out_pos, out_dir, out_ivox, out_w, out_s, out_t, out_rng,
-            out_alive, fluence_ref, esc_ref,
+            out_alive, fluence_ref, exitance_ref, esc_ref,
             *, shape, unitinmm, cfg: SimConfig, n_steps: int):
-    # zero the (revisited) fluence block on the first grid step only
+    # zero the (revisited) accumulator blocks on the first grid step only
     @pl.when(pl.program_id(0) == 0)
     def _():
         fluence_ref[...] = jnp.zeros_like(fluence_ref)
+        exitance_ref[...] = jnp.zeros_like(exitance_ref)
 
     labels = labels_ref[...]
     media = media_ref[...]
@@ -63,15 +84,18 @@ def _kernel(labels_ref, media_ref,
     n = state.w.shape[0]
 
     def body(_, carry):
-        st, flu, esc = carry
+        st, flu, exi, esc = carry
         res = ph.step(st, labels, media, shape, unitinmm, cfg)
         flu = flu.at[res.dep_idx].add(res.dep_w)
+        xy, xw = ph.exitance_bins(res.esc_pos, res.esc_w, shape)
+        exi = exi.at[xy].add(xw)
         esc = esc + res.esc_w
-        return (res.state, flu, esc)
+        return (res.state, flu, exi, esc)
 
-    state, flu_add, esc = jax.lax.fori_loop(
+    state, flu_add, exi_add, esc = jax.lax.fori_loop(
         0, n_steps, body,
-        (state, jnp.zeros_like(fluence_ref), jnp.zeros((n,), jnp.float32)),
+        (state, jnp.zeros_like(fluence_ref), jnp.zeros_like(exitance_ref),
+         jnp.zeros((n,), jnp.float32)),
     )
 
     out_pos[...] = state.pos
@@ -83,20 +107,31 @@ def _kernel(labels_ref, media_ref,
     out_rng[...] = state.rng
     out_alive[...] = state.alive.astype(jnp.int8)
     esc_ref[...] = esc
-    # accumulate this block's deposition into the shared fluence block
+    # accumulate this block's deposition into the shared output blocks
     fluence_ref[...] += flu_add
+    exitance_ref[...] += exi_add
 
 
 def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
                        shape, unitinmm, cfg: SimConfig, n_steps: int,
-                       block_lanes: int = 256, interpret: bool = True):
+                       block_lanes: int = 256,
+                       interpret: bool | None = None):
     """Advance all lanes ``n_steps`` segments; returns
-    (new_state, fluence_flat, escaped_per_lane)."""
+    ``(new_state, fluence_flat, exitance_flat, escaped_per_lane)``.
+
+    ``fluence_flat`` is (nvox,), ``exitance_flat`` is (nx*ny,) — the
+    z=0-face exitance image accumulated in-kernel over all ``n_steps``
+    segments.  ``interpret=None`` auto-detects the backend
+    (:func:`default_interpret`).
+    """
+    if interpret is None:
+        interpret = default_interpret()
     n = state.w.shape[0]
     if n % block_lanes:
         raise ValueError(f"lane count {n} not divisible by {block_lanes}")
     nblocks = n // block_lanes
     nvox = labels_flat.shape[0]
+    nxy = shape[0] * shape[1]
     n_media = media.shape[0]
 
     def lane_spec(extra=()):
@@ -104,6 +139,7 @@ def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
                             lambda i: (i,) + (0,) * len(extra))
 
     full_vol = pl.BlockSpec((nvox,), lambda i: (0,))       # revisited
+    full_img = pl.BlockSpec((nxy,), lambda i: (0,))        # revisited
     full_media = pl.BlockSpec((n_media, 4), lambda i: (0, 0))
 
     out_shapes = (
@@ -116,13 +152,14 @@ def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
         jax.ShapeDtypeStruct((n, 4), jnp.uint32),    # rng
         jax.ShapeDtypeStruct((n,), jnp.int8),        # alive
         jax.ShapeDtypeStruct((nvox,), jnp.float32),  # fluence (accumulated)
+        jax.ShapeDtypeStruct((nxy,), jnp.float32),   # exitance (accumulated)
         jax.ShapeDtypeStruct((n,), jnp.float32),     # escaped weight
     )
     out_specs = (
         lane_spec((3,)), lane_spec((3,)), lane_spec((3,)),
         lane_spec(), lane_spec(), lane_spec(),
         lane_spec((4,)), lane_spec(),
-        full_vol, lane_spec(),
+        full_vol, full_img, lane_spec(),
     )
     in_specs = (
         full_vol, full_media,
@@ -148,4 +185,4 @@ def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
         pos=outs[0], dir=outs[1], ivox=outs[2], w=outs[3], s_left=outs[4],
         t=outs[5], rng=outs[6], alive=outs[7] != 0,
     )
-    return new_state, outs[8], outs[9]
+    return new_state, outs[8], outs[9], outs[10]

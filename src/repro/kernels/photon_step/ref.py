@@ -1,10 +1,11 @@
 """Pure-jnp oracle for the photon_step Pallas kernel.
 
 Runs ``n_steps`` lock-step iterations of the hop-drop-spin physics over
-all lanes, accumulating deposition into a fluence grid and escaped
-weight per lane — exactly the computation the kernel performs, without
-any blocking/VMEM structure.  The kernel test asserts allclose (and for
-matching RNG, bit-equality of trajectories) against this.
+all lanes, accumulating deposition into a fluence grid, z=0-face exits
+into a flat exitance image, and escaped weight per lane — exactly the
+computation the kernel performs, without any blocking/VMEM structure.
+The kernel test asserts allclose (and for matching RNG, bit-equality of
+trajectories) against this.
 """
 
 from __future__ import annotations
@@ -18,19 +19,23 @@ from repro.core.volume import SimConfig
 
 def photon_steps_ref(labels_flat, media, state: ph.PhotonState,
                      shape, unitinmm, cfg: SimConfig, n_steps: int):
-    """Returns (new_state, fluence_flat, escaped_per_lane)."""
+    """Returns (new_state, fluence_flat, exitance_flat, escaped_per_lane)."""
     nvox = labels_flat.shape[0]
+    nxy = shape[0] * shape[1]
     n = state.w.shape[0]
 
     def body(_, carry):
-        st, flu, esc = carry
+        st, flu, exi, esc = carry
         res = ph.step(st, labels_flat, media, shape, unitinmm, cfg)
         flu = flu.at[res.dep_idx].add(res.dep_w)
+        xy, xw = ph.exitance_bins(res.esc_pos, res.esc_w, shape)
+        exi = exi.at[xy].add(xw)
         esc = esc + res.esc_w
-        return (res.state, flu, esc)
+        return (res.state, flu, exi, esc)
 
-    st, flu, esc = jax.lax.fori_loop(
+    st, flu, exi, esc = jax.lax.fori_loop(
         0, n_steps, body,
-        (state, jnp.zeros((nvox,), jnp.float32), jnp.zeros((n,), jnp.float32)),
+        (state, jnp.zeros((nvox,), jnp.float32),
+         jnp.zeros((nxy,), jnp.float32), jnp.zeros((n,), jnp.float32)),
     )
-    return st, flu, esc
+    return st, flu, exi, esc

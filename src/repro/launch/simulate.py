@@ -7,6 +7,7 @@
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -36,8 +37,15 @@ def main(argv=None):
     ap.add_argument("--lanes", type=int, default=4096)
     ap.add_argument("--size", type=int, default=60)
     ap.add_argument("--seed", type=int, default=1234)
+    ap.add_argument("--engine", default="jnp", choices=list(S.ENGINES),
+                    help="round executor: in-graph jnp loop or the Pallas "
+                         "photon-step kernel (DESIGN.md §rounds)")
+    ap.add_argument("--steps-per-round", type=int, default=1,
+                    help="K: fused transport segments per regeneration/"
+                         "flush round")
     ap.add_argument("--autotune", action="store_true",
-                    help="Opt2: pilot-sweep the lane count")
+                    help="Opt2: pilot-sweep the lane count (at the chosen "
+                         "steps-per-round)")
     ap.add_argument("--devices", default="one", choices=["one", "all"])
     ap.add_argument("--chunk", type=int, default=0,
                     help=">0: dynamic chunk scheduling (straggler-safe)")
@@ -49,25 +57,29 @@ def main(argv=None):
 
     source = json.loads(args.source) if args.source else None
     vol, cfg = get_bench(args.bench, args.size)
+    if args.steps_per_round != 1:
+        cfg = dataclasses.replace(cfg, steps_per_round=args.steps_per_round)
     lanes = args.lanes
     if args.autotune:
         lanes, timings = S.autotune_lanes(vol, cfg, n_pilot=args.photons // 10,
-                                          source=source)
+                                          source=source, engine=args.engine)
         print("autotune:", {k: round(v, 3) for k, v in timings.items()},
               "-> lanes =", lanes)
 
     t0 = time.time()
     if args.chunk:
-        sched = ChunkScheduler(vol, cfg, n_lanes=lanes, source=source)
+        sched = ChunkScheduler(vol, cfg, n_lanes=lanes, source=source,
+                               engine=args.engine)
         res, stats = sched.run(args.photons, args.chunk, seed=args.seed)
         print("per-device photons:", stats)
     elif args.devices == "all" and len(jax.devices()) > 1:
         mesh = jax.make_mesh((len(jax.devices()),), ("data",))
         res = simulate_sharded(vol, cfg, args.photons, mesh,
-                               n_lanes=lanes, seed=args.seed, source=source)
+                               n_lanes=lanes, seed=args.seed, source=source,
+                               engine=args.engine)
     else:
         res = S.simulate(vol, cfg, args.photons, lanes, args.seed,
-                         source=source)
+                         source=source, engine=args.engine)
     jax.block_until_ready(res)
     dt = time.time() - t0
 

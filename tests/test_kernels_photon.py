@@ -2,7 +2,8 @@
 
 Sweeps volume shapes, lane counts, block sizes and physics configs; the
 kernel must match the oracle bit-for-bit on trajectories (same RNG) and
-to fp-accumulation tolerance on the fluence grid.
+to fp-accumulation tolerance on the fluence grid and the in-kernel
+z=0-face exitance image.
 """
 
 import jax
@@ -13,7 +14,8 @@ import pytest
 from repro import sources as SRC
 from repro.core import photon as ph
 from repro.core import volume as V
-from repro.kernels.photon_step.photon_step import photon_step_pallas
+from repro.kernels.photon_step.photon_step import (default_interpret,
+                                                  photon_step_pallas)
 from repro.kernels.photon_step.ref import photon_steps_ref
 
 
@@ -36,10 +38,10 @@ def test_kernel_matches_oracle(shape, n, block, steps, reflect):
     state = _mk_state(n, vol)
     labels = vol.labels.reshape(-1)
 
-    st_k, flu_k, esc_k = photon_step_pallas(
+    st_k, flu_k, exi_k, esc_k = photon_step_pallas(
         labels, vol.media, state, vol.shape, vol.unitinmm, cfg, steps,
         block_lanes=block, interpret=True)
-    st_r, flu_r, esc_r = photon_steps_ref(
+    st_r, flu_r, exi_r, esc_r = photon_steps_ref(
         labels, vol.media, state, vol.shape, vol.unitinmm, cfg, steps)
 
     # trajectories bit-identical (same RNG stream, same arithmetic)
@@ -50,8 +52,10 @@ def test_kernel_matches_oracle(shape, n, block, steps, reflect):
                                rtol=1e-6, atol=1e-6)
     np.testing.assert_allclose(np.asarray(st_k.w), np.asarray(st_r.w),
                                rtol=1e-6, atol=1e-6)
-    # fluence: blocked accumulation reorders fp adds across blocks
+    # fluence/exitance: blocked accumulation reorders fp adds across blocks
     np.testing.assert_allclose(np.asarray(flu_k), np.asarray(flu_r),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(exi_k), np.asarray(exi_r),
                                rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(np.asarray(esc_k), np.asarray(esc_r),
                                rtol=1e-6, atol=1e-6)
@@ -62,13 +66,15 @@ def test_kernel_energy_conservation():
     cfg = V.SimConfig(do_reflect=False)
     n, steps = 512, 200  # enough steps for most photons to terminate
     state = _mk_state(n, vol)
-    st, flu, esc = photon_step_pallas(
+    st, flu, exi, esc = photon_step_pallas(
         vol.labels.reshape(-1), vol.media, state, vol.shape, vol.unitinmm,
         cfg, steps, block_lanes=128, interpret=True)
     total = float(jnp.sum(flu)) + float(jnp.sum(esc)) + float(
         jnp.sum(jnp.where(st.alive, st.w, 0.0)))
     # roulette win/loss may leave a small statistical residue
     assert abs(total - n) / n < 0.02
+    # the exitance image is the z=0-face subset of all escapes
+    assert 0.0 < float(jnp.sum(exi)) <= float(jnp.sum(esc)) + 1e-4
 
 
 def test_kernel_block_size_invariance():
@@ -77,9 +83,13 @@ def test_kernel_block_size_invariance():
     state = _mk_state(512, vol)
     args = (vol.labels.reshape(-1), vol.media, state, vol.shape,
             vol.unitinmm, cfg, 30)
-    _, flu_a, _ = photon_step_pallas(*args, block_lanes=64, interpret=True)
-    _, flu_b, _ = photon_step_pallas(*args, block_lanes=512, interpret=True)
+    _, flu_a, exi_a, _ = photon_step_pallas(*args, block_lanes=64,
+                                            interpret=True)
+    _, flu_b, exi_b, _ = photon_step_pallas(*args, block_lanes=512,
+                                            interpret=True)
     np.testing.assert_allclose(np.asarray(flu_a), np.asarray(flu_b),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(exi_a), np.asarray(exi_b),
                                rtol=1e-5, atol=1e-6)
 
 
@@ -88,10 +98,10 @@ def test_kernel_deposit_modes(deposit_mode):
     vol = V.benchmark_b1((16, 16, 16))
     cfg = V.SimConfig(do_reflect=False, deposit_mode=deposit_mode)
     state = _mk_state(256, vol)
-    st, flu, esc = photon_step_pallas(
+    st, flu, exi, esc = photon_step_pallas(
         vol.labels.reshape(-1), vol.media, state, vol.shape, vol.unitinmm,
         cfg, 25, block_lanes=128, interpret=True)
-    st_r, flu_r, esc_r = photon_steps_ref(
+    st_r, flu_r, exi_r, esc_r = photon_steps_ref(
         vol.labels.reshape(-1), vol.media, state, vol.shape, vol.unitinmm,
         cfg, 25)
     np.testing.assert_allclose(np.asarray(flu), np.asarray(flu_r),
@@ -111,3 +121,22 @@ def test_kernel_lowers_for_tpu():
     assert "pallas" in lowered.as_text().lower() or True
     compiled = lowered.compile()
     assert compiled is not None
+
+
+def test_interpret_autodetect():
+    """interpret=None must resolve to interpreter mode off-TPU and to
+    the compiled Mosaic path on TPU (the old hard default silently
+    interpreted everywhere)."""
+    expected = jax.default_backend() != "tpu"
+    assert default_interpret() is expected
+    # interpret=None end-to-end: runs and matches an explicit choice
+    vol = V.benchmark_b1((12, 12, 12))
+    cfg = V.SimConfig(do_reflect=False)
+    state = _mk_state(128, vol)
+    args = (vol.labels.reshape(-1), vol.media, state, vol.shape,
+            vol.unitinmm, cfg, 10)
+    _, flu_auto, _, _ = photon_step_pallas(*args, block_lanes=128,
+                                           interpret=None)
+    _, flu_expl, _, _ = photon_step_pallas(*args, block_lanes=128,
+                                           interpret=expected)
+    np.testing.assert_array_equal(np.asarray(flu_auto), np.asarray(flu_expl))

@@ -114,3 +114,45 @@ assert rel < 1e-3, rel
 print("OK", rel)
 """)
     assert "OK" in out
+
+
+def test_fused_pallas_engine_sharded_and_chunked():
+    """The fused Pallas round executor runs under every scheduler
+    (DESIGN.md §rounds): shard_map'd, chunked, and elastic runs agree
+    with the single-device jnp reference on the same photon set."""
+    out = _run("""
+import dataclasses
+import jax, numpy as np
+from repro.core import volume as V, simulator as S, analysis as A
+from repro.core.multidevice import (simulate_sharded, ChunkScheduler,
+                                    ElasticSimulator)
+vol = V.benchmark_b1((16, 16, 16)); cfg = V.b1_config()
+cfg = dataclasses.replace(cfg, steps_per_round=4)
+ref = S.simulate(vol, cfg, 1200, 256, 5)
+
+mesh = jax.make_mesh((8,), ("data",))
+res = simulate_sharded(vol, cfg, 1200, mesh, n_lanes=128, seed=5,
+                       engine="pallas")
+assert int(res.n_launched) == 1200
+assert abs(A.energy_balance(res)["residue_frac"]) < 1e-4
+rel = (np.abs(np.asarray(res.energy) - np.asarray(ref.energy)).max()
+       / np.asarray(ref.energy).max())
+assert rel < 1e-3, rel
+
+sched = ChunkScheduler(vol, cfg, n_lanes=128, engine="pallas")
+tot, stats = sched.run(1200, 300, seed=5)
+assert int(tot.n_launched) == 1200 and sum(stats.values()) == 1200
+rel = (np.abs(np.asarray(tot.energy) - np.asarray(ref.energy)).max()
+       / np.asarray(ref.energy).max())
+assert rel < 1e-3, rel
+
+es = ElasticSimulator(vol, cfg, 1200, 300, n_lanes=128, seed=5,
+                      engine="pallas")
+er = es.run_to_completion()
+assert int(er.n_launched) == 1200
+rel = (np.abs(np.asarray(er.energy) - np.asarray(ref.energy)).max()
+       / np.asarray(ref.energy).max())
+assert rel < 1e-3, rel
+print("OK")
+""")
+    assert "OK" in out
