@@ -20,7 +20,7 @@ def main():
 
     from benchmarks import (fig2_optimizations, fig3a_workgroup,
                             fig3b_devicelb, fig3c_scaling, fused, roofline,
-                            sources)
+                            sources, timegates)
 
     t0 = time.time()
     results = {}
@@ -48,6 +48,11 @@ def main():
     print("Fused rounds — photons/s vs K = steps_per_round, per engine")
     print("=" * 70, flush=True)
     results["fused"] = fused.run(quick=quick)
+
+    print("=" * 70)
+    print("Time gates — photons/s vs n_time_gates, per engine")
+    print("=" * 70, flush=True)
+    results["timegates"] = timegates.run(quick=quick)
 
     print("=" * 70)
     print("Sources — per-source-type launch/regeneration cost")

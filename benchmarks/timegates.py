@@ -1,0 +1,133 @@
+"""Time-gated recording overhead: photons/s across gate counts.
+
+Measures the cost of widening the fluence accumulator from the CW
+``(nvox,)`` grid to the gate-major ``(nvox * ntg,)`` time-resolved grid
+(DESIGN.md §time-resolved) for both round executors on the pencil-beam
+B1 benchmark, and writes a machine-readable ``BENCH_timegates.json`` at
+the repo root: the gate-count overhead trajectory tracked per PR by CI
+alongside ``BENCH_fused.json``.
+
+  PYTHONPATH=src python -m benchmarks.timegates [--quick] [--engines jnp]
+
+Every row also cross-checks physics: the gate-summed fluence of the
+ntg>1 run must match the CW run of the same photon set (the runs
+simulate the identical id-keyed photon set, so only fp accumulation
+order differs).  The full (non-quick) sweep runs the acceptance-size
+60^3 B1 volume up to ntg=32.
+
+Note on the Pallas numbers off-TPU: the kernel auto-detects the backend
+and runs under the Pallas *interpreter* on CPU/GPU (correctness rig,
+not a perf path), so off-TPU the jnp engine rows are the meaningful
+overhead trajectory.  ``meta.interpreted_pallas`` records which mode
+ran.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import platform
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.common import get_bench, time_sim
+from repro.core import analysis as An
+from repro.core import simulator as S
+from repro.core.volume import SimConfig
+from repro.kernels.photon_step.photon_step import default_interpret
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+GATES = (1, 4, 16, 32)
+
+
+def run(quick=False, engines=("jnp", "pallas"), gates=GATES,
+        out_path: Path | str = REPO_ROOT / "BENCH_timegates.json"):
+    size = 24 if quick else 60
+    vol, phys = get_bench("B1", size)
+    cfg0 = SimConfig(do_reflect=phys["do_reflect"], steps_per_round=4)
+    interpreted = default_interpret()
+    jnp_load = (6_000, 1024) if quick else (40_000, 4096)
+    workload = {
+        "jnp": jnp_load,
+        "pallas": (1_500, 512) if interpreted else jnp_load,
+    }
+
+    results: dict = {
+        "meta": {
+            "bench": "B1-pencil",
+            "size": size,
+            "quick": quick,
+            "steps_per_round": cfg0.steps_per_round,
+            "backend": jax.default_backend(),
+            "interpreted_pallas": interpreted,
+            "jax": jax.__version__,
+            "machine": platform.machine(),
+            "gates": list(gates),
+        },
+        "engines": {},
+    }
+    for engine in engines:
+        n_photons, lanes = workload[engine]
+        rows = {}
+        cw_energy = None
+        for ntg in gates:
+            cfg = dataclasses.replace(cfg0, n_time_gates=int(ntg))
+            secs = time_sim(vol, cfg, n_photons, lanes, engine=engine,
+                            repeats=2 if quick else 3)
+            # physics cross-check: gate-summed fluence matches CW
+            res = S.simulate(vol, cfg, n_photons, lanes, seed=11,
+                             engine=engine)
+            energy = np.asarray(res.energy)
+            gate_summed = energy if ntg == 1 else energy.sum(axis=-1)
+            if cw_energy is None:
+                cw_energy = gate_summed
+            max_rel = float(
+                np.abs(gate_summed - cw_energy).max()
+                / max(cw_energy.max(), 1e-20))
+            assert max_rel < 1e-3, (engine, ntg, max_rel)
+            rows[str(ntg)] = {
+                "seconds": secs,
+                "photons_per_s": n_photons / secs,
+                "gate_sum_max_rel_err_vs_cw": max_rel,
+            }
+            print(f"[timegates] {engine:6s} ntg={ntg:3d}: "
+                  f"{n_photons / secs / 1e3:8.2f} photons/ms "
+                  f"({secs * 1e3:.1f} ms, gate-sum err {max_rel:.1e})",
+                  flush=True)
+        base = rows[str(min(int(g) for g in rows))]["photons_per_s"]
+        worst = min(rows.values(), key=lambda r: r["photons_per_s"])
+        rows_meta = {
+            "n_photons": n_photons,
+            "lanes": lanes,
+            "max_overhead_vs_cw": base / worst["photons_per_s"],
+        }
+        print(f"[timegates] {engine}: worst gate-count overhead "
+              f"{rows_meta['max_overhead_vs_cw']:.3f}x vs CW", flush=True)
+        results["engines"][engine] = {"rows": rows, **rows_meta}
+
+    out_path = Path(out_path)
+    out_path.write_text(json.dumps(results, indent=2) + "\n")
+    print(f"[timegates] wrote {out_path}")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced photon counts / domain (CI smoke)")
+    ap.add_argument("--engines", default="jnp,pallas",
+                    help="comma-separated subset of {jnp,pallas}")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_timegates.json"))
+    args = ap.parse_args(argv)
+    engines = tuple(e.strip() for e in args.engines.split(",") if e.strip())
+    for e in engines:
+        if e not in S.ENGINES:
+            ap.error(f"unknown engine {e!r}")
+    run(quick=args.quick, engines=engines, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

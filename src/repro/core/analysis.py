@@ -2,12 +2,14 @@
 
 ``fluence_cw`` reproduces MCX's normalization: the continuous-wave
 fluence distribution is the deposited energy divided by
-(mua * voxel volume * photons launched).  The validation helpers are
-used both by tests and by EXPERIMENTS.md to check the reproduction
-against physics ground truth (energy conservation; effective
-attenuation mu_eff = sqrt(3 mua (mua + mus'))) rather than against
-vendor-specific wall-clock numbers, which do not transfer across
-hardware.
+(mua * voxel volume * photons launched); for a time-resolved run it is
+the gate-sum of ``fluence_td``.  ``tpsf`` extracts detector
+time-point-spread functions from the capture histograms
+(DESIGN.md §time-resolved).  The validation helpers are used both by
+tests and by EXPERIMENTS.md to check the reproduction against physics
+ground truth (energy conservation; effective attenuation
+mu_eff = sqrt(3 mua (mua + mus'))) rather than against vendor-specific
+wall-clock numbers, which do not transfer across hardware.
 """
 
 from __future__ import annotations
@@ -16,38 +18,117 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.simulator import SimResult
-from repro.core.volume import Volume
+from repro.core.volume import SimConfig, Volume
+
+
+def fluence_td(result: SimResult, volume: Volume) -> jnp.ndarray:
+    """Time-resolved fluence per gate (1/mm^2 per unit launched weight).
+
+    Returns ``(nx, ny, nz, ntg)``; a CW result (3-D ``energy``) is
+    treated as a single all-covering gate, so ``fluence_td(...).sum(-1)``
+    is ``fluence_cw`` for every gate count.  The per-gate normalization
+    is the same as CW (the gate axis partitions deposition, it does not
+    rescale it); divide by ``cfg.gate_width_ns`` for a fluence *rate*.
+    """
+    energy = result.energy
+    if energy.ndim == 3:
+        energy = energy[..., None]
+    labels = volume.labels.astype(jnp.int32)
+    mua = volume.media[:, 0][labels]  # (nx, ny, nz), 1/mm
+    vvox = volume.unitinmm**3
+    denom = jnp.maximum(mua * vvox * result.launched_w, 1e-20)
+    return jnp.where((mua > 0)[..., None], energy / denom[..., None], 0.0)
 
 
 def fluence_cw(result: SimResult, volume: Volume) -> jnp.ndarray:
     """CW fluence (1/mm^2 per unit launched weight) from deposited energy.
 
-    Normalizes by ``launched_w`` rather than the photon count so weighted
-    launches (e.g. Planar pattern sources, w0 != 1) stay correctly scaled;
-    the two coincide for unit-weight sources.
+    The gate-sum of :func:`fluence_td` (bit-equal by construction, so
+    time-resolved and CW runs share one normalization path).  Normalizes
+    by ``launched_w`` rather than the photon count so weighted launches
+    (e.g. Planar pattern sources, w0 != 1) stay correctly scaled; the
+    two coincide for unit-weight sources.
     """
-    labels = volume.labels.astype(jnp.int32)
-    mua = volume.media[:, 0][labels]  # (nx, ny, nz), 1/mm
-    vvox = volume.unitinmm**3
-    denom = jnp.maximum(mua * vvox * result.launched_w, 1e-20)
-    return jnp.where(mua > 0, result.energy / denom, 0.0)
+    return fluence_td(result, volume).sum(axis=-1)
+
+
+def gate_times_ns(cfg: SimConfig) -> np.ndarray:
+    """Gate-center times (ns) of the ``cfg.n_time_gates`` TPSF bins."""
+    gw = cfg.gate_width_ns
+    return (np.arange(cfg.n_time_gates) + 0.5) * gw
+
+
+def tpsf(result: SimResult, cfg: SimConfig) -> tuple[np.ndarray, np.ndarray]:
+    """Detector time-point-spread functions from the capture histogram.
+
+    Returns ``(times_ns, tpsf)`` with ``times_ns`` the (ntg,)
+    gate-center times and ``tpsf`` the (n_det, ntg) detected weight per
+    unit launched weight per ns — the quantity diffuse-optics fits
+    compare against analytic TPSF models.
+    """
+    det_w = np.asarray(result.det_w, np.float64)
+    if det_w.size and det_w.shape[1] != cfg.n_time_gates:
+        raise ValueError(
+            f"result has {det_w.shape[1]} gates but cfg.n_time_gates="
+            f"{cfg.n_time_gates}")
+    norm = max(float(result.launched_w), 1e-20) * cfg.gate_width_ns
+    return gate_times_ns(cfg), det_w / norm
+
+
+def detector_mean_ppath(result: SimResult) -> np.ndarray:
+    """Mean per-medium partial pathlength (mm) of detected photons.
+
+    (n_det, n_media); weight-weighted mean (MCX's convention for
+    detected-photon statistics).  Rows of detectors that caught nothing
+    are zero.
+    """
+    det_ppath = np.asarray(result.det_ppath, np.float64)
+    tot_w = np.asarray(result.det_w, np.float64).sum(axis=1, keepdims=True)
+    return np.where(tot_w > 0, det_ppath / np.maximum(tot_w, 1e-20), 0.0)
+
+
+def rescale_detected(result: SimResult, volume: Volume,
+                     new_mua: np.ndarray) -> np.ndarray:
+    """First-order absorption re-scaling of detected weight.
+
+    Given per-medium absorption coefficients ``new_mua`` (1/mm, one per
+    media-table row), estimates each detector's total detected weight
+    under the perturbed absorption without re-simulating, using the
+    mean partial pathlengths:  w' = w * exp(-sum_m dmua_m * <L_m>).
+    Exact for a single detected path; first-order in the path spread
+    otherwise (the classic white-Monte-Carlo rescaling).
+    Returns (n_det,) rescaled detected weight.
+    """
+    new_mua = np.asarray(new_mua, np.float64)
+    old_mua = np.asarray(volume.media, np.float64)[:, 0]
+    if new_mua.shape != old_mua.shape:
+        raise ValueError(f"new_mua must have shape {old_mua.shape}")
+    mean_l = detector_mean_ppath(result)            # (n_det, n_media)
+    tot_w = np.asarray(result.det_w, np.float64).sum(axis=1)
+    return tot_w * np.exp(-mean_l @ (new_mua - old_mua))
 
 
 def energy_balance(result: SimResult) -> dict[str, float]:
-    """Launched = absorbed + escaped (+ roulette/time-gate residue).
+    """Launched = absorbed + escaped + timed_out (+ roulette residue).
 
-    Russian roulette is unbiased in expectation, so the balance holds
-    statistically; the residue reported here quantifies it.
+    ``timed_out`` is the weight retired deterministically by the
+    ``tmax_ns`` time gate and the ``max_steps`` cap — reported as its
+    own line so ``residue_frac`` only measures the *statistical*
+    Russian-roulette residue (unbiased in expectation), i.e. genuine
+    conservation error.
     """
     absorbed = float(jnp.sum(result.energy))
     escaped = float(result.escaped_w)
     launched = float(result.launched_w)
+    timed_out = float(result.timed_out_w)
+    residue = launched - absorbed - escaped - timed_out
     return {
         "launched": launched,
         "absorbed": absorbed,
         "escaped": escaped,
-        "residue": launched - absorbed - escaped,
-        "residue_frac": (launched - absorbed - escaped) / max(launched, 1.0),
+        "timed_out": timed_out,
+        "residue": residue,
+        "residue_frac": residue / max(launched, 1.0),
     }
 
 
@@ -67,13 +148,20 @@ def fit_axial_decay(result: SimResult, volume: Volume,
     free path, the equivalent isotropic source depth).  We therefore fit
     ln(Phi * r) vs z; without the 1/r correction the slope is inflated by
     ~1/z.  ``axis_xy`` is the beam axis in voxel coordinates (defaults to
-    the volume center).
+    the volume center); the on-axis averaging neighborhood is clamped to
+    the volume, so beams within 2 voxels of an edge average a smaller
+    patch instead of silently wrapping through a negative slice start.
     """
     phi = np.asarray(fluence_cw(result, volume))
     nx, ny, _ = volume.shape
-    # average a small on-axis neighborhood to reduce variance
+    # average a small on-axis neighborhood to reduce variance, clamped so
+    # an off-center beam axis never produces an empty or wrapped slice
     cx, cy = axis_xy if axis_xy is not None else (nx // 2, ny // 2)
-    line = phi[cx - 2 : cx + 3, cy - 2 : cy + 3, :].mean(axis=(0, 1))
+    if not (0 <= cx < nx and 0 <= cy < ny):
+        raise ValueError(f"axis_xy {(cx, cy)} outside volume {(nx, ny)}")
+    x0, x1 = max(cx - 2, 0), min(cx + 3, nx)
+    y0, y1 = max(cy - 2, 0), min(cy + 3, ny)
+    line = phi[x0:x1, y0:y1, :].mean(axis=(0, 1))
     z0, z1 = z_range
     zs = (np.arange(z0, z1) + 0.5) * volume.unitinmm
     labels = np.asarray(volume.labels)

@@ -48,6 +48,14 @@ def fit_pilot(ns: Sequence[float], times: Sequence[float], name: str = "dev",
     """Fit T = a*n + T0.  Two points reproduce the paper; more -> lstsq."""
     if len(ns) != len(times) or len(ns) < 2:
         raise ValueError("need >= 2 pilot (n, time) pairs")
+    if len(set(ns)) < 2:
+        # a degenerate design (all pilot sizes equal) cannot fit a slope:
+        # the two-point path would divide by zero and hand an inf/NaN
+        # device model to partition_s3, whose bisection then never
+        # converges — fail loudly at the fit instead
+        raise ValueError(
+            f"pilot sizes must contain at least two distinct photon "
+            f"counts to fit a slope, got {list(ns)}")
     if len(ns) == 2:
         (n1, n2), (t1, t2) = ns, times
         a = (t2 - t1) / (n2 - n1)

@@ -35,6 +35,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.loadbalance import DeviceModel, partition_s2
 from repro.core.simulator import SimResult, build_sim_fn
 from repro.core.volume import SimConfig, Source, Volume
+from repro.detectors import as_detectors
 from repro.sources import PhotonSource, as_source
 
 # jax >= 0.6 exposes shard_map at the top level (vma type check); older
@@ -57,38 +58,40 @@ def sharded_sim_fn(volume: Volume, cfg: SimConfig, n_lanes: int,
                    mesh: Mesh, axis_names: tuple[str, ...] = ("data",),
                    mode: str = "dynamic",
                    source: PhotonSource | Source | None = None,
-                   engine: str = "jnp"):
+                   engine: str = "jnp", detectors=None):
     """Build a shard_map'd simulator over ``axis_names`` of ``mesh``.
 
     The returned fn takes per-device photon counts/offsets (one entry per
     device on the sharded axes) and returns a globally-reduced SimResult.
-    Volume data is replicated and the source is baked in statically; the
-    fluence volume is psum'd.  ``engine`` selects the per-shard round
+    Volume data is replicated and the source / detector configs are baked
+    in statically; the fluence volume (time-gated when
+    ``cfg.n_time_gates > 1``), the detector TPSF histograms and the
+    scalar accounting are psum'd.  ``engine`` selects the per-shard round
     executor (``"jnp"`` | ``"pallas"``, DESIGN.md §rounds) — each shard
     runs the fused ``cfg.steps_per_round`` rounds locally, so the
-    collective structure (one psum) is engine-independent.
+    collective structure (one psum per grid) is engine- and
+    gate-independent.
     """
     raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes, mode,
-                       source, engine)
+                       source, engine, detectors=detectors)
     ax = axis_names
 
     def worker(labels_flat, media, counts, offsets, seed):
         res = raw(labels_flat, media, counts[0], seed, offsets[0])
-        energy = res.energy
-        exitance = res.exitance
-        escaped = res.escaped_w
-        launched = res.n_launched
-        launched_w = res.launched_w
+        summed = {
+            "energy": res.energy,
+            "exitance": res.exitance,
+            "escaped_w": res.escaped_w,
+            "timed_out_w": res.timed_out_w,
+            "det_w": res.det_w,
+            "det_ppath": res.det_ppath,
+            "n_launched": res.n_launched,
+            "launched_w": res.launched_w,
+        }
         for a in ax:
-            energy = jax.lax.psum(energy, a)
-            exitance = jax.lax.psum(exitance, a)
-            escaped = jax.lax.psum(escaped, a)
-            launched = jax.lax.psum(launched, a)
-            launched_w = jax.lax.psum(launched_w, a)
+            summed = {k: jax.lax.psum(v, a) for k, v in summed.items()}
         # steps stays per-shard (rank-1 so it can concatenate over the mesh)
-        return SimResult(energy=energy, exitance=exitance, escaped_w=escaped,
-                         n_launched=launched, launched_w=launched_w,
-                         steps=res.steps[None])
+        return SimResult(steps=res.steps[None], **summed)
 
     pspec = P(ax)  # counts/offsets sharded across the photon axes
     mapped = _shard_map(
@@ -96,6 +99,7 @@ def sharded_sim_fn(volume: Volume, cfg: SimConfig, n_lanes: int,
         mesh=mesh,
         in_specs=(P(), P(), pspec, pspec, P()),
         out_specs=SimResult(energy=P(), exitance=P(), escaped_w=P(),
+                            timed_out_w=P(), det_w=P(), det_ppath=P(),
                             n_launched=P(), launched_w=P(), steps=P(ax)),
     )
     return jax.jit(mapped)
@@ -106,7 +110,8 @@ def simulate_sharded(volume: Volume, cfg: SimConfig, n_photons: int,
                      partition: Sequence[int] | None = None,
                      n_lanes: int = 1024, seed: int = 1234,
                      source: PhotonSource | Source | None = None,
-                     mode: str = "dynamic", engine: str = "jnp") -> SimResult:
+                     mode: str = "dynamic", engine: str = "jnp",
+                     detectors=None) -> SimResult:
     """Run one distributed simulation over the mesh's photon axes."""
     n_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
     if partition is None:
@@ -121,7 +126,7 @@ def simulate_sharded(volume: Volume, cfg: SimConfig, n_photons: int,
     offsets = np.concatenate([[0], np.cumsum(counts)[:-1]]).astype(np.int32)
 
     fn = sharded_sim_fn(volume, cfg, n_lanes, mesh, axis_names, mode, source,
-                        engine)
+                        engine, detectors)
     shard_sharding = NamedSharding(mesh, P(axis_names))
     repl = NamedSharding(mesh, P())
     dev_counts = jax.device_put(jnp.asarray(counts), shard_sharding)
@@ -145,6 +150,17 @@ class Chunk:
     count: int
 
 
+def _accumulator_shapes(volume: Volume, cfg: SimConfig, detectors):
+    """Host-side numpy accumulator shapes for the gate/detector-aware
+    merge: (energy, det_w, det_ppath) shapes matching SimResult."""
+    nx, ny, nz = volume.shape
+    ntg = int(cfg.n_time_gates)
+    n_det = len(as_detectors(detectors))
+    n_media = volume.media.shape[0]
+    eshape = (nx, ny, nz) if ntg == 1 else (nx, ny, nz, ntg)
+    return eshape, (n_det, ntg), (n_det, n_media)
+
+
 class ChunkScheduler:
     """Greedy dynamic chunk dispatch across devices via async dispatch.
 
@@ -160,13 +176,14 @@ class ChunkScheduler:
                  devices: Sequence[jax.Device] | None = None,
                  mode: str = "dynamic",
                  source: PhotonSource | Source | None = None,
-                 engine: str = "jnp"):
+                 engine: str = "jnp", detectors=None):
         self.volume = volume
         self.cfg = cfg
         self.devices = list(devices or jax.devices())
         self._n_lanes = n_lanes
         self._mode = mode
         self._engine = engine
+        self._detectors = detectors
         self._default_source = as_source(source)
         # one jitted fn per source (sources are frozen/hashable);
         # placement follows the device_put of the inputs
@@ -178,7 +195,7 @@ class ChunkScheduler:
         if source not in self._fns:
             raw = build_sim_fn(self.volume.shape, self.volume.unitinmm,
                                self.cfg, self._n_lanes, self._mode, source,
-                               self._engine)
+                               self._engine, detectors=self._detectors)
             self._fns[source] = jax.jit(raw)
         return self._fns[source]
 
@@ -208,11 +225,16 @@ class ChunkScheduler:
         for dev in self.devices:
             if queue:
                 dispatch(dev)
-        nx, ny, nz = self.volume.shape
+        nx, ny = self.volume.shape[:2]
+        eshape, dw_shape, dp_shape = _accumulator_shapes(
+            self.volume, self.cfg, self._detectors)
         acc = {
-            "energy": np.zeros((nx, ny, nz), np.float32),
+            "energy": np.zeros(eshape, np.float32),
             "exitance": np.zeros((nx, ny), np.float32),
             "escaped_w": 0.0,
+            "timed_out_w": 0.0,
+            "det_w": np.zeros(dw_shape, np.float32),
+            "det_ppath": np.zeros(dp_shape, np.float32),
             "n_launched": 0,
             "launched_w": 0.0,
             "steps": 0,
@@ -222,6 +244,9 @@ class ChunkScheduler:
             acc["energy"] += np.asarray(res.energy)
             acc["exitance"] += np.asarray(res.exitance)
             acc["escaped_w"] += float(res.escaped_w)
+            acc["timed_out_w"] += float(res.timed_out_w)
+            acc["det_w"] += np.asarray(res.det_w)
+            acc["det_ppath"] += np.asarray(res.det_ppath)
             acc["n_launched"] += int(res.n_launched)
             acc["launched_w"] += float(res.launched_w)
             acc["steps"] += int(res.steps)
@@ -244,6 +269,9 @@ class ChunkScheduler:
             energy=jnp.asarray(acc["energy"]),
             exitance=jnp.asarray(acc["exitance"]),
             escaped_w=jnp.float32(acc["escaped_w"]),
+            timed_out_w=jnp.float32(acc["timed_out_w"]),
+            det_w=jnp.asarray(acc["det_w"]),
+            det_ppath=jnp.asarray(acc["det_ppath"]),
             n_launched=jnp.int32(acc["n_launched"]),
             launched_w=jnp.float32(acc["launched_w"]),
             steps=jnp.int32(acc["steps"]),
@@ -269,11 +297,12 @@ class ElasticSimulator:
     def __init__(self, volume: Volume, cfg: SimConfig, n_photons: int,
                  chunk_size: int, n_lanes: int = 1024, seed: int = 1234,
                  source: PhotonSource | Source | None = None,
-                 engine: str = "jnp"):
+                 engine: str = "jnp", detectors=None):
         self.volume = volume
         self.cfg = cfg
         self.seed = seed
         self.source = as_source(source)
+        self.detectors = as_detectors(detectors)
         self.chunk_size = chunk_size
         self.n_photons = n_photons
         self.pending: list[Chunk] = [
@@ -281,14 +310,20 @@ class ElasticSimulator:
             for s in range(0, n_photons, chunk_size)
         ]
         self.completed: list[Chunk] = []
-        nx, ny, nz = volume.shape
-        self.energy = np.zeros((nx, ny, nz), np.float32)
+        nx, ny = volume.shape[:2]
+        eshape, dw_shape, dp_shape = _accumulator_shapes(
+            volume, cfg, self.detectors)
+        self.energy = np.zeros(eshape, np.float32)
         self.exitance = np.zeros((nx, ny), np.float32)
         self.escaped_w = 0.0
+        self.timed_out_w = 0.0
+        self.det_w = np.zeros(dw_shape, np.float32)
+        self.det_ppath = np.zeros(dp_shape, np.float32)
         self.n_launched = 0
         self.launched_w = 0.0
         self._raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes,
-                                 source=self.source, engine=engine)
+                                 source=self.source, engine=engine,
+                                 detectors=self.detectors)
         self._jit = jax.jit(self._raw)
 
     # -- execution ---------------------------------------------------------
@@ -335,6 +370,9 @@ class ElasticSimulator:
         self.energy += np.asarray(res.energy)
         self.exitance += np.asarray(res.exitance)
         self.escaped_w += float(res.escaped_w)
+        self.timed_out_w += float(res.timed_out_w)
+        self.det_w += np.asarray(res.det_w)
+        self.det_ppath += np.asarray(res.det_ppath)
         self.n_launched += int(res.n_launched)
         self.launched_w += float(res.launched_w)
         self.completed.append(ch)
@@ -344,6 +382,9 @@ class ElasticSimulator:
             energy=jnp.asarray(self.energy),
             exitance=jnp.asarray(self.exitance),
             escaped_w=jnp.float32(self.escaped_w),
+            timed_out_w=jnp.float32(self.timed_out_w),
+            det_w=jnp.asarray(self.det_w),
+            det_ppath=jnp.asarray(self.det_ppath),
             n_launched=jnp.int32(self.n_launched),
             launched_w=jnp.float32(self.launched_w),
             steps=jnp.int32(0),
@@ -363,11 +404,22 @@ class ElasticSimulator:
             return json.dumps(_source_to_dict(self.source), sort_keys=True)
         return f"<custom:{type(self.source).__qualname__}>"
 
+    def _detector_key(self) -> str:
+        """Canonical string for the detector config (see DESIGN.md
+        §time-resolved checkpoint notes): the TPSF histograms are only
+        mergeable with chunks captured by the same detector set."""
+        from repro.detectors import to_dicts
+
+        return json.dumps(to_dicts(self.detectors), sort_keys=True)
+
     def state_dict(self) -> dict:
         return {
             "energy": self.energy.copy(),
             "exitance": self.exitance.copy(),
             "escaped_w": np.float64(self.escaped_w),
+            "timed_out_w": np.float64(self.timed_out_w),
+            "det_w": self.det_w.copy(),
+            "det_ppath": self.det_ppath.copy(),
             "n_launched": np.int64(self.n_launched),
             "launched_w": np.float64(self.launched_w),
             "pending": np.asarray(
@@ -378,29 +430,50 @@ class ElasticSimulator:
             ).reshape(-1, 2),
             "seed": np.int64(self.seed),
             "n_photons": np.int64(self.n_photons),
-            # the grids are only mergeable with chunks from the same source;
-            # stored as a uint8-encoded string so every leaf stays a numeric
-            # array the Checkpointer can write to npz
+            # the grids are only mergeable with chunks from the same source /
+            # detector set; stored as uint8-encoded strings so every leaf
+            # stays a numeric array the Checkpointer can write to npz
             "source": np.frombuffer(self._source_key().encode(), np.uint8),
+            "detectors": np.frombuffer(self._detector_key().encode(),
+                                       np.uint8),
         }
+
+    @staticmethod
+    def _decode_key(raw) -> str:
+        return (bytes(np.asarray(raw, np.uint8)).decode()
+                if not isinstance(raw, str) else raw)
 
     def load_state_dict(self, state: dict):
         assert int(state["n_photons"]) == self.n_photons, "photon budget mismatch"
         assert int(state["seed"]) == self.seed, "seed mismatch"
-        # "source"/"launched_w" may be absent only in state dicts handed
-        # over directly (not via Checkpointer, whose restore template
-        # requires every current key)
+        # "source"/"launched_w"/the PR-3 time-resolved keys may be absent
+        # only in state dicts handed over directly (not via Checkpointer,
+        # whose restore template requires every current key)
         if "source" in state:
-            raw = state["source"]
-            key = (bytes(np.asarray(raw, np.uint8)).decode()
-                   if not isinstance(raw, str) else raw)
+            key = self._decode_key(state["source"])
             assert key == self._source_key(), (
                 f"source mismatch: checkpoint {key} vs "
                 f"simulator {self._source_key()}"
             )
-        self.energy = np.asarray(state["energy"], np.float32).copy()
+        if "detectors" in state:
+            key = self._decode_key(state["detectors"])
+            assert key == self._detector_key(), (
+                f"detector mismatch: checkpoint {key} vs "
+                f"simulator {self._detector_key()}"
+            )
+        energy = np.asarray(state["energy"], np.float32)
+        assert energy.shape == self.energy.shape, (
+            f"energy grid mismatch (time gates?): checkpoint "
+            f"{energy.shape} vs simulator {self.energy.shape}"
+        )
+        self.energy = energy.copy()
         self.exitance = np.asarray(state["exitance"], np.float32).copy()
         self.escaped_w = float(state["escaped_w"])
+        self.timed_out_w = float(state.get("timed_out_w", 0.0))
+        if "det_w" in state:
+            self.det_w = np.asarray(state["det_w"], np.float32).copy()
+            self.det_ppath = np.asarray(state["det_ppath"],
+                                        np.float32).copy()
         self.n_launched = int(state["n_launched"])
         self.launched_w = float(state.get("launched_w", state["n_launched"]))
         self.pending = [Chunk(int(s), int(c)) for s, c in state["pending"]]

@@ -80,6 +80,14 @@ class StepResult(NamedTuple):
     dep_w: jnp.ndarray    # (N,) float32 deposited weight (0 for dead lanes)
     esc_w: jnp.ndarray    # (N,) float32 weight escaping the domain this step
     esc_pos: jnp.ndarray  # (N, 3) float32 exit position (voxel units)
+    dep_t: jnp.ndarray    # (N,) float32 photon time at deposit (end of the
+    #                       segment, ns) — the time the gate index is
+    #                       computed from (DESIGN.md §time-resolved)
+    seg_med: jnp.ndarray  # (N,) int32 medium label of the segment's voxel
+    seg_len: jnp.ndarray  # (N,) float32 segment length in mm (0: dead lanes)
+    timed_w: jnp.ndarray  # (N,) float32 weight retired by the tmax_ns gate
+    #                       this step (deterministic loss, tracked apart
+    #                       from the statistical roulette residue)
 
 
 def launch(pos, direc, w0, rng, active, shape) -> PhotonState:
@@ -132,6 +140,25 @@ def exitance_bins(esc_pos, esc_w, shape):
     ex = jnp.clip(jnp.floor(esc_pos[:, 0]).astype(jnp.int32), 0, nx - 1)
     ey = jnp.clip(jnp.floor(esc_pos[:, 1]).astype(jnp.int32), 0, ny - 1)
     return ex * ny + ey, jnp.where(hit, esc_w, 0.0)
+
+
+def time_gate_bins(dep_t, tmax_ns, n_time_gates):
+    """Time-gate index for a deposit at photon time ``dep_t`` (ns).
+
+    Gates split ``[0, tmax_ns]`` into ``n_time_gates`` equal bins; the
+    index is computed *at deposit time* from the photon's elapsed
+    time-of-flight at the end of the segment, so the 4-D accumulator can
+    be scattered in the same pass as the CW grid (DESIGN.md
+    §time-resolved).  Deposits from the partial segment that crosses
+    ``tmax_ns`` clip into the last gate (the ungated engine keeps that
+    energy, and ``n_time_gates=1`` must stay bit-identical to it).
+
+    Shared by the engine, the pure-jnp oracle and the Pallas kernel so
+    all three bin identically.
+    """
+    inv_gate = float(n_time_gates) / float(tmax_ns)
+    g = jnp.floor(dep_t * jnp.float32(inv_gate)).astype(jnp.int32)
+    return jnp.clip(g, 0, n_time_gates - 1)
 
 
 def _lookup_label(labels_flat, shape, ivox):
@@ -350,7 +377,12 @@ def step(state, labels_flat, media, shape, unitinmm, cfg: SimConfig) -> StepResu
         low_w, jnp.where(survives, w_after * cfg.roulette_m, 0.0), w_after
     )
     alive_after = alive_after & ~(low_w & ~survives)
-    alive_after = alive_after & (t_new <= cfg.tmax_ns)
+    # weight retired by the tmax_ns gate is a deterministic loss, not a
+    # statistical roulette residue — report it separately so the energy
+    # balance can distinguish the two (analysis.energy_balance)
+    gate_kill = alive_after & (t_new > cfg.tmax_ns)
+    alive_after = alive_after & ~gate_kill
+    timed_w = jnp.where(gate_kill, w_final, 0.0)
     w_final = jnp.where(escapes, 0.0, w_final)
 
     new_state = PhotonState(
@@ -369,4 +401,8 @@ def step(state, labels_flat, media, shape, unitinmm, cfg: SimConfig) -> StepResu
         dep_w=dep_w,
         esc_w=jnp.where(alive, esc_w, 0.0),
         esc_pos=esc_pos,
+        dep_t=t_new,
+        seg_med=label.astype(jnp.int32),
+        seg_len=jnp.where(alive, seg * unitinmm, 0.0),
+        timed_w=jnp.where(alive, timed_w, 0.0),
     )

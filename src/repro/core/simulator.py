@@ -40,16 +40,21 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import photon as ph
 from repro.core.volume import SimConfig, Source, Volume
+from repro.detectors import (Detector, accumulate_capture, as_detectors,
+                             det_geometry)
 from repro.sources import PhotonSource, as_source
 
 ENGINES = ("jnp", "pallas")
 
 
 class SimResult(NamedTuple):
-    energy: jnp.ndarray     # (nx, ny, nz) float32 deposited energy
+    energy: jnp.ndarray     # (nx, ny, nz) float32 deposited energy for the
+    #                          CW case (cfg.n_time_gates == 1), else
+    #                          (nx, ny, nz, ntg) binned over time gates
     exitance: jnp.ndarray   # (nx, ny) float32 weight escaping the z=0 face
     escaped_w: jnp.ndarray  # () float32 total escaped weight
     n_launched: jnp.ndarray  # () int32 photons actually launched
@@ -57,13 +62,32 @@ class SimResult(NamedTuple):
     #                          (== n_launched for unit-weight sources; differs
     #                          for weighted launches, e.g. Planar patterns)
     steps: jnp.ndarray      # () int32 lock-step iterations executed
+    # -- accounting / detector fields (defaulted so legacy constructors,
+    #    e.g. the verbatim seed-engine copy in tests, keep working; the
+    #    defaults are numpy, not jnp, so importing this module does not
+    #    initialize the JAX backend as a side effect) --
+    timed_out_w: jnp.ndarray = np.float32(0.0)  # () weight retired by the
+    #                          tmax_ns gate or the max_steps cap —
+    #                          deterministic loss, excluded from the
+    #                          roulette residue (analysis.energy_balance)
+    det_w: jnp.ndarray = np.zeros((0, 1), np.float32)  # (n_det, ntg)
+    #                          detected-weight TPSF histogram per detector
+    det_ppath: jnp.ndarray = np.zeros((0, 0), np.float32)  # (n_det,
+    #                          n_media) weight-weighted partial pathlength
+    #                          sums (mm) of detected photons
 
 
 class _Carry(NamedTuple):
     state: ph.PhotonState
-    energy: jnp.ndarray      # (nvox,) flat deposited energy
+    energy: jnp.ndarray      # (nvox * ntg,) flat gate-major deposited energy
     exitance: jnp.ndarray    # (nx*ny,) flat z=0-face exitance image
     escaped_w: jnp.ndarray
+    timed_out_w: jnp.ndarray  # weight retired by the tmax_ns gate so far
+    ppath: jnp.ndarray       # (n_lanes, n_media) per-medium partial path-
+    #                          lengths (mm) of the in-flight photon; width 0
+    #                          when no detectors are configured
+    det_w: jnp.ndarray       # (n_det * ntg,) flat detected-weight TPSF
+    det_ppath: jnp.ndarray   # (n_det, n_media) detected ppath sums
     remaining: jnp.ndarray   # dynamic mode: shared photon counter
     launched_per_lane: jnp.ndarray  # static mode: per-lane launch count
     next_id: jnp.ndarray     # global photon id counter (RNG seeding)
@@ -72,8 +96,15 @@ class _Carry(NamedTuple):
 
 
 def _regenerate(state, remaining, launched_per_lane, next_id, quota,
-                source, seed, mode, shape):
-    """Relaunch photons in dead lanes according to the workload mode."""
+                source, seed, mode, shape, ppath=None):
+    """Relaunch photons in dead lanes according to the workload mode.
+
+    ``ppath`` (detector runs only) is the per-lane partial-pathlength
+    accumulator; relaunched lanes start their new photon with zeroed
+    pathlengths.  It is threaded through (and returned as a trailing
+    element) only when given, so detector-free engines keep the
+    historical 5-tuple contract.
+    """
     dead = ~state.alive
     if mode == "dynamic":
         order = jnp.cumsum(dead.astype(jnp.int32))  # 1-based rank among dead
@@ -94,17 +125,20 @@ def _regenerate(state, remaining, launched_per_lane, next_id, quota,
 
     merged = ph.PhotonState(*(merge(n, o) for n, o in zip(fresh, state)))
     merged = merged._replace(alive=state.alive | relaunch)
-    return (
+    out = (
         merged,
         remaining - n_relaunch,
         launched_per_lane + relaunch.astype(jnp.int32),
         next_id + n_relaunch,
         jnp.sum(jnp.where(relaunch, w0, 0.0)),
     )
+    if ppath is not None:
+        out = out + (jnp.where(relaunch[:, None], 0.0, ppath),)
+    return out
 
 
 def _maybe_regenerate(state, remaining, launched_per_lane, next_id, quota,
-                      source, seed, mode, shape):
+                      source, seed, mode, shape, ppath=None):
     """Regenerate only when some lane will actually relaunch.
 
     The full regeneration path costs two prefix-sums plus a
@@ -124,11 +158,14 @@ def _maybe_regenerate(state, remaining, launched_per_lane, next_id, quota,
 
     def do(_):
         return _regenerate(state, remaining, launched_per_lane, next_id,
-                           quota, source, seed, mode, shape)
+                           quota, source, seed, mode, shape, ppath)
 
     def skip(_):
-        return (state, remaining, launched_per_lane, next_id,
-                jnp.float32(0.0))
+        out = (state, remaining, launched_per_lane, next_id,
+               jnp.float32(0.0))
+        if ppath is not None:
+            out = out + (ppath,)
+        return out
 
     return jax.lax.cond(any_relaunch, do, skip, None)
 
@@ -137,7 +174,8 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
                  cfg: SimConfig, n_lanes: int, mode: str = "dynamic",
                  source: PhotonSource | None = None,
                  engine: str = "jnp", block_lanes: int = 256,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 detectors: tuple[Detector, ...] | None = None):
     """Build the raw (unjitted) simulation function.
 
     Returns ``sim_fn(labels_flat, media, n_photons, seed, id_offset=0)
@@ -160,6 +198,16 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
     auto-detects the backend).  Both engines simulate bit-identical
     trajectories; accumulated grids agree to fp-accumulation order.
 
+    ``cfg.n_time_gates`` widens the energy accumulator to a gate-major
+    flat ``(nvox * ntg,)`` grid (DESIGN.md §time-resolved); the gate
+    index is computed at deposit time from the photon's time-of-flight.
+    ``detectors`` (repro.detectors) enables TPSF recording: escapes
+    through the z=0 face inside a detector disk are histogrammed per
+    (detector, time gate), with weight-weighted per-medium partial
+    pathlengths tracked per lane.  Both are static trace-time config;
+    the default (CW, no detectors) is bit-identical to the ungated
+    engine.
+
     The raw function is shard_map-composable; ``make_simulator`` wraps
     it in jit for single-device use.
     """
@@ -168,12 +216,18 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
     if engine not in ENGINES:
         raise ValueError(f"unknown engine: {engine!r} (choose from {ENGINES})")
     source = as_source(source)
+    detectors = as_detectors(detectors)
+    n_det = len(detectors)
+    det_geom = det_geometry(detectors) if n_det else None
     nx, ny, nz = shape
     nvox = nx * ny * nz
     nxy = nx * ny
     K = int(cfg.steps_per_round)
     if K < 1:
         raise ValueError(f"cfg.steps_per_round must be >= 1, got {K}")
+    ntg = int(cfg.n_time_gates)
+    if ntg < 1:
+        raise ValueError(f"cfg.n_time_gates must be >= 1, got {ntg}")
     if engine == "pallas":
         from repro.kernels.photon_step.photon_step import (default_interpret,
                                                            photon_step_pallas)
@@ -202,6 +256,10 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
         # first (n_photons mod n_lanes) lanes, so exactly n_photons launch
         lane_idx = jnp.arange(n_lanes, dtype=jnp.int32)
         quota = n_photons // n_lanes + (lane_idx < n_photons % n_lanes)
+        n_media = media.shape[0]
+        # partial pathlengths are only tracked when a detector can consume
+        # them; width-0 otherwise so the carry structure stays fixed
+        ppath_w = n_media if n_det else 0
 
         state0 = ph.PhotonState(
             pos=jnp.zeros((n_lanes, 3), jnp.float32),
@@ -215,9 +273,13 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
         )
         carry0 = _Carry(
             state=state0,
-            energy=jnp.zeros((nvox,), jnp.float32),
+            energy=jnp.zeros((nvox * ntg,), jnp.float32),
             exitance=jnp.zeros((nxy,), jnp.float32),
             escaped_w=jnp.float32(0.0),
+            timed_out_w=jnp.float32(0.0),
+            ppath=jnp.zeros((n_lanes, ppath_w), jnp.float32),
+            det_w=jnp.zeros((n_det * ntg,), jnp.float32),
+            det_ppath=jnp.zeros((n_det, n_media), jnp.float32),
             remaining=n_photons,
             launched_per_lane=jnp.zeros((n_lanes,), jnp.int32),
             next_id=id_offset,
@@ -233,55 +295,92 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
                 has_work = has_work | jnp.any(c.launched_per_lane < quota)
             return has_work & (c.steps < cfg.max_steps)
 
-        def round_jnp(state):
+        def round_jnp(state, ppath):
             """Advance K segments in-graph; returns the new state plus
-            round-local (K, n_lanes) deposition/exitance buffers and the
-            round's escaped weight — flushed by the caller in ONE
-            scatter per grid instead of one per segment."""
+            round-local (K, n_lanes) deposition/exitance buffers (the
+            deposition index is gate-major: voxel * ntg + gate) and the
+            round's escaped / timed-out weights — flushed by the caller
+            in ONE scatter per grid instead of one per segment.
+            Detector capture scatters into round-local (n_det * ntg,)
+            and (n_det, n_media) accumulators per segment (they are
+            tiny, unlike the fluence volume)."""
             def seg(k, rc):
-                st, dep_i, dep_w, ex_i, ex_w, esc = rc
+                st, pp, dep_i, dep_w, ex_i, ex_w, esc, timed, dw, dp = rc
                 res = ph.step(st, labels_flat, media, shape, unitinmm, cfg)
-                dep_i = dep_i.at[k].set(res.dep_idx)
+                gate = ph.time_gate_bins(res.dep_t, cfg.tmax_ns, ntg)
+                dep_i = dep_i.at[k].set(res.dep_idx * ntg + gate)
                 dep_w = dep_w.at[k].set(res.dep_w)
                 xy, xw = ph.exitance_bins(res.esc_pos, res.esc_w, shape)
                 ex_i = ex_i.at[k].set(xy)
                 ex_w = ex_w.at[k].set(xw)
                 esc = esc + jnp.sum(res.esc_w)
-                return (res.state, dep_i, dep_w, ex_i, ex_w, esc)
+                timed = timed + jnp.sum(res.timed_w)
+                if n_det:
+                    pp, dw, dp = accumulate_capture(pp, dw, dp, res, gate,
+                                                    det_geom, ntg)
+                return (res.state, pp, dep_i, dep_w, ex_i, ex_w, esc,
+                        timed, dw, dp)
 
             init = (
                 state,
+                ppath,
                 jnp.zeros((K, n_lanes), jnp.int32),
                 jnp.zeros((K, n_lanes), jnp.float32),
                 jnp.zeros((K, n_lanes), jnp.int32),
                 jnp.zeros((K, n_lanes), jnp.float32),
                 jnp.float32(0.0),
+                jnp.float32(0.0),
+                jnp.zeros((n_det * ntg,), jnp.float32),
+                jnp.zeros((n_det, n_media), jnp.float32),
             )
             return jax.lax.fori_loop(0, K, seg, init)
 
         def body(c: _Carry):
-            state, remaining, launched, next_id, w_new = _maybe_regenerate(
-                c.state, c.remaining, c.launched_per_lane, c.next_id,
-                quota, source, seed, mode, shape,
-            )
+            if n_det:
+                (state, remaining, launched, next_id, w_new,
+                 ppath) = _maybe_regenerate(
+                    c.state, c.remaining, c.launched_per_lane, c.next_id,
+                    quota, source, seed, mode, shape, c.ppath)
+            else:
+                state, remaining, launched, next_id, w_new = _maybe_regenerate(
+                    c.state, c.remaining, c.launched_per_lane, c.next_id,
+                    quota, source, seed, mode, shape)
+                ppath = c.ppath
             if engine == "pallas":
-                state, flu, exi, esc = photon_step_pallas(
+                outs = photon_step_pallas(
                     labels_flat, media, state, shape, unitinmm, cfg, K,
-                    block_lanes, interpret)
+                    block_lanes, interpret,
+                    ppath=ppath if n_det else None, det_geom=det_geom)
+                state, flu, exi, esc, timed = outs[:5]
                 energy = c.energy + flu
                 exitance = c.exitance + exi
                 escaped_w = c.escaped_w + jnp.sum(esc)
+                timed_out_w = c.timed_out_w + jnp.sum(timed)
+                if n_det:
+                    ppath, dw, dp = outs[5:]
+                    det_w = c.det_w + dw
+                    det_ppath = c.det_ppath + dp
+                else:
+                    det_w, det_ppath = c.det_w, c.det_ppath
             else:
-                state, dep_i, dep_w, ex_i, ex_w, esc = round_jnp(state)
+                (state, ppath, dep_i, dep_w, ex_i, ex_w, esc, timed,
+                 dw, dp) = round_jnp(state, ppath)
                 energy = c.energy.at[dep_i.reshape(-1)].add(dep_w.reshape(-1))
                 exitance = c.exitance.at[ex_i.reshape(-1)].add(
                     ex_w.reshape(-1))
                 escaped_w = c.escaped_w + esc
+                timed_out_w = c.timed_out_w + timed
+                det_w = c.det_w + dw
+                det_ppath = c.det_ppath + dp
             return _Carry(
                 state=state,
                 energy=energy,
                 exitance=exitance,
                 escaped_w=escaped_w,
+                timed_out_w=timed_out_w,
+                ppath=ppath,
+                det_w=det_w,
+                det_ppath=det_ppath,
                 remaining=remaining,
                 launched_per_lane=launched,
                 next_id=next_id,
@@ -290,10 +389,20 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
             )
 
         final = jax.lax.while_loop(cond, body, carry0)
+        # weight still in flight when the max_steps cap fires is retired
+        # deterministically, like the time gate — account it there so the
+        # energy-balance residue only measures roulette statistics
+        capped_w = jnp.sum(jnp.where(final.state.alive, final.state.w, 0.0))
+        energy = final.energy
+        energy = (energy.reshape(shape + (ntg,)) if ntg > 1
+                  else energy.reshape(shape))
         return SimResult(
-            energy=final.energy.reshape(shape),
+            energy=energy,
             exitance=final.exitance.reshape((nx, ny)),
             escaped_w=final.escaped_w,
+            timed_out_w=final.timed_out_w + capped_w,
+            det_w=final.det_w.reshape((n_det, ntg)),
+            det_ppath=final.det_ppath,
             n_launched=final.next_id - id_offset,
             launched_w=final.launched_w,
             steps=final.steps,
@@ -306,11 +415,12 @@ def make_simulator(volume: Volume, cfg: SimConfig, n_lanes: int,
                    mode: str = "dynamic",
                    source: PhotonSource | Source | None = None,
                    engine: str = "jnp", block_lanes: int = 256,
-                   interpret: bool | None = None):
+                   interpret: bool | None = None,
+                   detectors=None):
     """Jitted single-device simulator for a fixed (volume, cfg, lanes,
-    source, engine)."""
+    source, engine, detectors)."""
     raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes, mode,
-                       source, engine, block_lanes, interpret)
+                       source, engine, block_lanes, interpret, detectors)
     return jax.jit(raw)
 
 
@@ -319,7 +429,8 @@ def simulate(volume: Volume, cfg: SimConfig, n_photons: int,
              source: PhotonSource | Source | None = None,
              mode: str = "dynamic", engine: str = "jnp",
              block_lanes: int = 256,
-             interpret: bool | None = None) -> SimResult:
+             interpret: bool | None = None,
+             detectors=None) -> SimResult:
     """Convenience one-shot simulation on the current default device.
 
     ``source`` accepts any registered source type (repro.sources), the
@@ -327,9 +438,11 @@ def simulate(volume: Volume, cfg: SimConfig, n_photons: int,
     dict; ``None`` is the paper's pencil beam.  ``engine`` selects the
     round executor (``"jnp"`` | ``"pallas"``, DESIGN.md §rounds);
     ``block_lanes`` / ``interpret`` tune the Pallas executor only.
+    ``detectors`` (repro.detectors spec) enables TPSF recording on the
+    z=0 face (DESIGN.md §time-resolved).
     """
     sim_fn = make_simulator(volume, cfg, n_lanes, mode, source, engine,
-                            block_lanes, interpret)
+                            block_lanes, interpret, detectors)
     return sim_fn(
         volume.labels.reshape(-1),
         volume.media,

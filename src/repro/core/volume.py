@@ -165,6 +165,12 @@ class SimConfig:
     global grids once per round instead of per segment.  Trajectories
     are bit-identical for any K (only fp accumulation order changes);
     K=1 reproduces the unfused engine exactly.
+
+    ``n_time_gates`` bins deposited energy over time-of-flight into
+    equal gates of width ``tmax_ns / n_time_gates`` (DESIGN.md
+    §time-resolved).  The default 1 is the continuous-wave special case
+    and is bit-identical to the ungated engine; any larger value only
+    widens the accumulator — trajectories never depend on it.
     """
 
     do_reflect: bool = False
@@ -175,6 +181,12 @@ class SimConfig:
     specialize: bool = True      # Opt3 analogue: trace-time kernel specialization
     max_steps: int = 500_000     # hard cap on lock-step iterations
     steps_per_round: int = 1     # K: fused segments per outer iteration
+    n_time_gates: int = 1        # time-resolved fluence gates over [0, tmax_ns]
+
+    @property
+    def gate_width_ns(self) -> float:
+        """Width of one time gate: the CW case is a single all-covering gate."""
+        return self.tmax_ns / self.n_time_gates
 
 
 def b1_config() -> SimConfig:

@@ -8,6 +8,7 @@ import jax
 
 from repro.core import photon as ph
 from repro.core.volume import SimConfig, Source, Volume
+from repro.detectors import as_detectors, det_geometry
 from repro.kernels.photon_step.photon_step import (default_interpret,
                                                   photon_step_pallas)
 from repro.sources import PhotonSource, as_source
@@ -17,15 +18,19 @@ from repro.sources import PhotonSource, as_source
     "shape", "unitinmm", "cfg", "n_steps", "block_lanes", "interpret"))
 def _photon_steps_jit(labels_flat, media, state, shape, unitinmm,
                       cfg: SimConfig, n_steps: int, block_lanes: int,
-                      interpret: bool):
+                      interpret: bool, ppath=None, det_geom=None):
     return photon_step_pallas(labels_flat, media, state, shape, unitinmm,
-                              cfg, n_steps, block_lanes, interpret)
+                              cfg, n_steps, block_lanes, interpret,
+                              ppath=ppath, det_geom=det_geom)
 
 
 def photon_steps(labels_flat, media, state, shape, unitinmm, cfg: SimConfig,
                  n_steps: int, block_lanes: int = 256,
-                 interpret: bool | None = None):
-    """Returns (new_state, fluence_flat, exitance_flat, escaped_per_lane).
+                 interpret: bool | None = None, ppath=None, det_geom=None):
+    """Returns ``(new_state, fluence_flat, exitance_flat,
+    escaped_per_lane, timed_per_lane)`` — plus
+    ``(ppath, det_w_flat, det_ppath)`` when detectors are configured
+    (see ``photon_step_pallas``).
 
     ``interpret=None`` auto-detects: interpreter off TPU, compiled
     Mosaic kernel on TPU.  Resolved here, outside jit, so ``None`` and
@@ -34,24 +39,35 @@ def photon_steps(labels_flat, media, state, shape, unitinmm, cfg: SimConfig,
     if interpret is None:
         interpret = default_interpret()
     return _photon_steps_jit(labels_flat, media, state, shape, unitinmm,
-                             cfg, n_steps, block_lanes, interpret)
+                             cfg, n_steps, block_lanes, interpret,
+                             ppath=ppath, det_geom=det_geom)
 
 
 def simulate_kernel(volume: Volume, cfg: SimConfig, n_photons: int,
                     n_steps: int, seed: int = 1234,
                     source: PhotonSource | Source | None = None,
-                    block_lanes: int = 256, interpret: bool | None = None):
+                    block_lanes: int = 256, interpret: bool | None = None,
+                    detectors=None):
     """Launch one photon per lane and advance n_steps with the kernel.
 
     Any registered source (repro.sources) works: the source samples the
     launch states outside the kernel, so the Pallas step body is
-    source-agnostic.
+    source-agnostic.  ``detectors`` (repro.detectors spec) enables
+    in-kernel TPSF capture; fresh photons start with zero partial
+    pathlengths.
     """
     source = as_source(source)
+    dets = as_detectors(detectors)
     ids = jax.numpy.arange(n_photons, dtype=jax.numpy.uint32)
     pos, direc, w0, rng = source.sample(ids, jax.numpy.uint32(seed))
     state = ph.launch(pos, direc, w0, rng,
                       jax.numpy.ones((n_photons,), bool), volume.shape)
+    ppath = det_geom = None
+    if dets:
+        n_media = volume.media.shape[0]
+        ppath = jax.numpy.zeros((n_photons, n_media), jax.numpy.float32)
+        det_geom = det_geometry(dets)
     return photon_steps(volume.labels.reshape(-1), volume.media, state,
                         volume.shape, volume.unitinmm, cfg, n_steps,
-                        block_lanes, interpret)
+                        block_lanes, interpret, ppath=ppath,
+                        det_geom=det_geom)

@@ -16,12 +16,22 @@ TPU adaptation of the paper's OpenCL simulation kernel (DESIGN.md
     REVISITED by every grid step — race-free accumulation by
     construction.  Cross-device accumulation is one psum in the caller
     (multidevice.py).
-  * In-kernel bookkeeping (DESIGN.md §rounds): deposition, the 2-D
-    z=0-face exitance image and per-lane escaped weight are all
-    accumulated *inside* the kernel across the fused ``n_steps``
-    segments, so the host flushes each global grid once per round — the
-    deferred-accumulation structure the paper uses to amortize global
-    memory traffic over many transport steps.
+  * In-kernel bookkeeping (DESIGN.md §rounds, §time-resolved):
+    deposition (gate-major ``nvox * cfg.n_time_gates`` when
+    time-resolved), the 2-D z=0-face exitance image, per-lane
+    escaped / timed-out weight, and — when detectors are configured —
+    the per-(detector, gate) TPSF histogram with per-medium partial
+    pathlengths are all accumulated *inside* the kernel across the
+    fused ``n_steps`` segments, so the host flushes each global grid
+    once per round — the deferred-accumulation structure the paper uses
+    to amortize global memory traffic over many transport steps.
+    The gate index is computed at deposit time from the photon's
+    time-of-flight (``photon.time_gate_bins``), so time-resolved
+    recording adds zero state to the photon and one integer op to the
+    scatter.  Note the VMEM budget: the revisited fluence block is
+    ``nvox * ntg * 4`` bytes (a 60^3 volume supports ntg <= ~16 within
+    a 16 MB VMEM core; larger gate counts need an HBM-resident
+    accumulator, see DESIGN.md §time-resolved).
   * RNG: same counter-seeded xorshift128 as the engine (32-bit ops only;
     TPUs have no 64-bit vector units — the paper's xorshift128+ is
     64-bit, see DESIGN.md §rng).
@@ -47,6 +57,7 @@ from jax.experimental import pallas as pl
 
 from repro.core import photon as ph
 from repro.core.volume import SimConfig
+from repro.detectors import accumulate_capture
 
 
 def default_interpret() -> bool:
@@ -62,17 +73,33 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _kernel(labels_ref, media_ref,
-            pos_ref, dir_ref, ivox_ref, w_ref, s_ref, t_ref, rng_ref,
-            alive_ref,
-            out_pos, out_dir, out_ivox, out_w, out_s, out_t, out_rng,
-            out_alive, fluence_ref, exitance_ref, esc_ref,
-            *, shape, unitinmm, cfg: SimConfig, n_steps: int):
+def _kernel(labels_ref, media_ref, *refs,
+            shape, unitinmm, cfg: SimConfig, n_steps: int, n_det: int):
+    # unpack the variadic refs: 8 state inputs [+ ppath + det_geom], then
+    # 8 state outputs + fluence/exitance/esc/timed [+ ppath + det_w +
+    # det_ppath] — assembled to match photon_step_pallas's specs
+    (pos_ref, dir_ref, ivox_ref, w_ref, s_ref, t_ref, rng_ref,
+     alive_ref) = refs[:8]
+    if n_det:
+        ppath_ref, det_geom_ref = refs[8:10]
+        outs = refs[10:]
+    else:
+        outs = refs[8:]
+    (out_pos, out_dir, out_ivox, out_w, out_s, out_t, out_rng,
+     out_alive, fluence_ref, exitance_ref, esc_ref, timed_ref) = outs[:12]
+    if n_det:
+        out_ppath, det_w_ref, det_ppath_ref = outs[12:]
+
+    ntg = int(cfg.n_time_gates)
+
     # zero the (revisited) accumulator blocks on the first grid step only
     @pl.when(pl.program_id(0) == 0)
     def _():
         fluence_ref[...] = jnp.zeros_like(fluence_ref)
         exitance_ref[...] = jnp.zeros_like(exitance_ref)
+        if n_det:
+            det_w_ref[...] = jnp.zeros_like(det_w_ref)
+            det_ppath_ref[...] = jnp.zeros_like(det_ppath_ref)
 
     labels = labels_ref[...]
     media = media_ref[...]
@@ -82,21 +109,35 @@ def _kernel(labels_ref, media_ref,
         alive=alive_ref[...] != 0,
     )
     n = state.w.shape[0]
+    if n_det:
+        det_geom = det_geom_ref[...]
 
     def body(_, carry):
-        st, flu, exi, esc = carry
+        if n_det:
+            st, flu, exi, esc, timed, pp, dw, dp = carry
+        else:
+            st, flu, exi, esc, timed = carry
         res = ph.step(st, labels, media, shape, unitinmm, cfg)
-        flu = flu.at[res.dep_idx].add(res.dep_w)
+        gate = ph.time_gate_bins(res.dep_t, cfg.tmax_ns, ntg)
+        flu = flu.at[res.dep_idx * ntg + gate].add(res.dep_w)
         xy, xw = ph.exitance_bins(res.esc_pos, res.esc_w, shape)
         exi = exi.at[xy].add(xw)
         esc = esc + res.esc_w
-        return (res.state, flu, exi, esc)
+        timed = timed + res.timed_w
+        if n_det:
+            pp, dw, dp = accumulate_capture(pp, dw, dp, res, gate,
+                                            det_geom, ntg)
+            return (res.state, flu, exi, esc, timed, pp, dw, dp)
+        return (res.state, flu, exi, esc, timed)
 
-    state, flu_add, exi_add, esc = jax.lax.fori_loop(
-        0, n_steps, body,
-        (state, jnp.zeros_like(fluence_ref), jnp.zeros_like(exitance_ref),
-         jnp.zeros((n,), jnp.float32)),
-    )
+    init = (state, jnp.zeros_like(fluence_ref),
+            jnp.zeros_like(exitance_ref), jnp.zeros((n,), jnp.float32),
+            jnp.zeros((n,), jnp.float32))
+    if n_det:
+        init = init + (ppath_ref[...], jnp.zeros_like(det_w_ref),
+                       jnp.zeros_like(det_ppath_ref))
+    final = jax.lax.fori_loop(0, n_steps, body, init)
+    state, flu_add, exi_add, esc, timed = final[:5]
 
     out_pos[...] = state.pos
     out_dir[...] = state.dir
@@ -107,42 +148,66 @@ def _kernel(labels_ref, media_ref,
     out_rng[...] = state.rng
     out_alive[...] = state.alive.astype(jnp.int8)
     esc_ref[...] = esc
+    timed_ref[...] = timed
     # accumulate this block's deposition into the shared output blocks
     fluence_ref[...] += flu_add
     exitance_ref[...] += exi_add
+    if n_det:
+        pp, dw_add, dp_add = final[5:]
+        out_ppath[...] = pp
+        det_w_ref[...] += dw_add
+        det_ppath_ref[...] += dp_add
 
 
 def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
                        shape, unitinmm, cfg: SimConfig, n_steps: int,
                        block_lanes: int = 256,
-                       interpret: bool | None = None):
+                       interpret: bool | None = None,
+                       ppath=None, det_geom=None):
     """Advance all lanes ``n_steps`` segments; returns
-    ``(new_state, fluence_flat, exitance_flat, escaped_per_lane)``.
+    ``(new_state, fluence_flat, exitance_flat, escaped_per_lane,
+    timed_per_lane)`` — plus ``(ppath, det_w_flat, det_ppath)`` when
+    detectors are configured.
 
-    ``fluence_flat`` is (nvox,), ``exitance_flat`` is (nx*ny,) — the
-    z=0-face exitance image accumulated in-kernel over all ``n_steps``
-    segments.  ``interpret=None`` auto-detects the backend
+    ``fluence_flat`` is gate-major ``(nvox * cfg.n_time_gates,)``
+    (``(nvox,)`` for the CW case, bit-identical to the ungated kernel),
+    ``exitance_flat`` is (nx*ny,) — the z=0-face exitance image
+    accumulated in-kernel over all ``n_steps`` segments;
+    ``timed_per_lane`` is the weight each lane retired at the tmax_ns
+    gate.  ``ppath`` is the (n, n_media) per-medium partial-pathlength
+    state (pass the previous round's output back in) and ``det_geom``
+    the (n_det, 3) array from ``repro.detectors.det_geometry`` —
+    detector capture accumulates the flat ``(n_det * ntg,)`` TPSF
+    histogram and the (n_det, n_media) weighted pathlength sums
+    in-kernel.  ``interpret=None`` auto-detects the backend
     (:func:`default_interpret`).
     """
     if interpret is None:
         interpret = default_interpret()
+    if (ppath is None) != (det_geom is None):
+        raise ValueError("ppath and det_geom must be given together")
     n = state.w.shape[0]
     if n % block_lanes:
         raise ValueError(f"lane count {n} not divisible by {block_lanes}")
     nblocks = n // block_lanes
     nvox = labels_flat.shape[0]
+    ntg = int(cfg.n_time_gates)
     nxy = shape[0] * shape[1]
     n_media = media.shape[0]
+    n_det = 0 if det_geom is None else det_geom.shape[0]
 
     def lane_spec(extra=()):
         return pl.BlockSpec((block_lanes,) + extra,
                             lambda i: (i,) + (0,) * len(extra))
 
-    full_vol = pl.BlockSpec((nvox,), lambda i: (0,))       # revisited
-    full_img = pl.BlockSpec((nxy,), lambda i: (0,))        # revisited
-    full_media = pl.BlockSpec((n_media, 4), lambda i: (0, 0))
+    def full_spec(*dims):
+        return pl.BlockSpec(dims, lambda i, _nd=len(dims): (0,) * _nd)
 
-    out_shapes = (
+    full_vol = full_spec(nvox * ntg)                       # revisited
+    full_img = full_spec(nxy)                              # revisited
+    full_media = full_spec(n_media, 4)
+
+    out_shapes = [
         jax.ShapeDtypeStruct((n, 3), jnp.float32),   # pos
         jax.ShapeDtypeStruct((n, 3), jnp.float32),   # dir
         jax.ShapeDtypeStruct((n, 3), jnp.int32),     # ivox
@@ -151,38 +216,51 @@ def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
         jax.ShapeDtypeStruct((n,), jnp.float32),     # t
         jax.ShapeDtypeStruct((n, 4), jnp.uint32),    # rng
         jax.ShapeDtypeStruct((n,), jnp.int8),        # alive
-        jax.ShapeDtypeStruct((nvox,), jnp.float32),  # fluence (accumulated)
+        jax.ShapeDtypeStruct((nvox * ntg,), jnp.float32),  # fluence (accum)
         jax.ShapeDtypeStruct((nxy,), jnp.float32),   # exitance (accumulated)
         jax.ShapeDtypeStruct((n,), jnp.float32),     # escaped weight
-    )
-    out_specs = (
+        jax.ShapeDtypeStruct((n,), jnp.float32),     # timed-out weight
+    ]
+    out_specs = [
         lane_spec((3,)), lane_spec((3,)), lane_spec((3,)),
         lane_spec(), lane_spec(), lane_spec(),
         lane_spec((4,)), lane_spec(),
-        full_vol, full_img, lane_spec(),
-    )
-    in_specs = (
-        full_vol, full_media,
+        full_vol, full_img, lane_spec(), lane_spec(),
+    ]
+    in_specs = [
+        full_spec(nvox), full_media,
         lane_spec((3,)), lane_spec((3,)), lane_spec((3,)),
         lane_spec(), lane_spec(), lane_spec(),
         lane_spec((4,)), lane_spec(),
-    )
+    ]
+    operands = [labels_flat, media,
+                state.pos, state.dir, state.ivox, state.w, state.s_left,
+                state.t, state.rng, state.alive.astype(jnp.int8)]
+    if n_det:
+        in_specs += [lane_spec((n_media,)), full_spec(n_det, 3)]
+        operands += [ppath, det_geom]
+        out_shapes += [
+            jax.ShapeDtypeStruct((n, n_media), jnp.float32),      # ppath
+            jax.ShapeDtypeStruct((n_det * ntg,), jnp.float32),    # det TPSF
+            jax.ShapeDtypeStruct((n_det, n_media), jnp.float32),  # det ppath
+        ]
+        out_specs += [lane_spec((n_media,)), full_spec(n_det * ntg),
+                      full_spec(n_det, n_media)]
 
     kernel = functools.partial(
-        _kernel, shape=shape, unitinmm=unitinmm, cfg=cfg, n_steps=n_steps)
+        _kernel, shape=shape, unitinmm=unitinmm, cfg=cfg, n_steps=n_steps,
+        n_det=n_det)
     outs = pl.pallas_call(
         kernel,
         grid=(nblocks,),
         in_specs=in_specs,
-        out_specs=out_specs,
-        out_shape=out_shapes,
+        out_specs=tuple(out_specs),
+        out_shape=tuple(out_shapes),
         interpret=interpret,
-    )(labels_flat, media,
-      state.pos, state.dir, state.ivox, state.w, state.s_left, state.t,
-      state.rng, state.alive.astype(jnp.int8))
+    )(*operands)
 
     new_state = ph.PhotonState(
         pos=outs[0], dir=outs[1], ivox=outs[2], w=outs[3], s_left=outs[4],
         t=outs[5], rng=outs[6], alive=outs[7] != 0,
     )
-    return new_state, outs[8], outs[9], outs[10]
+    return (new_state,) + tuple(outs[8:])

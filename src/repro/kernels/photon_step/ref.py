@@ -1,11 +1,13 @@
 """Pure-jnp oracle for the photon_step Pallas kernel.
 
 Runs ``n_steps`` lock-step iterations of the hop-drop-spin physics over
-all lanes, accumulating deposition into a fluence grid, z=0-face exits
-into a flat exitance image, and escaped weight per lane — exactly the
-computation the kernel performs, without any blocking/VMEM structure.
-The kernel test asserts allclose (and for matching RNG, bit-equality of
-trajectories) against this.
+all lanes, accumulating deposition into a (gate-major, time-resolved)
+fluence grid, z=0-face exits into a flat exitance image, and escaped /
+timed-out weight per lane — plus, when detectors are configured, the
+per-(detector, gate) TPSF histogram and per-medium partial pathlengths —
+exactly the computation the kernel performs, without any blocking/VMEM
+structure.  The kernel test asserts allclose (and for matching RNG,
+bit-equality of trajectories) against this.
 """
 
 from __future__ import annotations
@@ -15,27 +17,47 @@ import jax.numpy as jnp
 
 from repro.core import photon as ph
 from repro.core.volume import SimConfig
+from repro.detectors import accumulate_capture
 
 
 def photon_steps_ref(labels_flat, media, state: ph.PhotonState,
-                     shape, unitinmm, cfg: SimConfig, n_steps: int):
-    """Returns (new_state, fluence_flat, exitance_flat, escaped_per_lane)."""
+                     shape, unitinmm, cfg: SimConfig, n_steps: int,
+                     ppath=None, det_geom=None):
+    """Returns ``(new_state, fluence_flat, exitance_flat,
+    escaped_per_lane, timed_per_lane)`` — plus
+    ``(ppath, det_w_flat, det_ppath)`` when detectors are configured
+    (same contract as ``photon_step_pallas``)."""
+    if (ppath is None) != (det_geom is None):
+        raise ValueError("ppath and det_geom must be given together")
     nvox = labels_flat.shape[0]
+    ntg = int(cfg.n_time_gates)
     nxy = shape[0] * shape[1]
     n = state.w.shape[0]
+    n_media = media.shape[0]
+    n_det = 0 if det_geom is None else det_geom.shape[0]
 
     def body(_, carry):
-        st, flu, exi, esc = carry
+        if n_det:
+            st, flu, exi, esc, timed, pp, dw, dp = carry
+        else:
+            st, flu, exi, esc, timed = carry
         res = ph.step(st, labels_flat, media, shape, unitinmm, cfg)
-        flu = flu.at[res.dep_idx].add(res.dep_w)
+        gate = ph.time_gate_bins(res.dep_t, cfg.tmax_ns, ntg)
+        flu = flu.at[res.dep_idx * ntg + gate].add(res.dep_w)
         xy, xw = ph.exitance_bins(res.esc_pos, res.esc_w, shape)
         exi = exi.at[xy].add(xw)
         esc = esc + res.esc_w
-        return (res.state, flu, exi, esc)
+        timed = timed + res.timed_w
+        if n_det:
+            pp, dw, dp = accumulate_capture(pp, dw, dp, res, gate,
+                                            det_geom, ntg)
+            return (res.state, flu, exi, esc, timed, pp, dw, dp)
+        return (res.state, flu, exi, esc, timed)
 
-    st, flu, exi, esc = jax.lax.fori_loop(
-        0, n_steps, body,
-        (state, jnp.zeros((nvox,), jnp.float32),
-         jnp.zeros((nxy,), jnp.float32), jnp.zeros((n,), jnp.float32)),
-    )
-    return st, flu, exi, esc
+    init = (state, jnp.zeros((nvox * ntg,), jnp.float32),
+            jnp.zeros((nxy,), jnp.float32), jnp.zeros((n,), jnp.float32),
+            jnp.zeros((n,), jnp.float32))
+    if n_det:
+        init = init + (ppath, jnp.zeros((n_det * ntg,), jnp.float32),
+                       jnp.zeros((n_det, n_media), jnp.float32))
+    return jax.lax.fori_loop(0, n_steps, body, init)

@@ -14,6 +14,7 @@ import time
 import jax
 import numpy as np
 
+from repro import detectors as D
 from repro.core import analysis as A
 from repro.core import loadbalance as LB
 from repro.core import simulator as S
@@ -53,12 +54,25 @@ def main(argv=None):
                     help="JSON source spec (repro.sources), e.g. "
                          '\'{"type": "disk", "pos": [30, 30, 0], '
                          '"radius": 5}\'; default: pencil beam')
+    ap.add_argument("--time-gates", type=int, default=1,
+                    help="bin deposited energy over this many time-of-"
+                         "flight gates spanning [0, tmax_ns] (DESIGN.md "
+                         "§time-resolved); 1 = CW (default)")
+    ap.add_argument("--detectors", default=None,
+                    help="JSON detector disks on the z=0 face "
+                         "(repro.detectors), e.g. "
+                         '\'[{"x": 40, "y": 30, "radius": 2}]\'; records '
+                         "per-detector TPSF + mean partial pathlengths")
     args = ap.parse_args(argv)
 
     source = json.loads(args.source) if args.source else None
+    detectors = D.as_detectors(
+        json.loads(args.detectors)) if args.detectors else None
     vol, cfg = get_bench(args.bench, args.size)
     if args.steps_per_round != 1:
         cfg = dataclasses.replace(cfg, steps_per_round=args.steps_per_round)
+    if args.time_gates != 1:
+        cfg = dataclasses.replace(cfg, n_time_gates=args.time_gates)
     lanes = args.lanes
     if args.autotune:
         lanes, timings = S.autotune_lanes(vol, cfg, n_pilot=args.photons // 10,
@@ -69,17 +83,18 @@ def main(argv=None):
     t0 = time.time()
     if args.chunk:
         sched = ChunkScheduler(vol, cfg, n_lanes=lanes, source=source,
-                               engine=args.engine)
+                               engine=args.engine, detectors=detectors)
         res, stats = sched.run(args.photons, args.chunk, seed=args.seed)
         print("per-device photons:", stats)
     elif args.devices == "all" and len(jax.devices()) > 1:
         mesh = jax.make_mesh((len(jax.devices()),), ("data",))
         res = simulate_sharded(vol, cfg, args.photons, mesh,
                                n_lanes=lanes, seed=args.seed, source=source,
-                               engine=args.engine)
+                               engine=args.engine, detectors=detectors)
     else:
         res = S.simulate(vol, cfg, args.photons, lanes, args.seed,
-                         source=source, engine=args.engine)
+                         source=source, engine=args.engine,
+                         detectors=detectors)
     jax.block_until_ready(res)
     dt = time.time() - t0
 
@@ -87,10 +102,25 @@ def main(argv=None):
     print(f"{args.bench}: {args.photons} photons in {dt:.2f}s "
           f"({args.photons/dt/1e3:.2f} photons/ms)")
     print(f"energy balance: absorbed={bal['absorbed']:.1f} "
-          f"escaped={bal['escaped']:.1f} residue={bal['residue_frac']:.2e}")
+          f"escaped={bal['escaped']:.1f} timed_out={bal['timed_out']:.2e} "
+          f"residue={bal['residue_frac']:.2e}")
     phi = A.fluence_cw(res, vol)
     print(f"fluence: max={float(np.max(np.asarray(phi))):.3e} "
           f"nonzero voxels={int(np.sum(np.asarray(phi) > 0))}")
+    if cfg.n_time_gates > 1:
+        td = np.asarray(A.fluence_td(res, vol))
+        per_gate = td.sum(axis=(0, 1, 2))
+        print(f"time gates: {cfg.n_time_gates} x {cfg.gate_width_ns:.3f} ns, "
+              f"peak gate {int(per_gate.argmax())}")
+    if detectors:
+        times, curves = A.tpsf(res, cfg)
+        tot = np.asarray(res.det_w).sum(axis=1)
+        for i, d in enumerate(detectors):
+            peak = float(times[int(curves[i].argmax())]) if tot[i] else 0.0
+            print(f"detector {i} ({d.x:.0f},{d.y:.0f},r={d.radius:.0f}): "
+                  f"weight={tot[i]:.3f} tpsf-peak@{peak:.3f} ns")
+        print("mean partial pathlengths (mm/medium):")
+        print(np.array_str(A.detector_mean_ppath(res), precision=2))
     return res
 
 

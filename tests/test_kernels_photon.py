@@ -38,10 +38,10 @@ def test_kernel_matches_oracle(shape, n, block, steps, reflect):
     state = _mk_state(n, vol)
     labels = vol.labels.reshape(-1)
 
-    st_k, flu_k, exi_k, esc_k = photon_step_pallas(
+    st_k, flu_k, exi_k, esc_k, timed_k = photon_step_pallas(
         labels, vol.media, state, vol.shape, vol.unitinmm, cfg, steps,
         block_lanes=block, interpret=True)
-    st_r, flu_r, exi_r, esc_r = photon_steps_ref(
+    st_r, flu_r, exi_r, esc_r, timed_r = photon_steps_ref(
         labels, vol.media, state, vol.shape, vol.unitinmm, cfg, steps)
 
     # trajectories bit-identical (same RNG stream, same arithmetic)
@@ -59,6 +59,8 @@ def test_kernel_matches_oracle(shape, n, block, steps, reflect):
                                rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(np.asarray(esc_k), np.asarray(esc_r),
                                rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(timed_k), np.asarray(timed_r),
+                               rtol=1e-6, atol=1e-6)
 
 
 def test_kernel_energy_conservation():
@@ -66,11 +68,11 @@ def test_kernel_energy_conservation():
     cfg = V.SimConfig(do_reflect=False)
     n, steps = 512, 200  # enough steps for most photons to terminate
     state = _mk_state(n, vol)
-    st, flu, exi, esc = photon_step_pallas(
+    st, flu, exi, esc, timed = photon_step_pallas(
         vol.labels.reshape(-1), vol.media, state, vol.shape, vol.unitinmm,
         cfg, steps, block_lanes=128, interpret=True)
     total = float(jnp.sum(flu)) + float(jnp.sum(esc)) + float(
-        jnp.sum(jnp.where(st.alive, st.w, 0.0)))
+        jnp.sum(timed)) + float(jnp.sum(jnp.where(st.alive, st.w, 0.0)))
     # roulette win/loss may leave a small statistical residue
     assert abs(total - n) / n < 0.02
     # the exitance image is the z=0-face subset of all escapes
@@ -83,10 +85,10 @@ def test_kernel_block_size_invariance():
     state = _mk_state(512, vol)
     args = (vol.labels.reshape(-1), vol.media, state, vol.shape,
             vol.unitinmm, cfg, 30)
-    _, flu_a, exi_a, _ = photon_step_pallas(*args, block_lanes=64,
-                                            interpret=True)
-    _, flu_b, exi_b, _ = photon_step_pallas(*args, block_lanes=512,
-                                            interpret=True)
+    _, flu_a, exi_a, *_ = photon_step_pallas(*args, block_lanes=64,
+                                             interpret=True)
+    _, flu_b, exi_b, *_ = photon_step_pallas(*args, block_lanes=512,
+                                             interpret=True)
     np.testing.assert_allclose(np.asarray(flu_a), np.asarray(flu_b),
                                rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(np.asarray(exi_a), np.asarray(exi_b),
@@ -98,10 +100,10 @@ def test_kernel_deposit_modes(deposit_mode):
     vol = V.benchmark_b1((16, 16, 16))
     cfg = V.SimConfig(do_reflect=False, deposit_mode=deposit_mode)
     state = _mk_state(256, vol)
-    st, flu, exi, esc = photon_step_pallas(
+    st, flu, *_ = photon_step_pallas(
         vol.labels.reshape(-1), vol.media, state, vol.shape, vol.unitinmm,
         cfg, 25, block_lanes=128, interpret=True)
-    st_r, flu_r, exi_r, esc_r = photon_steps_ref(
+    st_r, flu_r, *_ = photon_steps_ref(
         vol.labels.reshape(-1), vol.media, state, vol.shape, vol.unitinmm,
         cfg, 25)
     np.testing.assert_allclose(np.asarray(flu), np.asarray(flu_r),
@@ -123,6 +125,80 @@ def test_kernel_lowers_for_tpu():
     assert compiled is not None
 
 
+@pytest.mark.parametrize("ntg,reflect", [(4, False), (8, True)])
+def test_kernel_time_gated_fluence_matches_oracle(ntg, reflect):
+    """In-kernel gate-index computation: the gate-major (nvox*ntg,)
+    fluence grid must match the oracle, and its gate-sum the ungated
+    kernel's CW grid."""
+    import dataclasses
+
+    vol = V.benchmark_b2((16, 16, 16)) if reflect else V.benchmark_b1(
+        (16, 16, 16))
+    # a tight tmax so several gates fill AND weight times out in flight
+    cfg = V.SimConfig(do_reflect=reflect, tmax_ns=0.12, n_time_gates=ntg)
+    state = _mk_state(256, vol)
+    labels = vol.labels.reshape(-1)
+    args = (labels, vol.media, state, vol.shape, vol.unitinmm)
+
+    _, flu_k, _, _, timed_k = photon_step_pallas(
+        *args, cfg, 60, block_lanes=64, interpret=True)
+    _, flu_r, _, _, timed_r = photon_steps_ref(*args, cfg, 60)
+    np.testing.assert_allclose(np.asarray(flu_k), np.asarray(flu_r),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(timed_k), np.asarray(timed_r),
+                               rtol=1e-6, atol=1e-6)
+    # CW comparison: same trajectories, gates only partition deposition
+    cw = dataclasses.replace(cfg, n_time_gates=1)
+    _, flu_cw, *_ = photon_step_pallas(*args, cw, 60, block_lanes=64,
+                                       interpret=True)
+    gate_sum = np.asarray(flu_k).reshape(-1, ntg).sum(axis=1)
+    np.testing.assert_allclose(gate_sum, np.asarray(flu_cw),
+                               rtol=1e-5, atol=1e-6)
+    # the tight gate retires weight in flight
+    assert float(jnp.sum(timed_k)) > 0
+
+
+def test_kernel_detector_ppath_matches_oracle():
+    """Oracle parity for detector capture: the per-(detector, gate) TPSF
+    histogram, the weighted per-medium partial pathlengths and the
+    per-lane ppath state all match the pure-jnp reference."""
+    from repro.detectors import Detector, det_geometry
+
+    vol = V.benchmark_b1((16, 16, 16))
+    cfg = V.SimConfig(do_reflect=False, n_time_gates=4)
+    n, steps = 256, 60
+    state = _mk_state(n, vol)
+    dets = (Detector(8.0, 8.0, 5.0), Detector(3.0, 12.0, 2.5))
+    dg = det_geometry(dets)
+    n_media = vol.media.shape[0]
+    pp0 = jnp.zeros((n, n_media), jnp.float32)
+    labels = vol.labels.reshape(-1)
+    args = (labels, vol.media, state, vol.shape, vol.unitinmm, cfg, steps)
+
+    outs_k = photon_step_pallas(*args, block_lanes=64, interpret=True,
+                                ppath=pp0, det_geom=dg)
+    outs_r = photon_steps_ref(*args, ppath=pp0, det_geom=dg)
+    _, _, _, _, _, pp_k, dw_k, dp_k = outs_k
+    _, _, _, _, _, pp_r, dw_r, dp_r = outs_r
+    np.testing.assert_allclose(np.asarray(pp_k), np.asarray(pp_r),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(dw_k), np.asarray(dw_r),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(dp_k), np.asarray(dp_r),
+                               rtol=1e-5, atol=1e-5)
+    # something was actually detected, and detected weight is a subset
+    # of the z=0-face exitance
+    assert float(jnp.sum(dw_k)) > 0
+    assert float(jnp.sum(dw_k)) <= float(jnp.sum(outs_k[2])) + 1e-4
+    # detector capture must not perturb trajectories: state matches the
+    # detector-free kernel bit-for-bit
+    st_plain, *_ = photon_step_pallas(*args, block_lanes=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(outs_k[0].rng),
+                                  np.asarray(st_plain.rng))
+    np.testing.assert_array_equal(np.asarray(outs_k[0].alive),
+                                  np.asarray(st_plain.alive))
+
+
 def test_interpret_autodetect():
     """interpret=None must resolve to interpreter mode off-TPU and to
     the compiled Mosaic path on TPU (the old hard default silently
@@ -135,8 +211,8 @@ def test_interpret_autodetect():
     state = _mk_state(128, vol)
     args = (vol.labels.reshape(-1), vol.media, state, vol.shape,
             vol.unitinmm, cfg, 10)
-    _, flu_auto, _, _ = photon_step_pallas(*args, block_lanes=128,
-                                           interpret=None)
-    _, flu_expl, _, _ = photon_step_pallas(*args, block_lanes=128,
-                                           interpret=expected)
+    _, flu_auto, *_ = photon_step_pallas(*args, block_lanes=128,
+                                         interpret=None)
+    _, flu_expl, *_ = photon_step_pallas(*args, block_lanes=128,
+                                         interpret=expected)
     np.testing.assert_array_equal(np.asarray(flu_auto), np.asarray(flu_expl))

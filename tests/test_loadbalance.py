@@ -28,6 +28,20 @@ def test_fit_pilot_two_points_exact():
     np.testing.assert_allclose(m.predict(1e6), 0.097)
 
 
+def test_fit_pilot_equal_sizes_raises():
+    """Regression: equal pilot sizes used to divide by n2 - n1 == 0 and
+    hand partition_s3 an inf/NaN device model; now a clear error."""
+    with pytest.raises(ValueError, match="distinct photon counts"):
+        LB.fit_pilot([1e6, 1e6], [0.1, 0.2])
+    # the degenerate design is rejected on the lstsq path too
+    with pytest.raises(ValueError, match="distinct photon counts"):
+        LB.fit_pilot([5e5, 5e5, 5e5], [0.1, 0.11, 0.09])
+    # and a healthy fit still goes through partition_s3 cleanly
+    m = LB.fit_pilot([1e6, 5e6], [0.097, 0.273])
+    part = LB.partition_s3(10_000, [m, m])
+    assert sum(part) == 10_000 and all(np.isfinite(p) for p in part)
+
+
 def test_fit_pilot_lstsq():
     a_true, t0_true = 5e-8, 0.1
     ns = [1e6, 2e6, 5e6, 8e6]

@@ -116,6 +116,50 @@ print("OK", rel)
     assert "OK" in out
 
 
+def test_time_gated_sharded_and_chunked():
+    """Gate-aware merges (DESIGN.md §time-resolved): the 4-D time-gated
+    energy grid, detector TPSF histograms and timed-out accounting
+    survive the psum'd shard_map path and the host-side ChunkScheduler
+    merge, agreeing with the single-device run of the same photon set."""
+    out = _run("""
+import dataclasses
+import jax, numpy as np
+from repro.core import volume as V, simulator as S, analysis as A
+from repro.core.multidevice import simulate_sharded, ChunkScheduler
+from repro.detectors import Detector
+vol = V.benchmark_b1((16, 16, 16))
+cfg = dataclasses.replace(V.b1_config(), n_time_gates=6, steps_per_round=2)
+dets = (Detector(8.0, 8.0, 5.0),)
+from repro import sources as SRC
+src = SRC.Pencil(pos=(8.0, 8.0, 0.0))
+ref = S.simulate(vol, cfg, 2400, 256, 5, source=src, detectors=dets)
+assert ref.energy.shape == (16, 16, 16, 6)
+
+mesh = jax.make_mesh((8,), ("data",))
+res = simulate_sharded(vol, cfg, 2400, mesh, n_lanes=128, seed=5,
+                       source=src, detectors=dets)
+assert res.energy.shape == (16, 16, 16, 6)
+assert int(res.n_launched) == 2400
+assert abs(A.energy_balance(res)["residue_frac"]) < 1e-5
+rel = (np.abs(np.asarray(res.energy) - np.asarray(ref.energy)).max()
+       / np.asarray(ref.energy).max())
+assert rel < 1e-3, rel
+dw = np.abs(np.asarray(res.det_w) - np.asarray(ref.det_w)).max()
+assert dw < 1e-3 * max(np.asarray(ref.det_w).max(), 1.0), dw
+
+sched = ChunkScheduler(vol, cfg, n_lanes=128, source=src, detectors=dets)
+tot, stats = sched.run(2400, 600, seed=5)
+assert int(tot.n_launched) == 2400
+rel = (np.abs(np.asarray(tot.energy) - np.asarray(ref.energy)).max()
+       / np.asarray(ref.energy).max())
+assert rel < 1e-3, rel
+assert np.abs(np.asarray(tot.det_ppath) - np.asarray(ref.det_ppath)).max() \
+    < 1e-2
+print("OK")
+""")
+    assert "OK" in out
+
+
 def test_fused_pallas_engine_sharded_and_chunked():
     """The fused Pallas round executor runs under every scheduler
     (DESIGN.md §rounds): shard_map'd, chunked, and elastic runs agree

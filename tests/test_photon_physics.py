@@ -47,16 +47,21 @@ def _run_b2(n_photons=15_000, lanes=2048, seed=42, shape=(40, 40, 40),
 # ---------------------------------------------------------------------------
 
 def test_b1_energy_conservation():
+    # timed-out weight is tracked apart from the roulette residue, so the
+    # residue bound is ~25x tighter than the old 1e-4 (which had to
+    # absorb time-gate losses it could not distinguish)
     _, res = _run_b1()
     bal = A.energy_balance(res)
     assert bal["launched"] == 15_000
-    assert abs(bal["residue_frac"]) < 1e-4
+    assert bal["timed_out"] >= 0.0
+    assert abs(bal["residue_frac"]) < 1e-5
 
 
 def test_b2_energy_conservation():
     _, res = _run_b2()
     bal = A.energy_balance(res)
-    assert abs(bal["residue_frac"]) < 1e-4
+    assert bal["timed_out"] >= 0.0
+    assert abs(bal["residue_frac"]) < 1e-5
 
 
 def test_b1_axial_decay_matches_diffusion_theory():
@@ -129,7 +134,7 @@ def test_taylor_deposit_close_to_exact():
     e2 = float(jnp.sum(r_taylor.energy))
     assert abs(e1 - e2) / e1 < 0.02
     bal = A.energy_balance(r_taylor)
-    assert abs(bal["residue_frac"]) < 1e-3
+    assert abs(bal["residue_frac"]) < 1e-4
 
 
 def test_static_and_dynamic_modes_agree_statistically():
@@ -203,6 +208,32 @@ def test_time_gate_terminates():
     cfg = V.SimConfig(do_reflect=False, tmax_ns=0.05)  # ~11 mm of path
     res = S.simulate(vol, cfg, 2000, 512, 3)
     bal = A.energy_balance(res)
-    # gate kills weight in flight: residue is positive and bounded
-    assert bal["residue"] > 0
+    # gate kills weight in flight: it is accounted as timed_out, NOT as
+    # residue — the balance stays closed to roulette statistics even
+    # when the gate retires a large fraction of the launched weight
+    assert bal["timed_out"] > 100.0  # most photons die at this gate
+    assert float(res.timed_out_w) == bal["timed_out"]
+    assert abs(bal["residue_frac"]) < 1e-6
     assert int(res.steps) < 2000
+
+
+def test_off_center_source_axial_fit_clamps():
+    """Regression: a beam axis within 2 voxels of the volume edge used to
+    produce a negative slice start (empty/wrapped neighborhood) in
+    fit_axial_decay; the clamped neighborhood must return a finite
+    positive decay slope in the same ballpark as the centered fit."""
+    from repro import sources as SRC
+
+    vol = V.benchmark_b1((40, 40, 40))
+    cfg = V.SimConfig(do_reflect=False)
+    src = SRC.Pencil(pos=(1.0, 20.0, 0.0))  # 1 voxel from the x=0 edge
+    res = S.simulate(vol, cfg, 30_000, 4096, 11, source=src)
+    mu_fit = A.fit_axial_decay(res, vol, (8, 25), axis_xy=(1, 20))
+    assert np.isfinite(mu_fit) and mu_fit > 0
+    mu_th = A.mu_eff_theory(0.005, 1.0, 0.01)
+    # edge losses steepen the decay vs the infinite-medium theory value,
+    # but the clamped fit must stay in a physical range (the wrapped
+    # slice used to average in far-side voxels, skewing it arbitrarily)
+    assert 0.5 * mu_th < mu_fit < 3.0 * mu_th
+    with pytest.raises(ValueError, match="outside volume"):
+        A.fit_axial_decay(res, vol, (8, 25), axis_xy=(40, 20))
