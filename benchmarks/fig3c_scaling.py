@@ -61,7 +61,8 @@ sh = NamedSharding(mesh, P("data")); rep = NamedSharding(mesh, P())
 lo = fn.lower(jax.device_put(vol.labels.reshape(-1), rep),
               jax.device_put(vol.media, rep),
               jax.device_put(jnp.full((8,), 32, jnp.int32), sh),
-              jax.device_put(jnp.arange(8, dtype=jnp.int32)*32, sh),
+              jax.device_put(jnp.arange(8, dtype=jnp.uint32)*32, sh),
+              jax.device_put(jnp.zeros((8,), jnp.uint32), sh),
               jnp.uint32(1))
 txt = lo.compile().as_text()
 n_ar = len(re.findall(r"all-reduce", txt))
@@ -69,6 +70,9 @@ print("ALLREDUCE_OPS", n_ar)
 """
     proc = subprocess.run([sys.executable, "-c", script], env=env,
                           capture_output=True, text=True, timeout=600)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"fig3c HLO-inspection subprocess failed:\n{proc.stderr}")
     for line in proc.stdout.splitlines():
         if "ALLREDUCE_OPS" in line:
             out["allreduce_ops_8dev"] = int(line.split()[-1])

@@ -1,0 +1,173 @@
+"""Detected-photon recording overhead + replay Jacobian throughput.
+
+Measures, on the B2 benchmark (the heterogeneous sphere the replay
+Jacobian validation uses), the cost of the PR-4 replay machinery
+(DESIGN.md §replay) and writes a machine-readable ``BENCH_replay.json``
+at the repo root — the perf trajectory tracked per PR by CI alongside
+``BENCH_fused.json`` / ``BENCH_timegates.json``:
+
+  * forward overhead: photons/s of the detector-equipped forward run
+    with the detected-photon id buffer off vs on, per round executor —
+    the id buffer adds one prefix-sum + one tiny scatter per round, so
+    the overhead should be small;
+  * replay throughput: records/s of ``replay_jacobian`` over the
+    recorded ids (two transport passes + the (nvox, n_det) scatter);
+  * physics cross-check: the replay Jacobian's per-medium row sums must
+    match the forward run's ``det_ppath`` (the §replay identity) and
+    every replayed photon must land in its recorded detector.
+
+  PYTHONPATH=src python -m benchmarks.replay [--quick] [--engines jnp]
+
+Note on the Pallas numbers off-TPU: the kernel auto-detects the backend
+and runs under the Pallas *interpreter* on CPU/GPU (correctness rig,
+not a perf path), so off-TPU the jnp rows are the meaningful overhead
+trajectory.  ``meta.interpreted_pallas`` records which mode ran.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import analysis as An
+from repro.core import simulator as S
+from repro.core import volume as V
+from repro.detectors import Detector
+from repro.kernels.photon_step.photon_step import default_interpret
+from repro.replay import detected_records, replay_jacobian
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _time_forward(vol, cfg, n_photons, lanes, dets, cap, engine, seed,
+                  src, repeats):
+    fn = S.make_simulator(vol, cfg, lanes, source=src, engine=engine,
+                         detectors=dets, record_detected=cap)
+    args = (vol.labels.reshape(-1), vol.media, n_photons, seed)
+    res = jax.block_until_ready(fn(*args))  # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best, res
+
+
+def run(quick=False, engines=("jnp", "pallas"),
+        out_path: Path | str = REPO_ROOT / "BENCH_replay.json"):
+    size = 20 if quick else 40
+    vol = V.benchmark_b2((size, size, size))
+    cfg = V.SimConfig(do_reflect=True, steps_per_round=4)
+    src = {"type": "pencil", "pos": (size / 2.0, size / 2.0, 0.0)}
+    dets = (Detector(size * 0.7, size / 2.0, size * 0.15),
+            Detector(size * 0.3, size * 0.3, size * 0.1))
+    seed = 7
+    interpreted = default_interpret()
+    jnp_load = (3_000, 512) if quick else (20_000, 2048)
+    workload = {
+        "jnp": jnp_load,
+        "pallas": (1_000, 256) if interpreted else jnp_load,
+    }
+    repeats = 2 if quick else 3
+    cap = 1 << 16
+
+    results: dict = {
+        "meta": {
+            "bench": "B2-pencil",
+            "size": size,
+            "quick": quick,
+            "steps_per_round": cfg.steps_per_round,
+            "detectors": len(dets),
+            "record_capacity": cap,
+            "backend": jax.default_backend(),
+            "interpreted_pallas": interpreted,
+            "jax": jax.__version__,
+            "machine": platform.machine(),
+        },
+        "engines": {},
+        "replay": {},
+    }
+
+    res_for_replay = None
+    for engine in engines:
+        n_photons, lanes = workload[engine]
+        t_off, _ = _time_forward(vol, cfg, n_photons, lanes, dets, 0,
+                                 engine, seed, src, repeats)
+        t_on, res = _time_forward(vol, cfg, n_photons, lanes, dets, cap,
+                                  engine, seed, src, repeats)
+        n_rec = int(np.asarray(res.det_rec_n))
+        row = {
+            "n_photons": n_photons,
+            "lanes": lanes,
+            "photons_per_s_record_off": n_photons / t_off,
+            "photons_per_s_record_on": n_photons / t_on,
+            "recording_overhead_frac": (t_on - t_off) / t_off,
+            "records": n_rec,
+            "overflow": int(np.asarray(res.det_rec_overflow)),
+        }
+        results["engines"][engine] = row
+        print(f"[{engine:6s}] {n_photons} photons: "
+              f"{n_photons/t_off/1e3:8.2f} -> {n_photons/t_on/1e3:8.2f} "
+              f"photons/ms (recording overhead "
+              f"{100*row['recording_overhead_frac']:+.1f}%), "
+              f"{n_rec} records", flush=True)
+        # replay transports with the jnp engine; prefer its forward
+        # records, but any engine's records are valid (same id set)
+        if engine == "jnp" or res_for_replay is None:
+            res_for_replay = res
+            replay_lanes = lanes
+
+    # -- replay throughput + physics cross-check (jnp transport) --------
+    recs = detected_records(res_for_replay)
+    lanes = replay_lanes
+    t0 = time.perf_counter()
+    rep = replay_jacobian(vol, cfg, recs, dets, source=src, seed=seed,
+                          n_lanes=lanes)
+    t_replay = time.perf_counter() - t0  # includes compile: one-shot cost
+    t0 = time.perf_counter()
+    rep = replay_jacobian(vol, cfg, recs, dets, source=src, seed=seed,
+                          n_lanes=lanes)
+    t_replay_warm = time.perf_counter() - t0
+    det_exact = int((rep.replayed_det == rep.det).sum())
+    M = An.jacobian_medium_sums(rep.jacobian, vol)
+    ppath = np.asarray(res_for_replay.det_ppath, np.float64)
+    ppath_err = float(np.abs(M - ppath).max() / max(ppath.max(), 1e-12))
+    assert det_exact == rep.n_records, (
+        f"replay must reproduce every recorded detector: "
+        f"{det_exact}/{rep.n_records}")
+    assert ppath_err < 1e-4, f"jacobian/ppath identity violated: {ppath_err}"
+    results["replay"] = {
+        "records": rep.n_records,
+        "records_per_s_cold": rep.n_records / t_replay,
+        "records_per_s": rep.n_records / t_replay_warm,
+        "detector_exact": det_exact,
+        "jacobian_ppath_rel_err": ppath_err,
+    }
+    print(f"[replay] {rep.n_records} records in {t_replay_warm:.2f}s "
+          f"({rep.n_records/t_replay_warm/1e3:.3f} records/ms), "
+          f"{det_exact}/{rep.n_records} detector-exact, "
+          f"ppath identity rel err {ppath_err:.2e}", flush=True)
+
+    out_path = Path(out_path)
+    out_path.write_text(json.dumps(results, indent=2))
+    print(f"wrote {out_path}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--engines", nargs="+", default=("jnp", "pallas"),
+                    choices=("jnp", "pallas"))
+    args = ap.parse_args()
+    run(quick=args.quick, engines=tuple(args.engines))
+
+
+if __name__ == "__main__":
+    main()

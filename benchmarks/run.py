@@ -19,8 +19,8 @@ def main():
     quick = not args.full
 
     from benchmarks import (fig2_optimizations, fig3a_workgroup,
-                            fig3b_devicelb, fig3c_scaling, fused, roofline,
-                            sources, timegates)
+                            fig3b_devicelb, fig3c_scaling, fused, replay,
+                            roofline, sources, timegates)
 
     t0 = time.time()
     results = {}
@@ -58,6 +58,11 @@ def main():
     print("Sources — per-source-type launch/regeneration cost")
     print("=" * 70, flush=True)
     results["sources"] = sources.run(quick=quick)
+
+    print("=" * 70)
+    print("Replay — detected-photon recording overhead + Jacobian replay")
+    print("=" * 70, flush=True)
+    results["replay"] = replay.run(quick=quick)
 
     print("=" * 70)
     print("Roofline — per (arch x shape x mesh) from the dry-run")

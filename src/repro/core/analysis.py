@@ -108,6 +108,31 @@ def rescale_detected(result: SimResult, volume: Volume,
     return tot_w * np.exp(-mean_l @ (new_mua - old_mua))
 
 
+def jacobian_medium_sums(jacobian, volume: Volume) -> np.ndarray:
+    """Aggregate a replay Jacobian over the voxels of each medium label.
+
+    ``jacobian`` is the ``(nx, ny, nz, n_det)`` volume from
+    ``repro.replay.replay_jacobian``; returns ``(n_det, n_media)`` —
+    the detected weight's first-order sensitivity to each *medium's*
+    absorption coefficient.  By construction this equals the forward
+    run's ``det_ppath`` (weight-weighted partial pathlength sums): each
+    detected packet contributes ``w_exit * L_m`` to medium ``m`` in both
+    quantities.  That identity is the replay subsystem's primary
+    consistency check (DESIGN.md §replay), and it connects the Jacobian
+    to :func:`rescale_detected`, whose first-order expansion is
+    ``dW_d = -sum_m det_ppath[d, m] * dmua_m``.
+    """
+    jac = np.asarray(jacobian, np.float64)
+    labels = np.asarray(volume.labels).reshape(-1)
+    n_media = volume.media.shape[0]
+    n_det = jac.shape[-1]
+    flat = jac.reshape(-1, n_det)
+    out = np.zeros((n_det, n_media), np.float64)
+    for m in range(n_media):
+        out[:, m] = flat[labels == m].sum(axis=0)
+    return out
+
+
 def energy_balance(result: SimResult) -> dict[str, float]:
     """Launched = absorbed + escaped + timed_out (+ roulette residue).
 

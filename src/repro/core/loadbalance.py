@@ -27,12 +27,32 @@ from typing import Callable, Sequence
 
 @dataclasses.dataclass(frozen=True)
 class DeviceModel:
-    """Fitted linear runtime model of one device (group)."""
+    """Fitted linear runtime model of one device (group).
+
+    ``a`` must be a positive finite seconds-per-photon slope: the
+    partitioners divide by it (S2's throughput, S3's waterfilling), so a
+    zero/negative/NaN slope would silently produce negative or NaN
+    shares that ``_largest_remainder_round`` then mangles into a
+    nonsense partition.  Validated here so every entry point — hand-built
+    models included — fails loudly instead.
+    """
 
     name: str
     a: float      # seconds per photon
     t0: float     # fixed overhead, seconds
     cores: int = 1
+
+    def __post_init__(self):
+        if not (math.isfinite(self.a) and self.a > 0.0):
+            raise ValueError(
+                f"device model {self.name!r} needs a positive finite "
+                f"seconds-per-photon slope, got a={self.a!r} — refit the "
+                f"pilot (fit_pilot) with larger photon counts or more "
+                f"repeats")
+        if not (math.isfinite(self.t0) and self.t0 >= 0.0):
+            raise ValueError(
+                f"device model {self.name!r} needs a nonnegative finite "
+                f"overhead, got t0={self.t0!r}")
 
     def predict(self, n: float) -> float:
         return self.a * max(n, 0.0) + (self.t0 if n > 0 else 0.0)
@@ -65,7 +85,19 @@ def fit_pilot(ns: Sequence[float], times: Sequence[float], name: str = "dev",
 
         A = np.stack([np.asarray(ns, float), np.ones(len(ns))], axis=1)
         (a, t0), *_ = np.linalg.lstsq(A, np.asarray(times, float), rcond=None)
-    a = max(float(a), 1e-12)
+    a = float(a)
+    if not (math.isfinite(a) and a > 0.0):
+        # a noisy pilot (e.g. the larger run timed *faster* than the
+        # smaller one) fits a non-positive slope; the old silent
+        # clamp-to-1e-12 made the device look ~infinitely fast and the
+        # partitioners handed it essentially the whole photon budget —
+        # fail loudly with the measurements instead
+        raise ValueError(
+            f"pilot fit for {name!r} produced a non-positive photon cost "
+            f"slope a={a:.3g} (times {list(times)} s at photon counts "
+            f"{list(ns)}): timing noise exceeded the signal — rerun the "
+            f"pilot with larger photon counts, more repeats, or a warmed-up "
+            f"device")
     return DeviceModel(name=name, a=a, t0=max(float(t0), 0.0), cores=cores)
 
 

@@ -33,6 +33,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.loadbalance import DeviceModel, partition_s2
+from repro.core.rng import split_id64
 from repro.core.simulator import SimResult, build_sim_fn
 from repro.core.volume import SimConfig, Source, Volume
 from repro.detectors import as_detectors
@@ -58,26 +59,37 @@ def sharded_sim_fn(volume: Volume, cfg: SimConfig, n_lanes: int,
                    mesh: Mesh, axis_names: tuple[str, ...] = ("data",),
                    mode: str = "dynamic",
                    source: PhotonSource | Source | None = None,
-                   engine: str = "jnp", detectors=None):
+                   engine: str = "jnp", detectors=None,
+                   record_detected: int = 0):
     """Build a shard_map'd simulator over ``axis_names`` of ``mesh``.
 
-    The returned fn takes per-device photon counts/offsets (one entry per
-    device on the sharded axes) and returns a globally-reduced SimResult.
-    Volume data is replicated and the source / detector configs are baked
-    in statically; the fluence volume (time-gated when
-    ``cfg.n_time_gates > 1``), the detector TPSF histograms and the
-    scalar accounting are psum'd.  ``engine`` selects the per-shard round
-    executor (``"jnp"`` | ``"pallas"``, DESIGN.md §rounds) — each shard
-    runs the fused ``cfg.steps_per_round`` rounds locally, so the
-    collective structure (one psum per grid) is engine- and
-    gate-independent.
+    The returned fn takes per-device photon counts and 64-bit id offsets
+    (as uint32 lo/hi words, one entry per device on the sharded axes)
+    and returns a globally-reduced SimResult.  Volume data is replicated
+    and the source / detector configs are baked in statically; the
+    fluence volume (time-gated when ``cfg.n_time_gates > 1``), the
+    detector TPSF histograms and the scalar accounting are psum'd.
+    ``engine`` selects the per-shard round executor (``"jnp"`` |
+    ``"pallas"``, DESIGN.md §rounds) — each shard runs the fused
+    ``cfg.steps_per_round`` rounds locally, so the collective structure
+    (one psum per grid) is engine- and gate-independent.
+
+    ``record_detected`` gives every shard its own ``record_detected``-row
+    detected-photon id buffer (DESIGN.md §replay); the per-shard buffers
+    are concatenated over the mesh (``det_rec`` becomes
+    ``(n_shards * capacity, 4)`` with per-shard valid counts in the
+    rank-1 ``det_rec_n``) and the overflow counters are psum'd —
+    ``repro.replay.detected_records`` reassembles the global record
+    list.
     """
     raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes, mode,
-                       source, engine, detectors=detectors)
+                       source, engine, detectors=detectors,
+                       record_detected=record_detected)
     ax = axis_names
 
-    def worker(labels_flat, media, counts, offsets, seed):
-        res = raw(labels_flat, media, counts[0], seed, offsets[0])
+    def worker(labels_flat, media, counts, offsets_lo, offsets_hi, seed):
+        res = raw(labels_flat, media, counts[0], seed, offsets_lo[0],
+                  offsets_hi[0])
         summed = {
             "energy": res.energy,
             "exitance": res.exitance,
@@ -85,21 +97,26 @@ def sharded_sim_fn(volume: Volume, cfg: SimConfig, n_lanes: int,
             "timed_out_w": res.timed_out_w,
             "det_w": res.det_w,
             "det_ppath": res.det_ppath,
+            "det_rec_overflow": res.det_rec_overflow,
             "n_launched": res.n_launched,
             "launched_w": res.launched_w,
         }
         for a in ax:
             summed = {k: jax.lax.psum(v, a) for k, v in summed.items()}
-        # steps stays per-shard (rank-1 so it can concatenate over the mesh)
-        return SimResult(steps=res.steps[None], **summed)
+        # steps and the record buffer/cursor stay per-shard (rank-1 /
+        # row-blocked so they concatenate over the mesh)
+        return SimResult(steps=res.steps[None], det_rec=res.det_rec,
+                         det_rec_n=res.det_rec_n[None], **summed)
 
     pspec = P(ax)  # counts/offsets sharded across the photon axes
     mapped = _shard_map(
         worker,
         mesh=mesh,
-        in_specs=(P(), P(), pspec, pspec, P()),
+        in_specs=(P(), P(), pspec, pspec, pspec, P()),
         out_specs=SimResult(energy=P(), exitance=P(), escaped_w=P(),
                             timed_out_w=P(), det_w=P(), det_ppath=P(),
+                            det_rec=P(ax), det_rec_n=P(ax),
+                            det_rec_overflow=P(),
                             n_launched=P(), launched_w=P(), steps=P(ax)),
     )
     return jax.jit(mapped)
@@ -111,8 +128,16 @@ def simulate_sharded(volume: Volume, cfg: SimConfig, n_photons: int,
                      n_lanes: int = 1024, seed: int = 1234,
                      source: PhotonSource | Source | None = None,
                      mode: str = "dynamic", engine: str = "jnp",
-                     detectors=None) -> SimResult:
-    """Run one distributed simulation over the mesh's photon axes."""
+                     detectors=None, record_detected: int = 0,
+                     id_offset: int = 0) -> SimResult:
+    """Run one distributed simulation over the mesh's photon axes.
+
+    ``id_offset`` shifts the whole campaign's global photon-id range (a
+    host-side Python int, 64-bit: chunked mega-campaigns pass their
+    chunk start here); per-shard offsets are split into uint32 lo/hi
+    words so shards beyond the 2**32 boundary keep disjoint RNG
+    streams.
+    """
     n_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
     if partition is None:
         base = n_photons // n_shards
@@ -123,19 +148,24 @@ def simulate_sharded(volume: Volume, cfg: SimConfig, n_photons: int,
         if counts.shape != (n_shards,) or counts.sum() != n_photons:
             raise ValueError("partition must have one entry per shard and "
                              "sum to n_photons")
-    offsets = np.concatenate([[0], np.cumsum(counts)[:-1]]).astype(np.int32)
+    offsets = int(id_offset) + np.concatenate(
+        [[0], np.cumsum(counts.astype(np.uint64))[:-1]]).astype(np.uint64)
+    offsets_lo = (offsets & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    offsets_hi = (offsets >> np.uint64(32)).astype(np.uint32)
 
     fn = sharded_sim_fn(volume, cfg, n_lanes, mesh, axis_names, mode, source,
-                        engine, detectors)
+                        engine, detectors, record_detected)
     shard_sharding = NamedSharding(mesh, P(axis_names))
     repl = NamedSharding(mesh, P())
     dev_counts = jax.device_put(jnp.asarray(counts), shard_sharding)
-    dev_offsets = jax.device_put(jnp.asarray(offsets), shard_sharding)
+    dev_off_lo = jax.device_put(jnp.asarray(offsets_lo), shard_sharding)
+    dev_off_hi = jax.device_put(jnp.asarray(offsets_hi), shard_sharding)
     return fn(
         jax.device_put(volume.labels.reshape(-1), repl),
         jax.device_put(volume.media, repl),
         dev_counts,
-        dev_offsets,
+        dev_off_lo,
+        dev_off_hi,
         jnp.uint32(seed),
     )
 
@@ -176,7 +206,8 @@ class ChunkScheduler:
                  devices: Sequence[jax.Device] | None = None,
                  mode: str = "dynamic",
                  source: PhotonSource | Source | None = None,
-                 engine: str = "jnp", detectors=None):
+                 engine: str = "jnp", detectors=None,
+                 record_detected: int = 0):
         self.volume = volume
         self.cfg = cfg
         self.devices = list(devices or jax.devices())
@@ -184,6 +215,7 @@ class ChunkScheduler:
         self._mode = mode
         self._engine = engine
         self._detectors = detectors
+        self._record_detected = int(record_detected)
         self._default_source = as_source(source)
         # one jitted fn per source (sources are frozen/hashable);
         # placement follows the device_put of the inputs
@@ -195,7 +227,8 @@ class ChunkScheduler:
         if source not in self._fns:
             raw = build_sim_fn(self.volume.shape, self.volume.unitinmm,
                                self.cfg, self._n_lanes, self._mode, source,
-                               self._engine, detectors=self._detectors)
+                               self._engine, detectors=self._detectors,
+                               record_detected=self._record_detected)
             self._fns[source] = jax.jit(raw)
         return self._fns[source]
 
@@ -215,10 +248,11 @@ class ChunkScheduler:
 
         def dispatch(dev: jax.Device):
             ch = queue.pop()
+            lo, hi = split_id64(ch.start_id)
             res = fn(
                 jax.device_put(self._labels, dev),
                 jax.device_put(self._media, dev),
-                ch.count, seed, ch.start_id,
+                ch.count, seed, lo, hi,
             )
             inflight[dev] = (ch, res)
 
@@ -235,6 +269,8 @@ class ChunkScheduler:
             "timed_out_w": 0.0,
             "det_w": np.zeros(dw_shape, np.float32),
             "det_ppath": np.zeros(dp_shape, np.float32),
+            "det_rec": [],
+            "det_rec_overflow": 0,
             "n_launched": 0,
             "launched_w": 0.0,
             "steps": 0,
@@ -247,6 +283,9 @@ class ChunkScheduler:
             acc["timed_out_w"] += float(res.timed_out_w)
             acc["det_w"] += np.asarray(res.det_w)
             acc["det_ppath"] += np.asarray(res.det_ppath)
+            acc["det_rec"].append(
+                np.asarray(res.det_rec)[: int(res.det_rec_n)])
+            acc["det_rec_overflow"] += int(res.det_rec_overflow)
             acc["n_launched"] += int(res.n_launched)
             acc["launched_w"] += float(res.launched_w)
             acc["steps"] += int(res.steps)
@@ -265,6 +304,8 @@ class ChunkScheduler:
             if not progressed:
                 time.sleep(0.001)
 
+        det_rec = (np.concatenate(acc["det_rec"], axis=0)
+                   if acc["det_rec"] else np.zeros((0, 4), np.uint32))
         total = SimResult(
             energy=jnp.asarray(acc["energy"]),
             exitance=jnp.asarray(acc["exitance"]),
@@ -272,6 +313,9 @@ class ChunkScheduler:
             timed_out_w=jnp.float32(acc["timed_out_w"]),
             det_w=jnp.asarray(acc["det_w"]),
             det_ppath=jnp.asarray(acc["det_ppath"]),
+            det_rec=jnp.asarray(det_rec),
+            det_rec_n=jnp.int32(det_rec.shape[0]),
+            det_rec_overflow=jnp.int32(acc["det_rec_overflow"]),
             n_launched=jnp.int32(acc["n_launched"]),
             launched_w=jnp.float32(acc["launched_w"]),
             steps=jnp.int32(acc["steps"]),
@@ -297,7 +341,8 @@ class ElasticSimulator:
     def __init__(self, volume: Volume, cfg: SimConfig, n_photons: int,
                  chunk_size: int, n_lanes: int = 1024, seed: int = 1234,
                  source: PhotonSource | Source | None = None,
-                 engine: str = "jnp", detectors=None):
+                 engine: str = "jnp", detectors=None,
+                 record_detected: int = 0):
         self.volume = volume
         self.cfg = cfg
         self.seed = seed
@@ -305,6 +350,7 @@ class ElasticSimulator:
         self.detectors = as_detectors(detectors)
         self.chunk_size = chunk_size
         self.n_photons = n_photons
+        self.record_detected = int(record_detected)
         self.pending: list[Chunk] = [
             Chunk(s, min(chunk_size, n_photons - s))
             for s in range(0, n_photons, chunk_size)
@@ -319,11 +365,17 @@ class ElasticSimulator:
         self.timed_out_w = 0.0
         self.det_w = np.zeros(dw_shape, np.float32)
         self.det_ppath = np.zeros(dp_shape, np.float32)
+        # per-chunk record slices, concatenated lazily by the det_rec
+        # property — appending per merge keeps many-chunk campaigns
+        # linear instead of re-copying the whole buffer every chunk
+        self._det_rec_parts: list[np.ndarray] = []
+        self.det_rec_overflow = 0
         self.n_launched = 0
         self.launched_w = 0.0
         self._raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes,
                                  source=self.source, engine=engine,
-                                 detectors=self.detectors)
+                                 detectors=self.detectors,
+                                 record_detected=self.record_detected)
         self._jit = jax.jit(self._raw)
 
     # -- execution ---------------------------------------------------------
@@ -360,10 +412,11 @@ class ElasticSimulator:
 
     def _run_chunk(self, ch: Chunk, dev: jax.Device) -> SimResult:
         vol = self.volume
+        lo, hi = split_id64(ch.start_id)
         return self._jit(
             jax.device_put(vol.labels.reshape(-1), dev),
             jax.device_put(vol.media, dev),
-            ch.count, self.seed, ch.start_id,
+            ch.count, self.seed, lo, hi,
         )
 
     def _merge(self, ch: Chunk, res: SimResult):
@@ -373,9 +426,27 @@ class ElasticSimulator:
         self.timed_out_w += float(res.timed_out_w)
         self.det_w += np.asarray(res.det_w)
         self.det_ppath += np.asarray(res.det_ppath)
+        part = np.asarray(res.det_rec)[: int(res.det_rec_n)]
+        if part.size:
+            self._det_rec_parts.append(part)
+        self.det_rec_overflow += int(res.det_rec_overflow)
         self.n_launched += int(res.n_launched)
         self.launched_w += float(res.launched_w)
         self.completed.append(ch)
+
+    @property
+    def det_rec(self) -> np.ndarray:
+        """Accumulated (n, 4) uint32 detected-photon id records."""
+        if len(self._det_rec_parts) != 1:
+            merged = (np.concatenate(self._det_rec_parts, axis=0)
+                      if self._det_rec_parts
+                      else np.zeros((0, 4), np.uint32))
+            self._det_rec_parts = [merged]
+        return self._det_rec_parts[0]
+
+    @det_rec.setter
+    def det_rec(self, value):
+        self._det_rec_parts = [np.asarray(value, np.uint32).reshape(-1, 4)]
 
     def result(self) -> SimResult:
         return SimResult(
@@ -385,6 +456,9 @@ class ElasticSimulator:
             timed_out_w=jnp.float32(self.timed_out_w),
             det_w=jnp.asarray(self.det_w),
             det_ppath=jnp.asarray(self.det_ppath),
+            det_rec=jnp.asarray(self.det_rec),
+            det_rec_n=jnp.int32(self.det_rec.shape[0]),
+            det_rec_overflow=jnp.int32(self.det_rec_overflow),
             n_launched=jnp.int32(self.n_launched),
             launched_w=jnp.float32(self.launched_w),
             steps=jnp.int32(0),
@@ -420,6 +494,8 @@ class ElasticSimulator:
             "timed_out_w": np.float64(self.timed_out_w),
             "det_w": self.det_w.copy(),
             "det_ppath": self.det_ppath.copy(),
+            "det_rec": self.det_rec.copy(),
+            "det_rec_overflow": np.int64(self.det_rec_overflow),
             "n_launched": np.int64(self.n_launched),
             "launched_w": np.float64(self.launched_w),
             "pending": np.asarray(
@@ -474,6 +550,10 @@ class ElasticSimulator:
             self.det_w = np.asarray(state["det_w"], np.float32).copy()
             self.det_ppath = np.asarray(state["det_ppath"],
                                         np.float32).copy()
+        if "det_rec" in state:
+            self.det_rec = np.asarray(state["det_rec"],
+                                      np.uint32).reshape(-1, 4).copy()
+            self.det_rec_overflow = int(state.get("det_rec_overflow", 0))
         self.n_launched = int(state["n_launched"])
         self.launched_w = float(state.get("launched_w", state["n_launched"]))
         self.pending = [Chunk(int(s), int(c)) for s, c in state["pending"]]

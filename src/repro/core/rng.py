@@ -13,9 +13,21 @@ This gives every photon an independent, reproducible stream regardless of
 which lane / device / restart simulates it — the property that makes
 checkpoint/restart and elastic re-partitioning deterministic (§DESIGN.md
 fault tolerance).
+
+Photon ids are 64-bit, carried as a :class:`PhotonId` two-word
+``(lo, hi)`` uint32 pair (TPUs have no 64-bit integer vector units, and
+JAX disables x64 by default).  Both words fold into the seeding: the low
+word XORs into the splitmix base exactly as the historical 32-bit id
+did, the high word adds a per-round offset to the splitmix chain.  A
+zero high word contributes nothing, so every id below 2**32 produces a
+bit-identical state to the legacy single-word seeding — and campaigns
+beyond 2**32 photons get distinct streams instead of silently wrapping
+and re-simulating the first photons' trajectories (DESIGN.md §replay).
 """
 
 from __future__ import annotations
+
+from typing import NamedTuple
 
 import jax.numpy as jnp
 
@@ -24,6 +36,51 @@ _U32 = jnp.uint32
 _GOLDEN = jnp.uint32(0x9E3779B9)
 _MIX1 = jnp.uint32(0x85EBCA6B)
 _MIX2 = jnp.uint32(0xC2B2AE35)
+# odd multiplier folding the high id word into the chain (any odd
+# constant is a bijection on uint32, so distinct high words can never
+# cancel; 0 maps to 0, keeping sub-2**32 ids bit-identical to the
+# legacy single-word seeding)
+_HI_MULT = jnp.uint32(0x85EBCA77)
+
+
+class PhotonId(NamedTuple):
+    """A 64-bit global photon id as a two-word uint32 pair.
+
+    ``lo``/``hi`` are arrays (or scalars) of identical shape; arithmetic
+    on ids is done word-wise with explicit carries (see
+    ``simulator._regenerate``).  Anywhere a photon id is accepted, a
+    plain uint32 array is still allowed and means ``hi == 0``.
+    """
+
+    lo: jnp.ndarray
+    hi: jnp.ndarray
+
+    @property
+    def shape(self):
+        return jnp.shape(self.lo)
+
+
+def as_photon_id(ids) -> PhotonId:
+    """Coerce a plain uint32 id array (hi=0) or PhotonId to PhotonId."""
+    if isinstance(ids, PhotonId):
+        return ids
+    lo = jnp.asarray(ids, _U32)
+    return PhotonId(lo=lo, hi=jnp.zeros_like(lo))
+
+
+def split_id64(start_id: int):
+    """Split a host-side Python int id into (lo, hi) uint32 words.
+
+    Returned as ``np.uint32`` scalars: jit canonicalizes bare Python
+    ints to int32 *before* the traced function can widen them, so a
+    plain int above 2**31 - 1 would overflow at the call boundary.
+    """
+    import numpy as np
+
+    start_id = int(start_id)
+    if start_id < 0 or start_id >= 1 << 64:
+        raise ValueError(f"photon id out of uint64 range: {start_id}")
+    return np.uint32(start_id & 0xFFFFFFFF), np.uint32(start_id >> 32)
 
 
 def splitmix32(x: jnp.ndarray) -> jnp.ndarray:
@@ -38,15 +95,28 @@ def splitmix32(x: jnp.ndarray) -> jnp.ndarray:
 def seed_state(seed, photon_id) -> jnp.ndarray:
     """Derive a (..., 4) uint32 xorshift128 state from (seed, photon_id).
 
+    ``photon_id`` is a plain uint32 array (legacy 32-bit ids) or a
+    :class:`PhotonId` pair.  The high word perturbs every round of the
+    splitmix chain, so two ids that differ in *either* word always
+    yield distinct 128-bit states (the low word makes the bases
+    distinct; for equal bases the high word makes each chain step
+    distinct, and splitmix32 is a bijection).  ``hi == 0`` is
+    bit-identical to the legacy single-word seeding.
+
     Zero states are fixed up (xorshift must never be seeded all-zero).
     """
     seed = jnp.asarray(seed, _U32)
-    pid = jnp.asarray(photon_id, _U32)
+    if isinstance(photon_id, PhotonId):
+        pid = jnp.asarray(photon_id.lo, _U32)
+        hmix = (jnp.asarray(photon_id.hi, _U32) * _HI_MULT).astype(_U32)
+    else:
+        pid = jnp.asarray(photon_id, _U32)
+        hmix = jnp.uint32(0)
     base = (seed ^ (pid * jnp.uint32(0x9E3779B1))).astype(_U32)
     words = []
     x = base
     for k in range(4):
-        x = splitmix32(x + jnp.uint32(k) * _GOLDEN)
+        x = splitmix32((x + jnp.uint32(k) * _GOLDEN + hmix).astype(_U32))
         words.append(x)
     state = jnp.stack(words, axis=-1)
     # guarantee non-zero state per lane

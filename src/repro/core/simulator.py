@@ -43,9 +43,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import photon as ph
+from repro.core import rng as xrng
 from repro.core.volume import SimConfig, Source, Volume
 from repro.detectors import (Detector, accumulate_capture, as_detectors,
-                             det_geometry)
+                             det_geometry, update_capture,
+                             validate_detectors)
 from repro.sources import PhotonSource, as_source
 
 ENGINES = ("jnp", "pallas")
@@ -75,6 +77,18 @@ class SimResult(NamedTuple):
     det_ppath: jnp.ndarray = np.zeros((0, 0), np.float32)  # (n_det,
     #                          n_media) weight-weighted partial pathlength
     #                          sums (mm) of detected photons
+    # -- detected-photon id records (DESIGN.md §replay; populated when
+    #    build_sim_fn(record_detected=capacity) is set) --
+    det_rec: jnp.ndarray = np.zeros((0, 4), np.uint32)  # (capacity, 4)
+    #                          rows of [id_lo, id_hi, det, gate]: the
+    #                          64-bit global photon id (two uint32
+    #                          words), detector index and exit time gate
+    #                          of each capture, in capture order.  Only
+    #                          the first det_rec_n rows are valid.
+    det_rec_n: jnp.ndarray = np.int32(0)  # () valid record count
+    det_rec_overflow: jnp.ndarray = np.int32(0)  # () captures dropped
+    #                          once the buffer filled (det_w still
+    #                          counts them; only the id record is lost)
 
 
 class _Carry(NamedTuple):
@@ -88,22 +102,52 @@ class _Carry(NamedTuple):
     #                          when no detectors are configured
     det_w: jnp.ndarray       # (n_det * ntg,) flat detected-weight TPSF
     det_ppath: jnp.ndarray   # (n_det, n_media) detected ppath sums
+    rec: jnp.ndarray         # (capacity + 1, 4) uint32 detected-photon id
+    #                          records [id_lo, id_hi, det, gate]; the last
+    #                          row is a write-off slot for masked /
+    #                          overflowing scatters ((0, 4) when recording
+    #                          is off)
+    rec_n: jnp.ndarray       # () int32 record cursor
+    rec_overflow: jnp.ndarray  # () int32 captures dropped at capacity
+    lane_ids: jnp.ndarray    # (n_lanes, 2) uint32 [lo, hi] global photon
+    #                          id of each lane's in-flight photon ((0, 2)
+    #                          when recording is off)
     remaining: jnp.ndarray   # dynamic mode: shared photon counter
     launched_per_lane: jnp.ndarray  # static mode: per-lane launch count
-    next_id: jnp.ndarray     # global photon id counter (RNG seeding)
+    next_id_lo: jnp.ndarray  # global 64-bit photon id counter (RNG
+    next_id_hi: jnp.ndarray  #   seeding), as a uint32 (lo, hi) pair
     launched_w: jnp.ndarray  # total initial weight launched so far
     steps: jnp.ndarray
 
 
+def _as_id_pair(next_id):
+    """Coerce a legacy scalar id counter to a (lo, hi) uint32 pair."""
+    if isinstance(next_id, tuple):
+        lo, hi = next_id
+        return jnp.asarray(lo).astype(jnp.uint32), \
+            jnp.asarray(hi).astype(jnp.uint32)
+    return jnp.asarray(next_id).astype(jnp.uint32), jnp.uint32(0)
+
+
 def _regenerate(state, remaining, launched_per_lane, next_id, quota,
-                source, seed, mode, shape, ppath=None):
+                source, seed, mode, shape, ppath=None, lane_ids=None):
     """Relaunch photons in dead lanes according to the workload mode.
+
+    ``next_id`` is the 64-bit global photon id counter as a ``(lo, hi)``
+    uint32 scalar pair (a legacy plain scalar is accepted and means
+    ``hi = 0``); it is returned advanced, as a pair, with the low-word
+    carry propagated so campaigns beyond 2**32 photons keep distinct
+    RNG streams instead of wrapping (DESIGN.md §replay).  Ids below
+    2**32 produce bit-identical launch states to the historical 32-bit
+    counter.
 
     ``ppath`` (detector runs only) is the per-lane partial-pathlength
     accumulator; relaunched lanes start their new photon with zeroed
-    pathlengths.  It is threaded through (and returned as a trailing
-    element) only when given, so detector-free engines keep the
-    historical 5-tuple contract.
+    pathlengths.  ``lane_ids`` (detected-photon recording only) is the
+    (n_lanes, 2) uint32 [lo, hi] id of each lane's in-flight photon,
+    updated on relaunch.  Each is threaded through (and returned as a
+    trailing element) only when given, so detector-free engines keep
+    the historical tuple contract.
     """
     dead = ~state.alive
     if mode == "dynamic":
@@ -113,7 +157,14 @@ def _regenerate(state, remaining, launched_per_lane, next_id, quota,
         relaunch = dead & (launched_per_lane < quota)
     n_relaunch = jnp.sum(relaunch.astype(jnp.int32))
     rank = jnp.cumsum(relaunch.astype(jnp.int32)) - 1  # 0-based among relaunched
-    ids = (next_id + rank).astype(jnp.uint32)
+    next_lo, next_hi = _as_id_pair(next_id)
+    ids_lo = (next_lo + rank.astype(jnp.uint32)).astype(jnp.uint32)
+    # low-word wraparound carries into the high word (only meaningful on
+    # relaunch lanes, whose rank is >= 0; masked lanes may compute a
+    # garbage id but their sample is discarded by the merge below)
+    ids_hi = (next_hi + (ids_lo < next_lo).astype(jnp.uint32)).astype(
+        jnp.uint32)
+    ids = xrng.PhotonId(lo=ids_lo, hi=ids_hi)
     pos, direc, w0, rng = source.sample(ids, seed)
     fresh = ph.launch(pos, direc, w0, rng, relaunch, shape)
 
@@ -125,20 +176,26 @@ def _regenerate(state, remaining, launched_per_lane, next_id, quota,
 
     merged = ph.PhotonState(*(merge(n, o) for n, o in zip(fresh, state)))
     merged = merged._replace(alive=state.alive | relaunch)
+    new_lo = (next_lo + n_relaunch.astype(jnp.uint32)).astype(jnp.uint32)
+    new_hi = (next_hi + (new_lo < next_lo).astype(jnp.uint32)).astype(
+        jnp.uint32)
     out = (
         merged,
         remaining - n_relaunch,
         launched_per_lane + relaunch.astype(jnp.int32),
-        next_id + n_relaunch,
+        (new_lo, new_hi),
         jnp.sum(jnp.where(relaunch, w0, 0.0)),
     )
     if ppath is not None:
         out = out + (jnp.where(relaunch[:, None], 0.0, ppath),)
+    if lane_ids is not None:
+        fresh_ids = jnp.stack([ids_lo, ids_hi], axis=1)
+        out = out + (jnp.where(relaunch[:, None], fresh_ids, lane_ids),)
     return out
 
 
 def _maybe_regenerate(state, remaining, launched_per_lane, next_id, quota,
-                      source, seed, mode, shape, ppath=None):
+                      source, seed, mode, shape, ppath=None, lane_ids=None):
     """Regenerate only when some lane will actually relaunch.
 
     The full regeneration path costs two prefix-sums plus a
@@ -155,16 +212,20 @@ def _maybe_regenerate(state, remaining, launched_per_lane, next_id, quota,
         any_relaunch = jnp.any(dead) & (remaining > 0)
     else:
         any_relaunch = jnp.any(dead & (launched_per_lane < quota))
+    next_pair = _as_id_pair(next_id)
 
     def do(_):
-        return _regenerate(state, remaining, launched_per_lane, next_id,
-                           quota, source, seed, mode, shape, ppath)
+        return _regenerate(state, remaining, launched_per_lane, next_pair,
+                           quota, source, seed, mode, shape, ppath,
+                           lane_ids)
 
     def skip(_):
-        out = (state, remaining, launched_per_lane, next_id,
+        out = (state, remaining, launched_per_lane, next_pair,
                jnp.float32(0.0))
         if ppath is not None:
             out = out + (ppath,)
+        if lane_ids is not None:
+            out = out + (lane_ids,)
         return out
 
     return jax.lax.cond(any_relaunch, do, skip, None)
@@ -175,20 +236,32 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
                  source: PhotonSource | None = None,
                  engine: str = "jnp", block_lanes: int = 256,
                  interpret: bool | None = None,
-                 detectors: tuple[Detector, ...] | None = None):
+                 detectors: tuple[Detector, ...] | None = None,
+                 record_detected: int = 0):
     """Build the raw (unjitted) simulation function.
 
-    Returns ``sim_fn(labels_flat, media, n_photons, seed, id_offset=0)
-    -> SimResult``; ``n_photons``, ``seed`` and ``id_offset`` are
-    traced, so one executable serves pilot runs and production runs.
+    Returns ``sim_fn(labels_flat, media, n_photons, seed, id_offset=0,
+    id_offset_hi=0) -> SimResult``; ``n_photons``, ``seed`` and the id
+    offset are traced, so one executable serves pilot runs and
+    production runs.
     ``source`` is any registered photon source (repro.sources; pencil
     beam by default) and is baked in at trace time — its parameters are
     static, its randomness counter-seeded per photon id.  ``id_offset``
+    (with ``id_offset_hi`` the high uint32 word of the 64-bit offset)
     gives this shard a disjoint global photon-id range — the
     counter-based RNG (both the source's launch stream and the in-flight
     stream) then makes multi-device / elastic / restarted runs simulate
     *exactly* the same photon set as a single-device run
-    (DESIGN.md §determinism, §sources).
+    (DESIGN.md §determinism, §sources).  Ids are carried as two-word
+    uint32 pairs end-to-end, so campaigns beyond 2**32 photons never
+    wrap onto already-simulated RNG streams (DESIGN.md §replay).
+
+    ``record_detected`` > 0 additionally records the global photon id,
+    detector index and exit time gate of up to that many detector
+    captures into the fixed-capacity ``SimResult.det_rec`` buffer
+    (requires ``detectors``; DESIGN.md §replay).  Once full, further
+    captures still accumulate into ``det_w``/``det_ppath`` but their id
+    records are dropped and counted in ``det_rec_overflow``.
 
     ``engine`` selects the round executor (DESIGN.md §rounds):
     ``"jnp"`` advances ``cfg.steps_per_round`` segments in an in-graph
@@ -218,7 +291,17 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
     source = as_source(source)
     detectors = as_detectors(detectors)
     n_det = len(detectors)
+    if n_det:
+        validate_detectors(detectors, shape)
     det_geom = det_geometry(detectors) if n_det else None
+    capacity = int(record_detected)
+    if capacity < 0:
+        raise ValueError(f"record_detected must be >= 0, got {capacity}")
+    record = capacity > 0
+    if record and not n_det:
+        raise ValueError(
+            "record_detected > 0 requires detectors: the id buffer records "
+            "detector captures (DESIGN.md §replay)")
     nx, ny, nz = shape
     nvox = nx * ny * nz
     nxy = nx * ny
@@ -248,10 +331,12 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
         if interpret is None:
             interpret = default_interpret()
 
-    def sim_fn(labels_flat, media, n_photons, seed, id_offset=0):
+    def sim_fn(labels_flat, media, n_photons, seed, id_offset=0,
+               id_offset_hi=0):
         n_photons = jnp.asarray(n_photons, jnp.int32)
         seed = jnp.asarray(seed, jnp.uint32)
-        id_offset = jnp.asarray(id_offset, jnp.int32)
+        id_lo = jnp.asarray(id_offset, jnp.uint32)
+        id_hi = jnp.asarray(id_offset_hi, jnp.uint32)
         # static mode: equal distribution with the remainder spread over the
         # first (n_photons mod n_lanes) lanes, so exactly n_photons launch
         lane_idx = jnp.arange(n_lanes, dtype=jnp.int32)
@@ -280,9 +365,17 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
             ppath=jnp.zeros((n_lanes, ppath_w), jnp.float32),
             det_w=jnp.zeros((n_det * ntg,), jnp.float32),
             det_ppath=jnp.zeros((n_det, n_media), jnp.float32),
+            # one write-off row past the capacity absorbs masked and
+            # overflowing record scatters (lock-step-safe: slots come
+            # from a prefix sum, so live writes never collide)
+            rec=jnp.zeros((capacity + 1 if record else 0, 4), jnp.uint32),
+            rec_n=jnp.int32(0),
+            rec_overflow=jnp.int32(0),
+            lane_ids=jnp.zeros((n_lanes if record else 0, 2), jnp.uint32),
             remaining=n_photons,
             launched_per_lane=jnp.zeros((n_lanes,), jnp.int32),
-            next_id=id_offset,
+            next_id_lo=id_lo,
+            next_id_hi=id_hi,
             launched_w=jnp.float32(0.0),
             steps=jnp.int32(0),
         )
@@ -303,9 +396,12 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
             in ONE scatter per grid instead of one per segment.
             Detector capture scatters into round-local (n_det * ntg,)
             and (n_det, n_media) accumulators per segment (they are
-            tiny, unlike the fluence volume)."""
+            tiny, unlike the fluence volume).  With recording on, the
+            trailing (cap_det, cap_gate) carry tracks the round's
+            per-lane capture (at most one: escape kills the lane)."""
             def seg(k, rc):
-                st, pp, dep_i, dep_w, ex_i, ex_w, esc, timed, dw, dp = rc
+                (st, pp, dep_i, dep_w, ex_i, ex_w, esc, timed, dw, dp,
+                 capd, capg) = rc
                 res = ph.step(st, labels_flat, media, shape, unitinmm, cfg)
                 gate = ph.time_gate_bins(res.dep_t, cfg.tmax_ns, ntg)
                 dep_i = dep_i.at[k].set(res.dep_idx * ntg + gate)
@@ -318,9 +414,13 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
                 if n_det:
                     pp, dw, dp = accumulate_capture(pp, dw, dp, res, gate,
                                                     det_geom, ntg)
+                if record:
+                    capd, capg = update_capture(capd, capg, res, gate,
+                                                det_geom)
                 return (res.state, pp, dep_i, dep_w, ex_i, ex_w, esc,
-                        timed, dw, dp)
+                        timed, dw, dp, capd, capg)
 
+            cap_w = n_lanes if record else 0
             init = (
                 state,
                 ppath,
@@ -332,39 +432,71 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
                 jnp.float32(0.0),
                 jnp.zeros((n_det * ntg,), jnp.float32),
                 jnp.zeros((n_det, n_media), jnp.float32),
+                jnp.full((cap_w,), -1, jnp.int32),
+                jnp.zeros((cap_w,), jnp.int32),
             )
             return jax.lax.fori_loop(0, K, seg, init)
 
+        def append_records(c: _Carry, lane_ids, capd, capg):
+            """Append this round's captures to the fixed-capacity id
+            buffer: slots come from a prefix sum over captured lanes
+            (lock-step-safe, like the dynamic-mode regeneration), and
+            masked / over-capacity writes land in the write-off row."""
+            captured = capd >= 0
+            cap_i = captured.astype(jnp.int32)
+            slot = c.rec_n + jnp.cumsum(cap_i) - 1
+            ok = captured & (slot < capacity)
+            slot = jnp.where(ok, slot, capacity)
+            vals = jnp.stack([lane_ids[:, 0], lane_ids[:, 1],
+                              capd.astype(jnp.uint32),
+                              capg.astype(jnp.uint32)], axis=1)
+            rec = c.rec.at[slot].set(vals)
+            n_cap = jnp.sum(cap_i)
+            rec_n = jnp.minimum(c.rec_n + n_cap, capacity)
+            overflow = c.rec_overflow + (c.rec_n + n_cap - rec_n)
+            return rec, rec_n, overflow
+
         def body(c: _Carry):
-            if n_det:
+            next_pair = (c.next_id_lo, c.next_id_hi)
+            lane_ids = c.lane_ids
+            if record:
+                (state, remaining, launched, next_id, w_new, ppath,
+                 lane_ids) = _maybe_regenerate(
+                    c.state, c.remaining, c.launched_per_lane, next_pair,
+                    quota, source, seed, mode, shape, c.ppath, c.lane_ids)
+            elif n_det:
                 (state, remaining, launched, next_id, w_new,
                  ppath) = _maybe_regenerate(
-                    c.state, c.remaining, c.launched_per_lane, c.next_id,
+                    c.state, c.remaining, c.launched_per_lane, next_pair,
                     quota, source, seed, mode, shape, c.ppath)
             else:
                 state, remaining, launched, next_id, w_new = _maybe_regenerate(
-                    c.state, c.remaining, c.launched_per_lane, c.next_id,
+                    c.state, c.remaining, c.launched_per_lane, next_pair,
                     quota, source, seed, mode, shape)
                 ppath = c.ppath
+            capd = capg = None
             if engine == "pallas":
                 outs = photon_step_pallas(
                     labels_flat, media, state, shape, unitinmm, cfg, K,
                     block_lanes, interpret,
-                    ppath=ppath if n_det else None, det_geom=det_geom)
+                    ppath=ppath if n_det else None, det_geom=det_geom,
+                    record=record)
                 state, flu, exi, esc, timed = outs[:5]
                 energy = c.energy + flu
                 exitance = c.exitance + exi
                 escaped_w = c.escaped_w + jnp.sum(esc)
                 timed_out_w = c.timed_out_w + jnp.sum(timed)
                 if n_det:
-                    ppath, dw, dp = outs[5:]
+                    ppath, dw, dp = outs[5:8]
                     det_w = c.det_w + dw
                     det_ppath = c.det_ppath + dp
                 else:
                     det_w, det_ppath = c.det_w, c.det_ppath
+                if record:
+                    capd, capg = outs[8:]
             else:
                 (state, ppath, dep_i, dep_w, ex_i, ex_w, esc, timed,
-                 dw, dp) = round_jnp(state, ppath)
+                 dw, dp, capd, capg) = round_jnp(state, ppath)
                 energy = c.energy.at[dep_i.reshape(-1)].add(dep_w.reshape(-1))
                 exitance = c.exitance.at[ex_i.reshape(-1)].add(
                     ex_w.reshape(-1))
@@ -372,6 +504,11 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
                 timed_out_w = c.timed_out_w + timed
                 det_w = c.det_w + dw
                 det_ppath = c.det_ppath + dp
+            if record:
+                rec, rec_n, rec_overflow = append_records(
+                    c, lane_ids, capd, capg)
+            else:
+                rec, rec_n, rec_overflow = c.rec, c.rec_n, c.rec_overflow
             return _Carry(
                 state=state,
                 energy=energy,
@@ -381,9 +518,14 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
                 ppath=ppath,
                 det_w=det_w,
                 det_ppath=det_ppath,
+                rec=rec,
+                rec_n=rec_n,
+                rec_overflow=rec_overflow,
+                lane_ids=lane_ids,
                 remaining=remaining,
                 launched_per_lane=launched,
-                next_id=next_id,
+                next_id_lo=next_id[0],
+                next_id_hi=next_id[1],
                 launched_w=c.launched_w + w_new,
                 steps=c.steps + K,
             )
@@ -403,7 +545,12 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
             timed_out_w=final.timed_out_w + capped_w,
             det_w=final.det_w.reshape((n_det, ntg)),
             det_ppath=final.det_ppath,
-            n_launched=final.next_id - id_offset,
+            det_rec=final.rec[:capacity],
+            det_rec_n=final.rec_n,
+            det_rec_overflow=final.rec_overflow,
+            # launches per run stay < 2**31, so the uint32 low-word
+            # difference is the exact count even across a 2**32 boundary
+            n_launched=(final.next_id_lo - id_lo).astype(jnp.int32),
             launched_w=final.launched_w,
             steps=final.steps,
         )
@@ -416,11 +563,14 @@ def make_simulator(volume: Volume, cfg: SimConfig, n_lanes: int,
                    source: PhotonSource | Source | None = None,
                    engine: str = "jnp", block_lanes: int = 256,
                    interpret: bool | None = None,
-                   detectors=None):
+                   detectors=None, record_detected: int = 0):
     """Jitted single-device simulator for a fixed (volume, cfg, lanes,
-    source, engine, detectors)."""
+    source, engine, detectors).  Detector geometry is validated here
+    against the volume footprint (a disk that misses the z=0 face can
+    never capture)."""
     raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes, mode,
-                       source, engine, block_lanes, interpret, detectors)
+                       source, engine, block_lanes, interpret, detectors,
+                       record_detected)
     return jax.jit(raw)
 
 
@@ -430,7 +580,7 @@ def simulate(volume: Volume, cfg: SimConfig, n_photons: int,
              mode: str = "dynamic", engine: str = "jnp",
              block_lanes: int = 256,
              interpret: bool | None = None,
-             detectors=None) -> SimResult:
+             detectors=None, record_detected: int = 0) -> SimResult:
     """Convenience one-shot simulation on the current default device.
 
     ``source`` accepts any registered source type (repro.sources), the
@@ -439,10 +589,12 @@ def simulate(volume: Volume, cfg: SimConfig, n_photons: int,
     round executor (``"jnp"`` | ``"pallas"``, DESIGN.md §rounds);
     ``block_lanes`` / ``interpret`` tune the Pallas executor only.
     ``detectors`` (repro.detectors spec) enables TPSF recording on the
-    z=0 face (DESIGN.md §time-resolved).
+    z=0 face (DESIGN.md §time-resolved); ``record_detected`` sets the
+    detected-photon id buffer capacity for replay (DESIGN.md §replay).
     """
     sim_fn = make_simulator(volume, cfg, n_lanes, mode, source, engine,
-                            block_lanes, interpret, detectors)
+                            block_lanes, interpret, detectors,
+                            record_detected)
     return sim_fn(
         volume.labels.reshape(-1),
         volume.media,

@@ -83,6 +83,34 @@ def to_dicts(detectors: Sequence[Detector]) -> list[dict]:
     return [{"x": d.x, "y": d.y, "radius": d.radius} for d in detectors]
 
 
+def validate_detectors(detectors: Sequence[Detector],
+                       shape: tuple[int, int, int]) -> None:
+    """Reject detector disks that cannot capture anything on this volume.
+
+    A detector lies on the z=0 face, so its disk must intersect the
+    ``[0, nx] x [0, ny]`` footprint of the volume; a disk placed fully
+    outside (or tangent to) the footprint silently records zero weight
+    forever — almost always a units mistake (mm vs voxel) or a detector
+    meant for a different volume.  Called at ``make_simulator`` time so
+    the error carries the actionable context, not a mid-campaign NaN
+    hunt.
+    """
+    nx, ny = float(shape[0]), float(shape[1])
+    for i, d in enumerate(detectors):
+        # distance from the disk center to the closest point of the
+        # footprint rectangle (0 when the center lies inside it)
+        dx = max(0.0 - d.x, 0.0, d.x - nx)
+        dy = max(0.0 - d.y, 0.0, d.y - ny)
+        if dx * dx + dy * dy >= d.radius * d.radius:
+            raise ValueError(
+                f"detector {i} (x={d.x}, y={d.y}, radius={d.radius}) lies "
+                f"entirely outside the z=0 face of the volume (footprint "
+                f"[0, {nx}] x [0, {ny}] voxels) and can never capture a "
+                f"photon — detector coordinates are in voxel units on the "
+                f"z=0 face; move the disk inside the footprint or enlarge "
+                f"its radius")
+
+
 def det_geometry(detectors: Sequence[Detector]) -> jnp.ndarray:
     """(n_det, 3) float32 rows of (x, y, radius^2) for the capture test."""
     rows = [[d.x, d.y, d.radius * d.radius] for d in detectors]
@@ -129,3 +157,23 @@ def accumulate_capture(pp, dw, dp, res, gate, det_geom, ntg):
     dw = dw.at[didx * ntg + gate].add(dwgt)
     dp = dp.at[didx].add(dwgt[:, None] * pp)
     return pp, dw, dp
+
+
+def update_capture(cap_det, cap_gate, res, gate, det_geom):
+    """One segment of detected-photon id bookkeeping (DESIGN.md §replay).
+
+    ``cap_det``/``cap_gate`` are per-lane int32 state for the current
+    fused round: the detector index (-1: not captured this round) and
+    exit time gate of the lane's capture.  A lane captures at most once
+    per round — escape kills the lane and regeneration only runs
+    between rounds — so a plain masked select is race-free.  Shared by
+    the jnp round executor, the Pallas kernel and the ref oracle so all
+    three record identically (the ``detector_bins`` call is common
+    subexpression with :func:`accumulate_capture` and fuses away under
+    jit).
+    """
+    didx, dwgt = detector_bins(res.esc_pos, res.esc_w, det_geom)
+    newly = dwgt > 0
+    cap_det = jnp.where(newly, didx, cap_det)
+    cap_gate = jnp.where(newly, gate, cap_gate)
+    return cap_det, cap_gate

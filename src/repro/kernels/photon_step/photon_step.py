@@ -57,7 +57,7 @@ from jax.experimental import pallas as pl
 
 from repro.core import photon as ph
 from repro.core.volume import SimConfig
-from repro.detectors import accumulate_capture
+from repro.detectors import accumulate_capture, update_capture
 
 
 def default_interpret() -> bool:
@@ -74,10 +74,12 @@ def default_interpret() -> bool:
 
 
 def _kernel(labels_ref, media_ref, *refs,
-            shape, unitinmm, cfg: SimConfig, n_steps: int, n_det: int):
+            shape, unitinmm, cfg: SimConfig, n_steps: int, n_det: int,
+            record: bool):
     # unpack the variadic refs: 8 state inputs [+ ppath + det_geom], then
     # 8 state outputs + fluence/exitance/esc/timed [+ ppath + det_w +
-    # det_ppath] — assembled to match photon_step_pallas's specs
+    # det_ppath] [+ cap_det + cap_gate] — assembled to match
+    # photon_step_pallas's specs
     (pos_ref, dir_ref, ivox_ref, w_ref, s_ref, t_ref, rng_ref,
      alive_ref) = refs[:8]
     if n_det:
@@ -88,7 +90,9 @@ def _kernel(labels_ref, media_ref, *refs,
     (out_pos, out_dir, out_ivox, out_w, out_s, out_t, out_rng,
      out_alive, fluence_ref, exitance_ref, esc_ref, timed_ref) = outs[:12]
     if n_det:
-        out_ppath, det_w_ref, det_ppath_ref = outs[12:]
+        out_ppath, det_w_ref, det_ppath_ref = outs[12:15]
+    if record:
+        cap_det_ref, cap_gate_ref = outs[15:]
 
     ntg = int(cfg.n_time_gates)
 
@@ -113,7 +117,9 @@ def _kernel(labels_ref, media_ref, *refs,
         det_geom = det_geom_ref[...]
 
     def body(_, carry):
-        if n_det:
+        if record:
+            st, flu, exi, esc, timed, pp, dw, dp, capd, capg = carry
+        elif n_det:
             st, flu, exi, esc, timed, pp, dw, dp = carry
         else:
             st, flu, exi, esc, timed = carry
@@ -127,6 +133,10 @@ def _kernel(labels_ref, media_ref, *refs,
         if n_det:
             pp, dw, dp = accumulate_capture(pp, dw, dp, res, gate,
                                             det_geom, ntg)
+            if record:
+                capd, capg = update_capture(capd, capg, res, gate, det_geom)
+                return (res.state, flu, exi, esc, timed, pp, dw, dp,
+                        capd, capg)
             return (res.state, flu, exi, esc, timed, pp, dw, dp)
         return (res.state, flu, exi, esc, timed)
 
@@ -136,6 +146,9 @@ def _kernel(labels_ref, media_ref, *refs,
     if n_det:
         init = init + (ppath_ref[...], jnp.zeros_like(det_w_ref),
                        jnp.zeros_like(det_ppath_ref))
+    if record:
+        init = init + (jnp.full((n,), -1, jnp.int32),
+                       jnp.zeros((n,), jnp.int32))
     final = jax.lax.fori_loop(0, n_steps, body, init)
     state, flu_add, exi_add, esc, timed = final[:5]
 
@@ -153,21 +166,28 @@ def _kernel(labels_ref, media_ref, *refs,
     fluence_ref[...] += flu_add
     exitance_ref[...] += exi_add
     if n_det:
-        pp, dw_add, dp_add = final[5:]
+        pp, dw_add, dp_add = final[5:8]
         out_ppath[...] = pp
         det_w_ref[...] += dw_add
         det_ppath_ref[...] += dp_add
+    if record:
+        cap_det_ref[...] = final[8]
+        cap_gate_ref[...] = final[9]
 
 
 def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
                        shape, unitinmm, cfg: SimConfig, n_steps: int,
                        block_lanes: int = 256,
                        interpret: bool | None = None,
-                       ppath=None, det_geom=None):
+                       ppath=None, det_geom=None, record: bool = False):
     """Advance all lanes ``n_steps`` segments; returns
     ``(new_state, fluence_flat, exitance_flat, escaped_per_lane,
     timed_per_lane)`` — plus ``(ppath, det_w_flat, det_ppath)`` when
-    detectors are configured.
+    detectors are configured, plus per-lane ``(cap_det, cap_gate)``
+    int32 capture records when ``record`` is set (DESIGN.md §replay:
+    detector index of this round's capture, -1 for none, and its exit
+    time gate — the caller owns the global photon ids and appends the
+    records to the fixed-capacity id buffer).
 
     ``fluence_flat`` is gate-major ``(nvox * cfg.n_time_gates,)``
     (``(nvox,)`` for the CW case, bit-identical to the ungated kernel),
@@ -195,6 +215,8 @@ def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
     nxy = shape[0] * shape[1]
     n_media = media.shape[0]
     n_det = 0 if det_geom is None else det_geom.shape[0]
+    if record and not n_det:
+        raise ValueError("record=True requires detectors (det_geom)")
 
     def lane_spec(extra=()):
         return pl.BlockSpec((block_lanes,) + extra,
@@ -246,10 +268,16 @@ def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
         ]
         out_specs += [lane_spec((n_media,)), full_spec(n_det * ntg),
                       full_spec(n_det, n_media)]
+    if record:
+        out_shapes += [
+            jax.ShapeDtypeStruct((n,), jnp.int32),   # cap_det (-1: none)
+            jax.ShapeDtypeStruct((n,), jnp.int32),   # cap_gate
+        ]
+        out_specs += [lane_spec(), lane_spec()]
 
     kernel = functools.partial(
         _kernel, shape=shape, unitinmm=unitinmm, cfg=cfg, n_steps=n_steps,
-        n_det=n_det)
+        n_det=n_det, record=record)
     outs = pl.pallas_call(
         kernel,
         grid=(nblocks,),

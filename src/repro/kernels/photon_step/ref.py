@@ -17,16 +17,17 @@ import jax.numpy as jnp
 
 from repro.core import photon as ph
 from repro.core.volume import SimConfig
-from repro.detectors import accumulate_capture
+from repro.detectors import accumulate_capture, update_capture
 
 
 def photon_steps_ref(labels_flat, media, state: ph.PhotonState,
                      shape, unitinmm, cfg: SimConfig, n_steps: int,
-                     ppath=None, det_geom=None):
+                     ppath=None, det_geom=None, record=False):
     """Returns ``(new_state, fluence_flat, exitance_flat,
     escaped_per_lane, timed_per_lane)`` — plus
-    ``(ppath, det_w_flat, det_ppath)`` when detectors are configured
-    (same contract as ``photon_step_pallas``)."""
+    ``(ppath, det_w_flat, det_ppath)`` when detectors are configured,
+    plus ``(cap_det, cap_gate)`` per-lane capture records when
+    ``record`` is set (same contract as ``photon_step_pallas``)."""
     if (ppath is None) != (det_geom is None):
         raise ValueError("ppath and det_geom must be given together")
     nvox = labels_flat.shape[0]
@@ -35,9 +36,13 @@ def photon_steps_ref(labels_flat, media, state: ph.PhotonState,
     n = state.w.shape[0]
     n_media = media.shape[0]
     n_det = 0 if det_geom is None else det_geom.shape[0]
+    if record and not n_det:
+        raise ValueError("record=True requires detectors (det_geom)")
 
     def body(_, carry):
-        if n_det:
+        if record:
+            st, flu, exi, esc, timed, pp, dw, dp, capd, capg = carry
+        elif n_det:
             st, flu, exi, esc, timed, pp, dw, dp = carry
         else:
             st, flu, exi, esc, timed = carry
@@ -51,6 +56,10 @@ def photon_steps_ref(labels_flat, media, state: ph.PhotonState,
         if n_det:
             pp, dw, dp = accumulate_capture(pp, dw, dp, res, gate,
                                             det_geom, ntg)
+            if record:
+                capd, capg = update_capture(capd, capg, res, gate, det_geom)
+                return (res.state, flu, exi, esc, timed, pp, dw, dp,
+                        capd, capg)
             return (res.state, flu, exi, esc, timed, pp, dw, dp)
         return (res.state, flu, exi, esc, timed)
 
@@ -60,4 +69,7 @@ def photon_steps_ref(labels_flat, media, state: ph.PhotonState,
     if n_det:
         init = init + (ppath, jnp.zeros((n_det * ntg,), jnp.float32),
                        jnp.zeros((n_det, n_media), jnp.float32))
+    if record:
+        init = init + (jnp.full((n,), -1, jnp.int32),
+                       jnp.zeros((n,), jnp.int32))
     return jax.lax.fori_loop(0, n_steps, body, init)

@@ -63,7 +63,24 @@ def main(argv=None):
                          "(repro.detectors), e.g. "
                          '\'[{"x": 40, "y": 30, "radius": 2}]\'; records '
                          "per-detector TPSF + mean partial pathlengths")
+    ap.add_argument("--save-detected", type=int, default=0, metavar="CAP",
+                    help="record detected-photon ids (global photon id, "
+                         "detector, exit gate) for replay (DESIGN.md "
+                         "§replay); requires --detectors.  CAP is the id-"
+                         "buffer capacity PER SIMULATION UNIT: the whole "
+                         "run on one device, per shard with --devices "
+                         "all, per chunk with --chunk (buffers are "
+                         "concatenated host-side) — check the reported "
+                         "overflow either way")
+    ap.add_argument("--replay", action="store_true",
+                    help="after the forward run, replay the recorded "
+                         "detected photons into per-detector absorption "
+                         "Jacobian volumes (requires --save-detected)")
     args = ap.parse_args(argv)
+    if args.save_detected and not args.detectors:
+        ap.error("--save-detected requires --detectors")
+    if args.replay and not args.save_detected:
+        ap.error("--replay requires --save-detected")
 
     source = json.loads(args.source) if args.source else None
     detectors = D.as_detectors(
@@ -83,18 +100,21 @@ def main(argv=None):
     t0 = time.time()
     if args.chunk:
         sched = ChunkScheduler(vol, cfg, n_lanes=lanes, source=source,
-                               engine=args.engine, detectors=detectors)
+                               engine=args.engine, detectors=detectors,
+                               record_detected=args.save_detected)
         res, stats = sched.run(args.photons, args.chunk, seed=args.seed)
         print("per-device photons:", stats)
     elif args.devices == "all" and len(jax.devices()) > 1:
         mesh = jax.make_mesh((len(jax.devices()),), ("data",))
         res = simulate_sharded(vol, cfg, args.photons, mesh,
                                n_lanes=lanes, seed=args.seed, source=source,
-                               engine=args.engine, detectors=detectors)
+                               engine=args.engine, detectors=detectors,
+                               record_detected=args.save_detected)
     else:
         res = S.simulate(vol, cfg, args.photons, lanes, args.seed,
                          source=source, engine=args.engine,
-                         detectors=detectors)
+                         detectors=detectors,
+                         record_detected=args.save_detected)
     jax.block_until_ready(res)
     dt = time.time() - t0
 
@@ -121,6 +141,29 @@ def main(argv=None):
                   f"weight={tot[i]:.3f} tpsf-peak@{peak:.3f} ns")
         print("mean partial pathlengths (mm/medium):")
         print(np.array_str(A.detector_mean_ppath(res), precision=2))
+    if args.save_detected:
+        from repro.replay import detected_records, replay_jacobian
+
+        recs = detected_records(res)
+        print(f"detected-photon records: {recs.shape[0]} "
+              f"(overflow: {int(np.asarray(res.det_rec_overflow))} — "
+              f"raise --save-detected if nonzero)")
+        if args.replay and recs.shape[0]:
+            t0 = time.time()
+            rep = replay_jacobian(vol, cfg, recs, detectors, source=source,
+                                  seed=args.seed, n_lanes=lanes)
+            dt = time.time() - t0
+            ok = int((rep.replayed_det == rep.det).sum())
+            print(f"replay: {rep.n_records} photons in {dt:.2f}s "
+                  f"({rep.n_records/dt/1e3:.2f} photons/ms), "
+                  f"{ok}/{rep.n_records} detector-exact")
+            jac = rep.jacobian
+            med = A.jacobian_medium_sums(jac, vol)
+            for i, d in enumerate(detectors):
+                nz = int(np.sum(jac[..., i] > 0))
+                print(f"  J[det {i}]: sum={jac[..., i].sum():.3e} "
+                      f"(weight*mm), nonzero voxels={nz}, per-medium "
+                      f"{np.array_str(med[i], precision=3)}")
     return res
 
 

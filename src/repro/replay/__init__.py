@@ -1,0 +1,246 @@
+"""Detected-photon replay: bit-exact re-simulation + absorption Jacobians.
+
+The counter-seeded RNG (repro.core.rng) makes every photon's trajectory
+a pure function of ``(seed, photon_id)`` — any photon can be
+re-simulated bit-exactly on any device, any engine, any time.  The
+detected-photon id buffer (``SimResult.det_rec``, DESIGN.md §replay)
+tells us *which* photon ids reached each detector.  This module
+combines the two into the workload every image-reconstruction pipeline
+downstream of MCX-CL consumes: the absorption sensitivity (Jacobian)
+volume of each detector reading.
+
+For a detected packet exiting with weight ``w`` after a path spending
+``L_v`` mm in voxel ``v`` (exact Beer-Lambert deposition),
+
+    w = w0 * exp(-sum_v mua_v * L_v)   =>   dw/dmua_v = -w * L_v.
+
+Summing over a detector's packets gives the exact first-order
+sensitivity of its detected weight.  :func:`replay_jacobian` therefore
+re-launches exactly the recorded ids in two lock-step passes:
+
+  pass A  re-runs the trajectories and reads off each packet's exit
+          weight (and exit gate — bit-identical to the forward run by
+          the determinism contract);
+  pass B  re-runs them again (the RNG makes both passes identical) and
+          scatter-adds ``w_exit * seg_len`` of every transport segment
+          into the ``(nvox, n_det)`` Jacobian volume of the packet's
+          recorded detector.
+
+The per-medium row sums of the result equal the forward run's
+``det_ppath`` (weight-weighted partial pathlengths) — the consistency
+check :func:`repro.core.analysis.jacobian_medium_sums` exposes and
+tests/test_replay.py pins, alongside a finite-difference validation
+against a perturbed forward run.
+
+Replay cost is ~2x forward transport for the detected subset only —
+typically a tiny fraction of the campaign — and is embarrassingly
+parallel over records (chunked over fixed-size lane batches here).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import photon as ph
+from repro.core import rng as xrng
+from repro.core.simulator import SimResult
+from repro.core.volume import SimConfig, Volume
+from repro.detectors import as_detectors, det_geometry, detector_bins
+from repro.sources import as_source
+
+
+class ReplayResult(NamedTuple):
+    """Output of :func:`replay_jacobian`."""
+
+    jacobian: np.ndarray   # (nx, ny, nz, n_det) float64: J[v, d] =
+    #                        sum over detector-d records of
+    #                        w_exit * L_v (weight * mm).  The detected
+    #                        weight's first-order response to a voxel
+    #                        absorption change is dW_d = -J[., d] . dmua
+    #                        (dmua in 1/mm); normalize by launched_w for
+    #                        per-unit-weight sensitivities.
+    w_exit: np.ndarray     # (n_records,) float32 replayed exit weight
+    det: np.ndarray        # (n_records,) int32 detector index (from the
+    #                        forward record)
+    gate: np.ndarray       # (n_records,) int32 replayed exit time gate
+    replayed_det: np.ndarray  # (n_records,) int32 detector index
+    #                        recomputed from the replayed exit position
+    #                        (-1: the replayed photon did not hit a
+    #                        detector — always equals ``det`` when
+    #                        volume/cfg/source/seed match the forward
+    #                        run)
+    n_records: int
+
+
+def detected_records(result: SimResult) -> np.ndarray:
+    """Extract the valid detected-photon id records of a forward run.
+
+    Returns an ``(n, 4)`` uint32 array of ``[id_lo, id_hi, det, gate]``
+    rows.  Handles both single-run results (scalar ``det_rec_n``) and
+    ``simulate_sharded`` results, whose ``det_rec`` is the concatenation
+    of every shard's fixed-capacity buffer with per-shard valid counts
+    in the rank-1 ``det_rec_n``.
+    """
+    rec = np.asarray(result.det_rec, np.uint32).reshape(-1, 4)
+    n = np.asarray(result.det_rec_n)
+    if n.ndim == 0:
+        return rec[: int(n)]
+    n_shards = n.shape[0]
+    if n_shards == 0 or rec.shape[0] % n_shards:
+        raise ValueError(
+            f"sharded det_rec of {rec.shape[0]} rows does not split over "
+            f"{n_shards} shards")
+    cap = rec.shape[0] // n_shards
+    parts = [rec[i * cap: i * cap + int(k)] for i, k in enumerate(n)]
+    return np.concatenate(parts, axis=0) if parts else rec[:0]
+
+
+def _build_replay_fn(shape, unitinmm, cfg: SimConfig, n_lanes: int,
+                     n_det: int, source, det_geom):
+    """Raw (unjitted) two-pass replay over one batch of ``n_lanes``
+    records.  Returns ``fn(labels_flat, media, id_lo, id_hi, det_idx,
+    active, seed) -> (jac_flat, w_exit, gate, replayed_det)`` with
+    ``jac_flat`` of shape (nvox * n_det,)."""
+    source = as_source(source)
+    nx, ny, nz = shape
+    nvox = nx * ny * nz
+    ntg = int(cfg.n_time_gates)
+
+    def fn(labels_flat, media, id_lo, id_hi, det_idx, active, seed):
+        def transport(state0, per_step, carry0):
+            """Lock-step transport until every lane retires, folding
+            each segment's StepResult into ``carry`` via ``per_step``."""
+            def cond(c):
+                st, _, steps = c
+                return jnp.any(st.alive) & (steps < cfg.max_steps)
+
+            def body(c):
+                st, carry, steps = c
+                res = ph.step(st, labels_flat, media, shape, unitinmm, cfg)
+                return res.state, per_step(carry, res), steps + 1
+
+            _, carry, _ = jax.lax.while_loop(
+                cond, body, (state0, carry0, jnp.int32(0)))
+            return carry
+
+        ids = xrng.PhotonId(lo=id_lo, hi=id_hi)
+        pos, direc, w0, rng = source.sample(ids, jnp.asarray(seed,
+                                                             jnp.uint32))
+        state0 = ph.launch(pos, direc, w0, rng, active, shape)
+
+        # -- pass A: exit weight / gate / replayed detector ------------
+        def step_a(carry, res):
+            w_exit, gate, rdet = carry
+            esc = res.esc_w > 0
+            g = ph.time_gate_bins(res.dep_t, cfg.tmax_ns, ntg)
+            didx, dwgt = detector_bins(res.esc_pos, res.esc_w, det_geom)
+            w_exit = jnp.where(esc, res.esc_w, w_exit)
+            gate = jnp.where(esc, g, gate)
+            rdet = jnp.where(dwgt > 0, didx, rdet)
+            return w_exit, gate, rdet
+
+        w_exit, gate, rdet = transport(
+            state0,
+            step_a,
+            (jnp.zeros((n_lanes,), jnp.float32),
+             jnp.full((n_lanes,), -1, jnp.int32),
+             jnp.full((n_lanes,), -1, jnp.int32)),
+        )
+
+        # -- pass B: scatter w_exit * seg_len into J[., det] -----------
+        # the counter-seeded RNG re-creates the identical trajectory, so
+        # the exit weight from pass A is available from segment one
+        det_ok = active & (det_idx >= 0) & (det_idx < n_det)
+        det_safe = jnp.clip(det_idx, 0, max(n_det - 1, 0))
+        wscale = jnp.where(det_ok, w_exit, 0.0)
+
+        def step_b(jac, res):
+            # seg_len is 0 for dead lanes, so retired lanes (and the
+            # zero-weight padding) contribute nothing
+            return jac.at[res.dep_idx * n_det + det_safe].add(
+                wscale * res.seg_len)
+
+        jac = transport(state0, step_b,
+                        jnp.zeros((nvox * n_det,), jnp.float32))
+        return jac, w_exit, gate, rdet
+
+    return fn
+
+
+def replay_jacobian(volume: Volume, cfg: SimConfig, records,
+                    detectors, source=None, seed: int = 1234,
+                    n_lanes: int = 4096) -> ReplayResult:
+    """Replay detected-photon records into per-detector absorption
+    Jacobian volumes (DESIGN.md §replay).
+
+    ``records`` is the ``(n, 4)`` uint32 ``[id_lo, id_hi, det, gate]``
+    array from :func:`detected_records` (or a forward ``SimResult``
+    directly).  ``volume``/``cfg``/``detectors``/``source``/``seed``
+    must match the forward run — the determinism contract then makes
+    every replayed trajectory bit-identical, which
+    ``ReplayResult.replayed_det``/``gate`` let callers assert.
+
+    Records are replayed in fixed-size lane batches through one jitted
+    two-pass transport; the Jacobian is accumulated on the host in
+    float64.
+    """
+    if isinstance(records, SimResult):
+        records = detected_records(records)
+    records = np.asarray(records, np.uint32).reshape(-1, 4)
+    detectors = as_detectors(detectors)
+    n_det = len(detectors)
+    if n_det == 0:
+        raise ValueError("replay_jacobian needs the forward run's "
+                         "detectors")
+    if records.shape[0] and int(records[:, 2].max()) >= n_det:
+        raise ValueError(
+            f"record refers to detector {int(records[:, 2].max())} but "
+            f"only {n_det} detectors were given — records and detectors "
+            f"must come from the same forward run")
+    # replays bake tmax/gates/physics from cfg; steps_per_round is a
+    # forward-engine batching knob with no trajectory effect, so any
+    # forward cfg maps onto the same replay
+    cfg = dataclasses.replace(cfg, steps_per_round=1)
+    n_rec = records.shape[0]
+    nx, ny, nz = volume.shape
+    n_lanes = max(1, min(int(n_lanes), max(n_rec, 1)))
+    fn = jax.jit(_build_replay_fn(volume.shape, volume.unitinmm, cfg,
+                                  n_lanes, n_det, source,
+                                  det_geometry(detectors)))
+    labels_flat = volume.labels.reshape(-1)
+
+    jac = np.zeros((nx * ny * nz * n_det,), np.float64)
+    w_exit = np.zeros((n_rec,), np.float32)
+    gate = np.full((n_rec,), -1, np.int32)
+    rdet = np.full((n_rec,), -1, np.int32)
+    for start in range(0, n_rec, n_lanes):
+        batch = records[start: start + n_lanes]
+        nb = batch.shape[0]
+        pad = n_lanes - nb
+        id_lo = np.concatenate([batch[:, 0], np.zeros(pad, np.uint32)])
+        id_hi = np.concatenate([batch[:, 1], np.zeros(pad, np.uint32)])
+        didx = np.concatenate([batch[:, 2].astype(np.int32),
+                               np.full(pad, -1, np.int32)])
+        active = np.concatenate([np.ones(nb, bool), np.zeros(pad, bool)])
+        jac_b, w_b, g_b, rd_b = fn(labels_flat, volume.media,
+                                   jnp.asarray(id_lo), jnp.asarray(id_hi),
+                                   jnp.asarray(didx), jnp.asarray(active),
+                                   seed)
+        jac += np.asarray(jac_b, np.float64)
+        w_exit[start: start + nb] = np.asarray(w_b)[:nb]
+        gate[start: start + nb] = np.asarray(g_b)[:nb]
+        rdet[start: start + nb] = np.asarray(rd_b)[:nb]
+
+    return ReplayResult(
+        jacobian=jac.reshape(nx, ny, nz, n_det),
+        w_exit=w_exit,
+        det=records[:, 2].astype(np.int32),
+        gate=gate,
+        replayed_det=rdet,
+        n_records=n_rec,
+    )

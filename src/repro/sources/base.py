@@ -8,7 +8,12 @@ method::
 
 with ``pos``/``dir`` of shape (N, 3) float32 (voxel units / unit
 vectors), ``w0`` the (N,) initial packet weight and ``rng`` the (N, 4)
-uint32 in-flight xorshift128 state.
+uint32 in-flight xorshift128 state.  ``photon_ids`` is either a plain
+(N,) uint32 array (legacy 32-bit ids) or an :class:`repro.core.rng.
+PhotonId` two-word pair — 64-bit global ids for campaigns beyond 2**32
+photons.  Sources never do id arithmetic themselves: they read
+``photon_ids.shape[0]`` and hand the ids to the stream constructors
+below, so every registered type is 64-bit-clean by construction.
 
 Determinism contract (DESIGN.md §sources):
 
@@ -60,13 +65,18 @@ class PhotonSource(Protocol):
 # ---------------------------------------------------------------------------
 
 def launch_stream(seed, photon_ids) -> jnp.ndarray:
-    """Per-photon launch-time RNG state (salted counter seed)."""
+    """Per-photon launch-time RNG state (salted counter seed).
+
+    ``photon_ids`` may be a plain uint32 array or an ``rng.PhotonId``
+    pair (64-bit ids); both words fold into the seeding.
+    """
     seed = jnp.asarray(seed, jnp.uint32) ^ jnp.uint32(LAUNCH_STREAM_SALT)
     return xrng.seed_state(seed, photon_ids)
 
 
 def flight_stream(seed, photon_ids) -> jnp.ndarray:
-    """Per-photon in-flight RNG state — identical to the historical seeding."""
+    """Per-photon in-flight RNG state — identical to the historical
+    seeding for ids below 2**32 (plain arrays or ``PhotonId`` alike)."""
     return xrng.seed_state(jnp.asarray(seed, jnp.uint32), photon_ids)
 
 

@@ -70,8 +70,9 @@ def _seed_sim_fn(shape, unitinmm, cfg, n_lanes, mode="dynamic", source=None):
         carry0 = _SeedCarry(
             state0, jnp.zeros((nvox,), jnp.float32),
             jnp.zeros((nx, ny), jnp.float32), jnp.float32(0.0), n_photons,
-            jnp.zeros((n_lanes,), jnp.int32), id_offset, jnp.float32(0.0),
-            jnp.int32(0),
+            jnp.zeros((n_lanes,), jnp.int32),
+            (id_offset.astype(jnp.uint32), jnp.uint32(0)),
+            jnp.float32(0.0), jnp.int32(0),
         )
 
         def cond(c):
@@ -83,6 +84,9 @@ def _seed_sim_fn(shape, unitinmm, cfg, n_lanes, mode="dynamic", source=None):
             return has_work & (c.steps < cfg.max_steps)
 
         def body(c):
+            # _regenerate now carries the id counter as a 64-bit
+            # (lo, hi) uint32 pair; hi=0 is bit-identical to the seed
+            # engine's int32 counter, so the copy keeps its contract
             state, remaining, launched, next_id, w_new = S._regenerate(
                 c.state, c.remaining, c.launched_per_lane, c.next_id,
                 quota, source, seed, mode, shape)
@@ -106,7 +110,8 @@ def _seed_sim_fn(shape, unitinmm, cfg, n_lanes, mode="dynamic", source=None):
             energy=final.energy.reshape(shape),
             exitance=final.exitance,
             escaped_w=final.escaped_w,
-            n_launched=final.next_id - id_offset,
+            n_launched=(final.next_id[0]
+                        - id_offset.astype(jnp.uint32)).astype(jnp.int32),
             launched_w=final.launched_w,
             steps=final.steps,
         )

@@ -2,10 +2,15 @@
 
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # keep tier-1 collection alive without the extra dep
-from hypothesis import given, settings, strategies as st
 
 from repro.core import loadbalance as LB
+
+try:  # hypothesis is optional locally (pinned in CI); only the property
+    # tests need it — the deterministic tests always run
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    _HAVE_HYPOTHESIS = False
 
 
 def _paper_devices():
@@ -101,33 +106,34 @@ def test_ideal_makespan_lower_bound():
         assert LB.makespan(LB.PARTITIONERS[s](n, devs), devs) >= ideal
 
 
-@settings(max_examples=50, deadline=None)
-@given(
-    n=st.integers(0, 10**7),
-    seed=st.integers(0, 2**31),
-    k=st.integers(2, 6),
-)
-def test_property_partitions_valid(n, seed, k):
-    rng = np.random.default_rng(seed)
-    devs = [
-        LB.DeviceModel(
-            f"d{i}",
-            a=float(10 ** rng.uniform(-8, -5)),
-            t0=float(rng.uniform(0, 2.0)),
-            cores=int(rng.integers(1, 8192)),
-        )
-        for i in range(k)
-    ]
-    for strat in ("S1", "S2", "S3"):
-        part = LB.PARTITIONERS[strat](n, devs)
-        assert sum(part) == n
-        assert all(p >= 0 for p in part)
-    # minimax optimality within integer rounding slack
-    s3 = LB.PARTITIONERS["S3"](n, devs)
-    for other in ("S1", "S2"):
-        po = LB.PARTITIONERS[other](n, devs)
-        slack = max(d.a for d in devs) * k  # rounding slack
-        assert LB.makespan(s3, devs) <= LB.makespan(po, devs) + slack
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(
+        n=st.integers(0, 10**7),
+        seed=st.integers(0, 2**31),
+        k=st.integers(2, 6),
+    )
+    def test_property_partitions_valid(n, seed, k):
+        rng = np.random.default_rng(seed)
+        devs = [
+            LB.DeviceModel(
+                f"d{i}",
+                a=float(10 ** rng.uniform(-8, -5)),
+                t0=float(rng.uniform(0, 2.0)),
+                cores=int(rng.integers(1, 8192)),
+            )
+            for i in range(k)
+        ]
+        for strat in ("S1", "S2", "S3"):
+            part = LB.PARTITIONERS[strat](n, devs)
+            assert sum(part) == n
+            assert all(p >= 0 for p in part)
+        # minimax optimality within integer rounding slack
+        s3 = LB.PARTITIONERS["S3"](n, devs)
+        for other in ("S1", "S2"):
+            po = LB.PARTITIONERS[other](n, devs)
+            slack = max(d.a for d in devs) * k  # rounding slack
+            assert LB.makespan(s3, devs) <= LB.makespan(po, devs) + slack
 
 
 def test_run_pilot_with_synthetic_clock():
@@ -141,3 +147,71 @@ def test_run_pilot_with_synthetic_clock():
     np.testing.assert_allclose(m.a, 3e-8, rtol=1e-9)
     np.testing.assert_allclose(m.t0, 0.4, rtol=1e-9)
     assert calls == [10**6, 5 * 10**6]
+
+
+# ---------------------------------------------------------------------------
+# degenerate pilot fits / device models (PR 4 hardening)
+# ---------------------------------------------------------------------------
+
+def test_fit_pilot_nonpositive_slope_raises():
+    """Regression: a noisy pilot where the larger run timed *faster*
+    used to fit a negative slope that the silent 1e-12 clamp turned
+    into a ~infinitely fast device; now a clear error."""
+    with pytest.raises(ValueError, match="non-positive photon cost slope"):
+        LB.fit_pilot([1e6, 5e6], [0.30, 0.25])  # bigger run was faster
+    with pytest.raises(ValueError, match="non-positive photon cost slope"):
+        LB.fit_pilot([1e6, 5e6], [0.25, 0.25])  # zero slope
+    # the lstsq path is guarded too
+    with pytest.raises(ValueError, match="non-positive photon cost slope"):
+        LB.fit_pilot([1e6, 2e6, 5e6], [0.5, 0.4, 0.2])
+
+
+def test_device_model_rejects_degenerate_slopes():
+    """partition_s2/s3 divide by the slope; a hand-built degenerate
+    model must fail at construction, not as NaN shares downstream."""
+    for bad_a in (0.0, -1e-8, float("nan"), float("inf")):
+        with pytest.raises(ValueError, match="positive finite"):
+            LB.DeviceModel("bad", a=bad_a, t0=0.1)
+    with pytest.raises(ValueError, match="nonnegative finite"):
+        LB.DeviceModel("bad", a=1e-8, t0=float("nan"))
+    # healthy models still construct and partition cleanly
+    devs = [LB.DeviceModel("a", a=1e-8, t0=0.1),
+            LB.DeviceModel("b", a=4e-8, t0=0.2)]
+    for strat in ("S1", "S2", "S3"):
+        part = LB.PARTITIONERS[strat](10_000, devs)
+        assert sum(part) == 10_000 and all(p >= 0 for p in part)
+
+
+# ---------------------------------------------------------------------------
+# property tests: _largest_remainder_round invariants
+# ---------------------------------------------------------------------------
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=100, deadline=None)
+    @given(
+        total=st.integers(0, 10**7),
+        seed=st.integers(0, 2**31),
+        k=st.integers(1, 12),
+    )
+    def test_property_largest_remainder_round(total, seed, k):
+        """Sum/bounds invariants of the share-rounding helper: the
+        rounded partition must sum exactly to the total, stay
+        nonnegative, and never move any share by a full photon or
+        more."""
+        rng = np.random.default_rng(seed)
+        weights = rng.uniform(1e-6, 1.0, size=k)
+        shares = (total * weights / weights.sum()).tolist()
+        out = LB._largest_remainder_round(shares, total)
+        assert sum(out) == total
+        assert all(p >= 0 for p in out)
+        assert all(abs(p - s) < 1.0 + 1e-9 for p, s in zip(out, shares))
+
+    @settings(max_examples=50, deadline=None)
+    @given(total=st.integers(0, 10**6), k=st.integers(1, 8))
+    def test_property_largest_remainder_round_exact_integers(total, k):
+        """Integer shares must pass through unchanged."""
+        base = [total // k] * k
+        for i in range(total % k):
+            base[i] += 1
+        out = LB._largest_remainder_round([float(b) for b in base], total)
+        assert out == base
