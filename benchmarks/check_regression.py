@@ -1,0 +1,171 @@
+"""Perf-regression gate over the BENCH_*.json trajectories.
+
+Compares freshly produced benchmark JSONs (``benchmarks/fused.py``,
+``benchmarks/timegates.py``, ``benchmarks/replay.py``) against the
+committed baselines and **fails** (exit code 1) when
+
+  * any throughput leaf (a key named ``photons_per_s*`` or
+    ``records_per_s*``, at any nesting depth) drops by more than
+    ``--max-drop`` (default 30%), or
+  * any overhead leaf (a key ending in ``_overhead_frac``) grows by
+    more than ``--max-overhead-points`` (default 0.10, i.e. 10
+    percentage points).
+
+Keys ending in ``_cold`` are ignored (cold numbers include one-shot
+compile time — too noisy for a gate), as are keys present on only one
+side (schema evolution is not a regression).  A file whose ``meta``
+records a different *workload* (``quick`` flag, ``size``, ``backend``)
+is skipped with a warning: cross-workload throughput ratios are
+meaningless.  Machine-to-machine variance is what the 30% headroom is
+for; tighten or loosen per lane with the CLI flags or the
+``BENCH_MAX_DROP`` / ``BENCH_MAX_OVERHEAD_POINTS`` env vars.
+
+  python -m benchmarks.check_regression --baseline <dir> [--fresh <dir>]
+
+CI snapshots the committed baselines before the benchmark smoke runs
+overwrite them at the repo root, then runs this gate (.github/
+workflows/ci.yml).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+BENCH_FILES = ("BENCH_fused.json", "BENCH_timegates.json",
+               "BENCH_replay.json")
+THROUGHPUT_MARKERS = ("photons_per_s", "records_per_s")
+OVERHEAD_SUFFIX = "_overhead_frac"
+# meta keys that define the workload: a mismatch means the two files
+# measured different things and ratios are not comparable
+WORKLOAD_KEYS = ("bench", "quick", "size", "backend", "interpreted_pallas")
+
+
+def _leaves(node, prefix=""):
+    """Flatten nested dicts to {dotted.path: numeric leaf}."""
+    out = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            out.update(_leaves(v, f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        out[prefix] = float(node)
+    return out
+
+
+def _is_throughput(path: str) -> bool:
+    key = path.rsplit(".", 1)[-1]
+    return any(m in key for m in THROUGHPUT_MARKERS) \
+        and not key.endswith("_cold")
+
+
+def _is_overhead(path: str) -> bool:
+    return path.rsplit(".", 1)[-1].endswith(OVERHEAD_SUFFIX)
+
+
+def check_file(name: str, baseline: dict, fresh: dict, max_drop: float,
+               max_overhead_points: float) -> tuple[list[str], list[str]]:
+    """Returns (failures, notes) for one benchmark JSON pair."""
+    failures, notes = [], []
+    meta_b = baseline.get("meta", {})
+    meta_f = fresh.get("meta", {})
+    mismatched = [k for k in WORKLOAD_KEYS
+                  if k in meta_b and k in meta_f and meta_b[k] != meta_f[k]]
+    if mismatched:
+        notes.append(
+            f"{name}: SKIPPED — workload mismatch on "
+            f"{', '.join(f'{k} ({meta_b[k]!r} vs {meta_f[k]!r})' for k in mismatched)}")
+        return failures, notes
+    if meta_b.get("machine") != meta_f.get("machine"):
+        # still compared — that is the gate's job — but cross-machine
+        # ratios carry extra variance; the headroom (and the
+        # BENCH_MAX_DROP escape hatch) is what absorbs it
+        notes.append(
+            f"{name}: note — baseline machine "
+            f"{meta_b.get('machine')!r} != fresh "
+            f"{meta_f.get('machine')!r}; expect extra variance")
+
+    base_leaves = _leaves(baseline)
+    fresh_leaves = _leaves(fresh)
+    shared = sorted(set(base_leaves) & set(fresh_leaves))
+    n_checked = 0
+    for path in shared:
+        b, f = base_leaves[path], fresh_leaves[path]
+        if _is_throughput(path):
+            n_checked += 1
+            if b > 0 and f < (1.0 - max_drop) * b:
+                failures.append(
+                    f"{name}: {path} dropped {100 * (1 - f / b):.1f}% "
+                    f"({b:.1f} -> {f:.1f}; limit {100 * max_drop:.0f}%)")
+        elif _is_overhead(path):
+            n_checked += 1
+            # a negative baseline overhead is a timing-noise fluke
+            # (record-on measured faster than record-off); gating growth
+            # against it would demand impossible fresh numbers, so the
+            # floor of a real overhead baseline is zero
+            if f > max(b, 0.0) + max_overhead_points:
+                failures.append(
+                    f"{name}: {path} grew {f - max(b, 0.0):+.3f} "
+                    f"({b:.3f} -> {f:.3f}; limit "
+                    f"+{max_overhead_points:.2f})")
+    notes.append(f"{name}: checked {n_checked} gated leaves "
+                 f"({len(shared)} shared)")
+    if n_checked == 0:
+        notes.append(f"{name}: WARNING — no gated leaves found; schema "
+                     f"drift?")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="directory holding the committed BENCH_*.json "
+                         "baselines (snapshot them before the benchmarks "
+                         "overwrite the repo root)")
+    ap.add_argument("--fresh", default=".",
+                    help="directory holding the freshly produced "
+                         "BENCH_*.json files (default: repo root)")
+    ap.add_argument("--max-drop", type=float,
+                    default=float(os.environ.get("BENCH_MAX_DROP", 0.30)),
+                    help="maximum tolerated fractional throughput drop "
+                         "(default 0.30)")
+    ap.add_argument("--max-overhead-points", type=float,
+                    default=float(os.environ.get(
+                        "BENCH_MAX_OVERHEAD_POINTS", 0.10)),
+                    help="maximum tolerated absolute *_overhead_frac "
+                         "growth (default 0.10 = 10 points)")
+    args = ap.parse_args(argv)
+
+    all_failures: list[str] = []
+    for name in BENCH_FILES:
+        base_path = Path(args.baseline) / name
+        fresh_path = Path(args.fresh) / name
+        if not base_path.exists():
+            print(f"{name}: no committed baseline — skipping")
+            continue
+        if not fresh_path.exists():
+            all_failures.append(
+                f"{name}: baseline exists but no fresh file was produced "
+                f"at {fresh_path}")
+            continue
+        failures, notes = check_file(
+            name, json.loads(base_path.read_text()),
+            json.loads(fresh_path.read_text()),
+            args.max_drop, args.max_overhead_points)
+        for note in notes:
+            print(note)
+        all_failures.extend(failures)
+
+    if all_failures:
+        print("\nPERF REGRESSION GATE FAILED:")
+        for f in all_failures:
+            print(f"  FAIL {f}")
+        return 1
+    print("\nperf-regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,10 +11,13 @@ at the repo root — the perf trajectory tracked per PR by CI alongside
     the id buffer adds one prefix-sum + one tiny scatter per round, so
     the overhead should be small;
   * replay throughput: records/s of ``replay_jacobian`` over the
-    recorded ids (two transport passes + the (nvox, n_det) scatter);
+    recorded ids (two transport passes + the (nvox, n_det) scatter),
+    measured **per round executor** (``engine="jnp"`` and
+    ``engine="pallas"``, DESIGN.md §replay);
   * physics cross-check: the replay Jacobian's per-medium row sums must
-    match the forward run's ``det_ppath`` (the §replay identity) and
-    every replayed photon must land in its recorded detector.
+    match the forward run's ``det_ppath`` (the §replay identity),
+    every replayed photon must land in its recorded detector, and the
+    per-record Pallas outputs must be bit-identical to the jnp engine.
 
   PYTHONPATH=src python -m benchmarks.replay [--quick] [--engines jnp]
 
@@ -45,18 +48,38 @@ from repro.replay import detected_records, replay_jacobian
 REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
-def _time_forward(vol, cfg, n_photons, lanes, dets, cap, engine, seed,
-                  src, repeats):
-    fn = S.make_simulator(vol, cfg, lanes, source=src, engine=engine,
-                         detectors=dets, record_detected=cap)
+def _time_forward_pair(vol, cfg, n_photons, lanes, dets, cap, engine, seed,
+                       src, repeats):
+    """Time the record-off and record-on forward runs as interleaved
+    pairs and estimate the recording overhead as the *median of the
+    per-pair ratios*.
+
+    The overhead fraction feeds the CI regression gate
+    (benchmarks/check_regression.py), and a ratio of two independently
+    best-of timings lets a single contended sample swing it by tens of
+    points; back-to-back pairs see the same machine state, and the
+    median drops contention spikes entirely.  Returns
+    ``(t_off, t_on, overhead_frac, res_on)`` with the times best-of
+    (the throughput trajectory keeps its historical meaning).
+    """
+    fns = [S.make_simulator(vol, cfg, lanes, source=src, engine=engine,
+                            detectors=dets, record_detected=c)
+           for c in (0, cap)]
     args = (vol.labels.reshape(-1), vol.media, n_photons, seed)
-    res = jax.block_until_ready(fn(*args))  # compile + warm
-    best = float("inf")
+    jax.block_until_ready(fns[0](*args))  # compile + warm
+    res = jax.block_until_ready(fns[1](*args))
+    best = [float("inf"), float("inf")]
+    fracs = []
     for _ in range(repeats):
-        t0 = time.perf_counter()
-        res = jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best, res
+        pair = []
+        for i in (0, 1):
+            t0 = time.perf_counter()
+            res_i = jax.block_until_ready(fns[i](*args))
+            pair.append(time.perf_counter() - t0)
+            best[i] = min(best[i], pair[i])
+        res = res_i
+        fracs.append((pair[1] - pair[0]) / pair[0])
+    return best[0], best[1], float(np.median(fracs)), res
 
 
 def run(quick=False, engines=("jnp", "pallas"),
@@ -74,7 +97,11 @@ def run(quick=False, engines=("jnp", "pallas"),
         "jnp": jnp_load,
         "pallas": (1_000, 256) if interpreted else jnp_load,
     }
-    repeats = 2 if quick else 3
+    # the recording-overhead fraction is a ratio of two ~1 s timings and
+    # feeds the CI regression gate (benchmarks/check_regression.py):
+    # best-of-2 lets one contended sample swing it by tens of points, so
+    # quick mode spends a few extra repeats on stability
+    repeats = 5 if quick else 3
     cap = 1 << 16
 
     results: dict = {
@@ -97,17 +124,16 @@ def run(quick=False, engines=("jnp", "pallas"),
     res_for_replay = None
     for engine in engines:
         n_photons, lanes = workload[engine]
-        t_off, _ = _time_forward(vol, cfg, n_photons, lanes, dets, 0,
-                                 engine, seed, src, repeats)
-        t_on, res = _time_forward(vol, cfg, n_photons, lanes, dets, cap,
-                                  engine, seed, src, repeats)
+        t_off, t_on, overhead, res = _time_forward_pair(
+            vol, cfg, n_photons, lanes, dets, cap, engine, seed, src,
+            repeats)
         n_rec = int(np.asarray(res.det_rec_n))
         row = {
             "n_photons": n_photons,
             "lanes": lanes,
             "photons_per_s_record_off": n_photons / t_off,
             "photons_per_s_record_on": n_photons / t_on,
-            "recording_overhead_frac": (t_on - t_off) / t_off,
+            "recording_overhead_frac": overhead,
             "records": n_rec,
             "overflow": int(np.asarray(res.det_rec_overflow)),
         }
@@ -123,36 +149,63 @@ def run(quick=False, engines=("jnp", "pallas"),
             res_for_replay = res
             replay_lanes = lanes
 
-    # -- replay throughput + physics cross-check (jnp transport) --------
+    # -- per-engine replay throughput + physics cross-check -------------
     recs = detected_records(res_for_replay)
-    lanes = replay_lanes
-    t0 = time.perf_counter()
-    rep = replay_jacobian(vol, cfg, recs, dets, source=src, seed=seed,
-                          n_lanes=lanes)
-    t_replay = time.perf_counter() - t0  # includes compile: one-shot cost
-    t0 = time.perf_counter()
-    rep = replay_jacobian(vol, cfg, recs, dets, source=src, seed=seed,
-                          n_lanes=lanes)
-    t_replay_warm = time.perf_counter() - t0
-    det_exact = int((rep.replayed_det == rep.det).sum())
-    M = An.jacobian_medium_sums(rep.jacobian, vol)
-    ppath = np.asarray(res_for_replay.det_ppath, np.float64)
-    ppath_err = float(np.abs(M - ppath).max() / max(ppath.max(), 1e-12))
-    assert det_exact == rep.n_records, (
-        f"replay must reproduce every recorded detector: "
-        f"{det_exact}/{rep.n_records}")
-    assert ppath_err < 1e-4, f"jacobian/ppath identity violated: {ppath_err}"
-    results["replay"] = {
-        "records": rep.n_records,
-        "records_per_s_cold": rep.n_records / t_replay,
-        "records_per_s": rep.n_records / t_replay_warm,
-        "detector_exact": det_exact,
-        "jacobian_ppath_rel_err": ppath_err,
-    }
-    print(f"[replay] {rep.n_records} records in {t_replay_warm:.2f}s "
-          f"({rep.n_records/t_replay_warm/1e3:.3f} records/ms), "
-          f"{det_exact}/{rep.n_records} detector-exact, "
-          f"ppath identity rel err {ppath_err:.2e}", flush=True)
+    results["replay"] = {"records": recs.shape[0], "engines": {}}
+    rep_jnp = None
+    # replay jnp first regardless of CLI order so the pallas pass always
+    # has the reference for the bit-identity cross-check
+    for engine in sorted(engines, key=lambda e: e != "jnp"):
+        # the interpreted Pallas kernel is a correctness rig, not a perf
+        # path — replay a subset there so CI smoke runs stay fast
+        e_recs = recs
+        if engine == "pallas" and interpreted:
+            e_recs = recs[: min(recs.shape[0], 64 if quick else 256)]
+        lanes = min(replay_lanes, max(e_recs.shape[0], 1))
+        t0 = time.perf_counter()
+        rep = replay_jacobian(vol, cfg, e_recs, dets, source=src, seed=seed,
+                              n_lanes=lanes, engine=engine)
+        t_cold = time.perf_counter() - t0  # includes compile: one-shot
+        t0 = time.perf_counter()
+        rep = replay_jacobian(vol, cfg, e_recs, dets, source=src, seed=seed,
+                              n_lanes=lanes, engine=engine)
+        t_warm = time.perf_counter() - t0
+        det_exact = int((rep.replayed_det == rep.det).sum())
+        assert det_exact == rep.n_records, (
+            f"[{engine}] replay must reproduce every recorded detector: "
+            f"{det_exact}/{rep.n_records}")
+        results["replay"]["engines"][engine] = {
+            "records": rep.n_records,
+            "n_lanes": lanes,
+            "records_per_s_cold": rep.n_records / t_cold,
+            "records_per_s": rep.n_records / t_warm,
+            "detector_exact": det_exact,
+        }
+        print(f"[replay {engine:6s}] {rep.n_records} records in "
+              f"{t_warm:.2f}s ({rep.n_records/t_warm/1e3:.3f} records/ms), "
+              f"{det_exact}/{rep.n_records} detector-exact", flush=True)
+        if engine == "jnp":
+            rep_jnp = rep
+        elif rep_jnp is not None:
+            # determinism contract: per-record outputs are engine-exact
+            # (e_recs is a prefix of recs, so compare against the slice)
+            n = rep.n_records
+            assert np.array_equal(rep.w_exit, rep_jnp.w_exit[:n]), \
+                "pallas replay exit weights diverge from jnp"
+            assert np.array_equal(rep.gate, rep_jnp.gate[:n]), \
+                "pallas replay exit gates diverge from jnp"
+            assert np.array_equal(rep.replayed_det,
+                                  rep_jnp.replayed_det[:n]), \
+                "pallas replay detectors diverge from jnp"
+
+    if rep_jnp is not None:
+        M = An.jacobian_medium_sums(rep_jnp.jacobian, vol)
+        ppath = np.asarray(res_for_replay.det_ppath, np.float64)
+        ppath_err = float(np.abs(M - ppath).max() / max(ppath.max(), 1e-12))
+        assert ppath_err < 1e-4, \
+            f"jacobian/ppath identity violated: {ppath_err}"
+        results["replay"]["jacobian_ppath_rel_err"] = ppath_err
+        print(f"[replay] ppath identity rel err {ppath_err:.2e}", flush=True)
 
     out_path = Path(out_path)
     out_path.write_text(json.dumps(results, indent=2))

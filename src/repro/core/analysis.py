@@ -108,13 +108,21 @@ def rescale_detected(result: SimResult, volume: Volume,
     return tot_w * np.exp(-mean_l @ (new_mua - old_mua))
 
 
-def jacobian_medium_sums(jacobian, volume: Volume) -> np.ndarray:
+def jacobian_medium_sums(jacobian, volume: Volume,
+                         per_gate: bool = False) -> np.ndarray:
     """Aggregate a replay Jacobian over the voxels of each medium label.
 
     ``jacobian`` is the ``(nx, ny, nz, n_det)`` volume from
-    ``repro.replay.replay_jacobian``; returns ``(n_det, n_media)`` —
-    the detected weight's first-order sensitivity to each *medium's*
-    absorption coefficient.  By construction this equals the forward
+    ``repro.replay.replay_jacobian`` — or its gate-resolved
+    ``(nx, ny, nz, n_det, ntg)`` variant; returns ``(n_det, n_media)``
+    — the detected weight's first-order sensitivity to each *medium's*
+    absorption coefficient (a gate-resolved Jacobian is summed over its
+    gate axis first, since the gates partition the scatter).  With
+    ``per_gate=True`` the gate axis of a gate-resolved Jacobian is kept:
+    ``(n_det, ntg, n_media)`` — the time-gated partial-pathlength sums
+    whose gate-sum recovers the ungated identity.
+
+    By construction the ``(n_det, n_media)`` result equals the forward
     run's ``det_ppath`` (weight-weighted partial pathlength sums): each
     detected packet contributes ``w_exit * L_m`` to medium ``m`` in both
     quantities.  That identity is the replay subsystem's primary
@@ -123,13 +131,22 @@ def jacobian_medium_sums(jacobian, volume: Volume) -> np.ndarray:
     ``dW_d = -sum_m det_ppath[d, m] * dmua_m``.
     """
     jac = np.asarray(jacobian, np.float64)
+    if jac.ndim not in (4, 5):
+        raise ValueError(
+            f"jacobian must be (nx, ny, nz, n_det[, ntg]), got shape "
+            f"{jac.shape}")
+    if per_gate and jac.ndim != 5:
+        raise ValueError("per_gate=True requires a gate-resolved "
+                         "(nx, ny, nz, n_det, ntg) Jacobian")
     labels = np.asarray(volume.labels).reshape(-1)
     n_media = volume.media.shape[0]
-    n_det = jac.shape[-1]
-    flat = jac.reshape(-1, n_det)
-    out = np.zeros((n_det, n_media), np.float64)
+    trail = jac.shape[3:]                      # (n_det,) or (n_det, ntg)
+    flat = jac.reshape(-1, *trail)
+    out = np.zeros(trail + (n_media,), np.float64)
     for m in range(n_media):
-        out[:, m] = flat[labels == m].sum(axis=0)
+        out[..., m] = flat[labels == m].sum(axis=0)
+    if jac.ndim == 5 and not per_gate:
+        out = out.sum(axis=1)                  # gate axis partitions J
     return out
 
 

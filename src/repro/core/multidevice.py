@@ -170,6 +170,62 @@ def simulate_sharded(volume: Volume, cfg: SimConfig, n_photons: int,
     )
 
 
+def sharded_replay_fn(volume: Volume, cfg: SimConfig, detectors, mesh: Mesh,
+                      axis_names: tuple[str, ...] = ("data",),
+                      n_lanes: int = 1024,
+                      source: PhotonSource | Source | None = None,
+                      engine: str = "jnp", gate_resolved: bool = False,
+                      block_lanes: int = 256,
+                      interpret: bool | None = None):
+    """Build a shard_map'd two-pass replay executor over ``axis_names``.
+
+    The device-parallel half of ``repro.replay.replay_jacobian``
+    (DESIGN.md §replay): every device replays its own ``n_lanes``-lane
+    slice of a record batch through the selected round executor
+    (``engine="jnp"`` | ``"pallas"``), and the flat Jacobian
+    accumulator is combined with one ``psum`` per batch — the same
+    single-collective structure as :func:`sharded_sim_fn`, so replay
+    scales like the forward pass.  The per-record outputs
+    (``w_exit``/``gate``/``replayed_det``) stay sharded over the mesh
+    in batch order.
+
+    Returns the jitted ``fn(labels_flat, media, id_lo, id_hi, jac_col,
+    active, seed) -> (jac_flat, w_exit, gate, replayed_det)`` taking
+    ``n_shards * n_lanes`` global lane arrays.
+    """
+    # imported lazily: repro.replay imports this module for mesh runs
+    from repro.detectors import det_geometry, validate_detectors
+    from repro.replay import _build_replay_fn
+
+    dets = as_detectors(detectors)
+    n_det = len(dets)
+    if n_det == 0:
+        raise ValueError("sharded_replay_fn needs the forward run's "
+                         "detectors")
+    validate_detectors(dets, volume.shape)
+    jac_cols = n_det * int(cfg.n_time_gates) if gate_resolved else n_det
+    raw = _build_replay_fn(volume.shape, volume.unitinmm, cfg, n_lanes,
+                           n_det, source, det_geometry(dets), jac_cols,
+                           engine, block_lanes, interpret)
+    ax = axis_names
+
+    def worker(labels_flat, media, id_lo, id_hi, jac_col, active, seed):
+        jac, w_exit, gate, rdet = raw(labels_flat, media, id_lo, id_hi,
+                                      jac_col, active, seed)
+        for a in ax:
+            jac = jax.lax.psum(jac, a)
+        return jac, w_exit, gate, rdet
+
+    pspec = P(ax)
+    mapped = _shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=(P(), P(), pspec, pspec, pspec, pspec, P()),
+        out_specs=(P(), pspec, pspec, pspec),
+    )
+    return jax.jit(mapped)
+
+
 # ---------------------------------------------------------------------------
 # chunked work queue: straggler mitigation + heterogeneous devices
 # ---------------------------------------------------------------------------

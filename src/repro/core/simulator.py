@@ -35,7 +35,6 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-import warnings
 from typing import NamedTuple
 
 import jax
@@ -312,22 +311,10 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
     if ntg < 1:
         raise ValueError(f"cfg.n_time_gates must be >= 1, got {ntg}")
     if engine == "pallas":
-        from repro.kernels.photon_step.photon_step import (default_interpret,
-                                                           photon_step_pallas)
+        from repro.kernels.photon_step.photon_step import (
+            default_interpret, photon_step_pallas, resolve_block_lanes)
 
-        # the kernel grid needs block_lanes | n_lanes; fall back to the
-        # largest divisor <= the requested block so any lane count works
-        # through the public APIs (schedulers don't expose block_lanes)
-        requested = block_lanes = min(block_lanes, n_lanes)
-        while n_lanes % block_lanes:
-            block_lanes -= 1
-        if block_lanes < requested:
-            warnings.warn(
-                f"n_lanes={n_lanes} is not divisible by "
-                f"block_lanes={requested}; falling back to "
-                f"block_lanes={block_lanes} — small blocks serialize the "
-                f"Pallas grid (prefer a lane count with a divisor near "
-                f"{requested})", stacklevel=2)
+        block_lanes = resolve_block_lanes(n_lanes, block_lanes)
         if interpret is None:
             interpret = default_interpret()
 

@@ -17,25 +17,30 @@ from repro.sources import PhotonSource, as_source
 
 @functools.partial(jax.jit, static_argnames=(
     "shape", "unitinmm", "cfg", "n_steps", "block_lanes", "interpret",
-    "record"))
+    "record", "jac_cols"))
 def _photon_steps_jit(labels_flat, media, state, shape, unitinmm,
                       cfg: SimConfig, n_steps: int, block_lanes: int,
                       interpret: bool, ppath=None, det_geom=None,
-                      record: bool = False):
+                      record: bool = False, jac_w=None, jac_col=None,
+                      jac_cols: int = 0):
     return photon_step_pallas(labels_flat, media, state, shape, unitinmm,
                               cfg, n_steps, block_lanes, interpret,
-                              ppath=ppath, det_geom=det_geom, record=record)
+                              ppath=ppath, det_geom=det_geom, record=record,
+                              jac_w=jac_w, jac_col=jac_col,
+                              jac_cols=jac_cols)
 
 
 def photon_steps(labels_flat, media, state, shape, unitinmm, cfg: SimConfig,
                  n_steps: int, block_lanes: int = 256,
                  interpret: bool | None = None, ppath=None, det_geom=None,
-                 record: bool = False):
+                 record: bool = False, jac_w=None, jac_col=None,
+                 jac_cols: int = 0):
     """Returns ``(new_state, fluence_flat, exitance_flat,
     escaped_per_lane, timed_per_lane)`` — plus
     ``(ppath, det_w_flat, det_ppath)`` when detectors are configured,
     plus per-lane ``(cap_det, cap_gate)`` capture records when
-    ``record`` is set (see ``photon_step_pallas``).
+    ``record`` is set, plus the ``(nvox * jac_cols,)`` replay-Jacobian
+    accumulator when ``jac_cols > 0`` (see ``photon_step_pallas``).
 
     ``interpret=None`` auto-detects: interpreter off TPU, compiled
     Mosaic kernel on TPU.  Resolved here, outside jit, so ``None`` and
@@ -45,7 +50,9 @@ def photon_steps(labels_flat, media, state, shape, unitinmm, cfg: SimConfig,
         interpret = default_interpret()
     return _photon_steps_jit(labels_flat, media, state, shape, unitinmm,
                              cfg, n_steps, block_lanes, interpret,
-                             ppath=ppath, det_geom=det_geom, record=record)
+                             ppath=ppath, det_geom=det_geom, record=record,
+                             jac_w=jac_w, jac_col=jac_col,
+                             jac_cols=jac_cols)
 
 
 def simulate_kernel(volume: Volume, cfg: SimConfig, n_photons: int,

@@ -49,6 +49,7 @@ operands.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any
 
 import jax
@@ -73,26 +74,57 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def resolve_block_lanes(n_lanes: int, block_lanes: int) -> int:
+    """Clamp ``block_lanes`` to a divisor of ``n_lanes``.
+
+    The kernel grid needs ``block_lanes | n_lanes``; fall back to the
+    largest divisor <= the requested block so any lane count works
+    through the public APIs (schedulers don't expose block_lanes).
+    Shared by every executor that dispatches the kernel (the forward
+    engine and both replay passes) so the fallback policy cannot
+    diverge.
+    """
+    requested = block_lanes = min(block_lanes, n_lanes)
+    while n_lanes % block_lanes:
+        block_lanes -= 1
+    if block_lanes < requested:
+        warnings.warn(
+            f"n_lanes={n_lanes} is not divisible by "
+            f"block_lanes={requested}; falling back to "
+            f"block_lanes={block_lanes} — small blocks serialize the "
+            f"Pallas grid (prefer a lane count with a divisor near "
+            f"{requested})", stacklevel=3)
+    return block_lanes
+
+
 def _kernel(labels_ref, media_ref, *refs,
             shape, unitinmm, cfg: SimConfig, n_steps: int, n_det: int,
-            record: bool):
-    # unpack the variadic refs: 8 state inputs [+ ppath + det_geom], then
-    # 8 state outputs + fluence/exitance/esc/timed [+ ppath + det_w +
-    # det_ppath] [+ cap_det + cap_gate] — assembled to match
-    # photon_step_pallas's specs
+            record: bool, jac_cols: int):
+    # unpack the variadic refs: 8 state inputs [+ ppath + det_geom]
+    # [+ jac_w + jac_col], then 8 state outputs + fluence/exitance/esc/
+    # timed [+ ppath + det_w + det_ppath] [+ cap_det + cap_gate]
+    # [+ jac] — assembled to match photon_step_pallas's specs
     (pos_ref, dir_ref, ivox_ref, w_ref, s_ref, t_ref, rng_ref,
      alive_ref) = refs[:8]
+    cur = 8
     if n_det:
-        ppath_ref, det_geom_ref = refs[8:10]
-        outs = refs[10:]
-    else:
-        outs = refs[8:]
+        ppath_ref, det_geom_ref = refs[cur:cur + 2]
+        cur += 2
+    if jac_cols:
+        jac_w_ref, jac_col_ref = refs[cur:cur + 2]
+        cur += 2
+    outs = refs[cur:]
     (out_pos, out_dir, out_ivox, out_w, out_s, out_t, out_rng,
      out_alive, fluence_ref, exitance_ref, esc_ref, timed_ref) = outs[:12]
+    cur = 12
     if n_det:
-        out_ppath, det_w_ref, det_ppath_ref = outs[12:15]
+        out_ppath, det_w_ref, det_ppath_ref = outs[cur:cur + 3]
+        cur += 3
     if record:
-        cap_det_ref, cap_gate_ref = outs[15:]
+        cap_det_ref, cap_gate_ref = outs[cur:cur + 2]
+        cur += 2
+    if jac_cols:
+        jac_ref = outs[cur]
 
     ntg = int(cfg.n_time_gates)
 
@@ -104,6 +136,8 @@ def _kernel(labels_ref, media_ref, *refs,
         if n_det:
             det_w_ref[...] = jnp.zeros_like(det_w_ref)
             det_ppath_ref[...] = jnp.zeros_like(det_ppath_ref)
+        if jac_cols:
+            jac_ref[...] = jnp.zeros_like(jac_ref)
 
     labels = labels_ref[...]
     media = media_ref[...]
@@ -115,14 +149,21 @@ def _kernel(labels_ref, media_ref, *refs,
     n = state.w.shape[0]
     if n_det:
         det_geom = det_geom_ref[...]
+    if jac_cols:
+        jac_w = jac_w_ref[...]
+        jac_col = jac_col_ref[...]
 
     def body(_, carry):
+        st, flu, exi, esc, timed = carry[:5]
+        cur = 5
+        if n_det:
+            pp, dw, dp = carry[cur:cur + 3]
+            cur += 3
         if record:
-            st, flu, exi, esc, timed, pp, dw, dp, capd, capg = carry
-        elif n_det:
-            st, flu, exi, esc, timed, pp, dw, dp = carry
-        else:
-            st, flu, exi, esc, timed = carry
+            capd, capg = carry[cur:cur + 2]
+            cur += 2
+        if jac_cols:
+            jac = carry[cur]
         res = ph.step(st, labels, media, shape, unitinmm, cfg)
         gate = ph.time_gate_bins(res.dep_t, cfg.tmax_ns, ntg)
         flu = flu.at[res.dep_idx * ntg + gate].add(res.dep_w)
@@ -130,15 +171,23 @@ def _kernel(labels_ref, media_ref, *refs,
         exi = exi.at[xy].add(xw)
         esc = esc + res.esc_w
         timed = timed + res.timed_w
+        out = (res.state, flu, exi, esc, timed)
         if n_det:
             pp, dw, dp = accumulate_capture(pp, dw, dp, res, gate,
                                             det_geom, ntg)
+            out = out + (pp, dw, dp)
             if record:
                 capd, capg = update_capture(capd, capg, res, gate, det_geom)
-                return (res.state, flu, exi, esc, timed, pp, dw, dp,
-                        capd, capg)
-            return (res.state, flu, exi, esc, timed, pp, dw, dp)
-        return (res.state, flu, exi, esc, timed)
+                out = out + (capd, capg)
+        if jac_cols:
+            # replay pass-B scatter (DESIGN.md §replay): each lane
+            # deposits jac_w * seg_len into its fixed Jacobian column;
+            # seg_len is 0 for dead lanes and jac_w is 0 for padding,
+            # so masked lanes add exact zeros
+            jac = jac.at[res.dep_idx * jac_cols + jac_col].add(
+                jac_w * res.seg_len)
+            out = out + (jac,)
+        return out
 
     init = (state, jnp.zeros_like(fluence_ref),
             jnp.zeros_like(exitance_ref), jnp.zeros((n,), jnp.float32),
@@ -149,6 +198,8 @@ def _kernel(labels_ref, media_ref, *refs,
     if record:
         init = init + (jnp.full((n,), -1, jnp.int32),
                        jnp.zeros((n,), jnp.int32))
+    if jac_cols:
+        init = init + (jnp.zeros_like(jac_ref),)
     final = jax.lax.fori_loop(0, n_steps, body, init)
     state, flu_add, exi_add, esc, timed = final[:5]
 
@@ -165,21 +216,27 @@ def _kernel(labels_ref, media_ref, *refs,
     # accumulate this block's deposition into the shared output blocks
     fluence_ref[...] += flu_add
     exitance_ref[...] += exi_add
+    cur = 5
     if n_det:
-        pp, dw_add, dp_add = final[5:8]
+        pp, dw_add, dp_add = final[cur:cur + 3]
+        cur += 3
         out_ppath[...] = pp
         det_w_ref[...] += dw_add
         det_ppath_ref[...] += dp_add
     if record:
-        cap_det_ref[...] = final[8]
-        cap_gate_ref[...] = final[9]
+        cap_det_ref[...] = final[cur]
+        cap_gate_ref[...] = final[cur + 1]
+        cur += 2
+    if jac_cols:
+        jac_ref[...] += final[cur]
 
 
 def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
                        shape, unitinmm, cfg: SimConfig, n_steps: int,
                        block_lanes: int = 256,
                        interpret: bool | None = None,
-                       ppath=None, det_geom=None, record: bool = False):
+                       ppath=None, det_geom=None, record: bool = False,
+                       jac_w=None, jac_col=None, jac_cols: int = 0):
     """Advance all lanes ``n_steps`` segments; returns
     ``(new_state, fluence_flat, exitance_flat, escaped_per_lane,
     timed_per_lane)`` — plus ``(ppath, det_w_flat, det_ppath)`` when
@@ -187,7 +244,13 @@ def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
     int32 capture records when ``record`` is set (DESIGN.md §replay:
     detector index of this round's capture, -1 for none, and its exit
     time gate — the caller owns the global photon ids and appends the
-    records to the fixed-capacity id buffer).
+    records to the fixed-capacity id buffer), plus a trailing
+    ``(nvox * jac_cols,)`` replay-Jacobian accumulator when
+    ``jac_cols > 0``: each lane scatter-adds ``jac_w * seg_len`` of
+    every transport segment into column ``jac_col`` of its deposition
+    voxel (``jac_w``/``jac_col`` are per-lane (n,) f32/int32 inputs —
+    the exit-weight scale and fixed Jacobian column of the record being
+    replayed; DESIGN.md §replay).
 
     ``fluence_flat`` is gate-major ``(nvox * cfg.n_time_gates,)``
     (``(nvox,)`` for the CW case, bit-identical to the ungated kernel),
@@ -206,6 +269,11 @@ def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
         interpret = default_interpret()
     if (ppath is None) != (det_geom is None):
         raise ValueError("ppath and det_geom must be given together")
+    jac_cols = int(jac_cols)
+    if (jac_cols > 0) != (jac_w is not None) or \
+            (jac_w is None) != (jac_col is None):
+        raise ValueError("jac_w, jac_col and jac_cols > 0 must be given "
+                         "together")
     n = state.w.shape[0]
     if n % block_lanes:
         raise ValueError(f"lane count {n} not divisible by {block_lanes}")
@@ -268,16 +336,24 @@ def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
         ]
         out_specs += [lane_spec((n_media,)), full_spec(n_det * ntg),
                       full_spec(n_det, n_media)]
+    if jac_cols:
+        in_specs += [lane_spec(), lane_spec()]
+        operands += [jac_w, jac_col]
     if record:
         out_shapes += [
             jax.ShapeDtypeStruct((n,), jnp.int32),   # cap_det (-1: none)
             jax.ShapeDtypeStruct((n,), jnp.int32),   # cap_gate
         ]
         out_specs += [lane_spec(), lane_spec()]
+    if jac_cols:
+        out_shapes += [
+            jax.ShapeDtypeStruct((nvox * jac_cols,), jnp.float32),  # jac
+        ]
+        out_specs += [full_spec(nvox * jac_cols)]              # revisited
 
     kernel = functools.partial(
         _kernel, shape=shape, unitinmm=unitinmm, cfg=cfg, n_steps=n_steps,
-        n_det=n_det, record=record)
+        n_det=n_det, record=record, jac_cols=jac_cols)
     outs = pl.pallas_call(
         kernel,
         grid=(nblocks,),

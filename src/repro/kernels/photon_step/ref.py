@@ -22,14 +22,22 @@ from repro.detectors import accumulate_capture, update_capture
 
 def photon_steps_ref(labels_flat, media, state: ph.PhotonState,
                      shape, unitinmm, cfg: SimConfig, n_steps: int,
-                     ppath=None, det_geom=None, record=False):
+                     ppath=None, det_geom=None, record=False,
+                     jac_w=None, jac_col=None, jac_cols: int = 0):
     """Returns ``(new_state, fluence_flat, exitance_flat,
     escaped_per_lane, timed_per_lane)`` — plus
     ``(ppath, det_w_flat, det_ppath)`` when detectors are configured,
     plus ``(cap_det, cap_gate)`` per-lane capture records when
-    ``record`` is set (same contract as ``photon_step_pallas``)."""
+    ``record`` is set, plus the ``(nvox * jac_cols,)`` replay-Jacobian
+    accumulator when ``jac_cols > 0`` (same contract as
+    ``photon_step_pallas``)."""
     if (ppath is None) != (det_geom is None):
         raise ValueError("ppath and det_geom must be given together")
+    jac_cols = int(jac_cols)
+    if (jac_cols > 0) != (jac_w is not None) or \
+            (jac_w is None) != (jac_col is None):
+        raise ValueError("jac_w, jac_col and jac_cols > 0 must be given "
+                         "together")
     nvox = labels_flat.shape[0]
     ntg = int(cfg.n_time_gates)
     nxy = shape[0] * shape[1]
@@ -40,12 +48,16 @@ def photon_steps_ref(labels_flat, media, state: ph.PhotonState,
         raise ValueError("record=True requires detectors (det_geom)")
 
     def body(_, carry):
+        st, flu, exi, esc, timed = carry[:5]
+        cur = 5
+        if n_det:
+            pp, dw, dp = carry[cur:cur + 3]
+            cur += 3
         if record:
-            st, flu, exi, esc, timed, pp, dw, dp, capd, capg = carry
-        elif n_det:
-            st, flu, exi, esc, timed, pp, dw, dp = carry
-        else:
-            st, flu, exi, esc, timed = carry
+            capd, capg = carry[cur:cur + 2]
+            cur += 2
+        if jac_cols:
+            jac = carry[cur]
         res = ph.step(st, labels_flat, media, shape, unitinmm, cfg)
         gate = ph.time_gate_bins(res.dep_t, cfg.tmax_ns, ntg)
         flu = flu.at[res.dep_idx * ntg + gate].add(res.dep_w)
@@ -53,15 +65,19 @@ def photon_steps_ref(labels_flat, media, state: ph.PhotonState,
         exi = exi.at[xy].add(xw)
         esc = esc + res.esc_w
         timed = timed + res.timed_w
+        out = (res.state, flu, exi, esc, timed)
         if n_det:
             pp, dw, dp = accumulate_capture(pp, dw, dp, res, gate,
                                             det_geom, ntg)
+            out = out + (pp, dw, dp)
             if record:
                 capd, capg = update_capture(capd, capg, res, gate, det_geom)
-                return (res.state, flu, exi, esc, timed, pp, dw, dp,
-                        capd, capg)
-            return (res.state, flu, exi, esc, timed, pp, dw, dp)
-        return (res.state, flu, exi, esc, timed)
+                out = out + (capd, capg)
+        if jac_cols:
+            jac = jac.at[res.dep_idx * jac_cols + jac_col].add(
+                jac_w * res.seg_len)
+            out = out + (jac,)
+        return out
 
     init = (state, jnp.zeros((nvox * ntg,), jnp.float32),
             jnp.zeros((nxy,), jnp.float32), jnp.zeros((n,), jnp.float32),
@@ -72,4 +88,6 @@ def photon_steps_ref(labels_flat, media, state: ph.PhotonState,
     if record:
         init = init + (jnp.full((n,), -1, jnp.int32),
                        jnp.zeros((n,), jnp.int32))
+    if jac_cols:
+        init = init + (jnp.zeros((nvox * jac_cols,), jnp.float32),)
     return jax.lax.fori_loop(0, n_steps, body, init)

@@ -76,11 +76,25 @@ def main(argv=None):
                     help="after the forward run, replay the recorded "
                          "detected photons into per-detector absorption "
                          "Jacobian volumes (requires --save-detected)")
+    ap.add_argument("--replay-engine", default="jnp",
+                    choices=list(S.ENGINES),
+                    help="round executor for the two replay transport "
+                         "passes (DESIGN.md §replay): in-graph jnp loop "
+                         "or the Pallas photon-step kernel; with "
+                         "--devices all the record batches are "
+                         "additionally shard_map'd over every device")
+    ap.add_argument("--replay-gate-resolved", action="store_true",
+                    help="widen the replay scatter to a time-gate-"
+                         "resolved (nvox, n_det, n_time_gates) Jacobian "
+                         "keyed by each record's exit gate (requires "
+                         "--replay)")
     args = ap.parse_args(argv)
     if args.save_detected and not args.detectors:
         ap.error("--save-detected requires --detectors")
     if args.replay and not args.save_detected:
         ap.error("--replay requires --save-detected")
+    if args.replay_gate_resolved and not args.replay:
+        ap.error("--replay-gate-resolved requires --replay")
 
     source = json.loads(args.source) if args.source else None
     detectors = D.as_detectors(
@@ -98,6 +112,7 @@ def main(argv=None):
               "-> lanes =", lanes)
 
     t0 = time.time()
+    mesh = None
     if args.chunk:
         sched = ChunkScheduler(vol, cfg, n_lanes=lanes, source=source,
                                engine=args.engine, detectors=detectors,
@@ -151,19 +166,28 @@ def main(argv=None):
         if args.replay and recs.shape[0]:
             t0 = time.time()
             rep = replay_jacobian(vol, cfg, recs, detectors, source=source,
-                                  seed=args.seed, n_lanes=lanes)
+                                  seed=args.seed, n_lanes=lanes,
+                                  engine=args.replay_engine,
+                                  gate_resolved=args.replay_gate_resolved,
+                                  mesh=mesh)
             dt = time.time() - t0
             ok = int((rep.replayed_det == rep.det).sum())
-            print(f"replay: {rep.n_records} photons in {dt:.2f}s "
-                  f"({rep.n_records/dt/1e3:.2f} photons/ms), "
-                  f"{ok}/{rep.n_records} detector-exact")
+            sharded = f" over {mesh.size} devices" if mesh is not None else ""
+            print(f"replay[{args.replay_engine}]: {rep.n_records} photons "
+                  f"in {dt:.2f}s ({rep.n_records/dt/1e3:.2f} photons/ms)"
+                  f"{sharded}, {ok}/{rep.n_records} detector-exact")
             jac = rep.jacobian
             med = A.jacobian_medium_sums(jac, vol)
+            gated = jac if jac.ndim == 4 else jac.sum(axis=-1)
             for i, d in enumerate(detectors):
-                nz = int(np.sum(jac[..., i] > 0))
-                print(f"  J[det {i}]: sum={jac[..., i].sum():.3e} "
+                nz = int(np.sum(gated[..., i] > 0))
+                print(f"  J[det {i}]: sum={gated[..., i].sum():.3e} "
                       f"(weight*mm), nonzero voxels={nz}, per-medium "
                       f"{np.array_str(med[i], precision=3)}")
+            if jac.ndim == 5:
+                per_gate = jac.sum(axis=(0, 1, 2, 3))
+                print(f"  gate-resolved: {jac.shape[-1]} gates, "
+                      f"peak gate {int(per_gate.argmax())}")
     return res
 
 

@@ -1,0 +1,136 @@
+"""Perf-regression CI gate (benchmarks/check_regression.py).
+
+Host-side only — no jax.  Pins the gate's decision rules: throughput
+leaves (photons_per_s / records_per_s at any depth) fail on a >30%
+drop, overhead leaves (*_overhead_frac) fail on a >10-point growth,
+cold-start keys and one-sided keys are ignored, and workload-mismatched
+files are skipped rather than compared.
+"""
+
+import copy
+import json
+
+import pytest
+
+from benchmarks.check_regression import check_file, main
+
+BASE = {
+    "meta": {"bench": "B2", "quick": True, "size": 20, "backend": "cpu"},
+    "engines": {
+        "jnp": {
+            "photons_per_s_record_on": 1000.0,
+            "recording_overhead_frac": 0.10,
+            "records": 377,
+        },
+    },
+    "replay": {
+        "engines": {
+            "jnp": {"records_per_s": 200.0, "records_per_s_cold": 50.0},
+        },
+    },
+}
+
+
+def test_identical_files_pass():
+    failures, notes = check_file("BENCH_x.json", BASE, copy.deepcopy(BASE),
+                                 0.30, 0.10)
+    assert failures == []
+    assert any("checked" in n for n in notes)
+
+
+def test_throughput_drop_fails_and_small_drop_passes():
+    fresh = copy.deepcopy(BASE)
+    fresh["engines"]["jnp"]["photons_per_s_record_on"] = 650.0  # -35%
+    failures, _ = check_file("BENCH_x.json", BASE, fresh, 0.30, 0.10)
+    assert len(failures) == 1 and "photons_per_s_record_on" in failures[0]
+    fresh["engines"]["jnp"]["photons_per_s_record_on"] = 750.0  # -25%
+    failures, _ = check_file("BENCH_x.json", BASE, fresh, 0.30, 0.10)
+    assert failures == []
+
+
+def test_nested_records_per_s_is_gated_but_cold_is_not():
+    fresh = copy.deepcopy(BASE)
+    fresh["replay"]["engines"]["jnp"]["records_per_s"] = 100.0   # -50%
+    fresh["replay"]["engines"]["jnp"]["records_per_s_cold"] = 1.0
+    failures, _ = check_file("BENCH_x.json", BASE, fresh, 0.30, 0.10)
+    assert len(failures) == 1
+    assert "records_per_s " in failures[0] + " "
+    assert all("cold" not in f for f in failures)
+
+
+def test_overhead_growth_fails_in_points_not_ratio():
+    fresh = copy.deepcopy(BASE)
+    fresh["engines"]["jnp"]["recording_overhead_frac"] = 0.19  # +9 points
+    failures, _ = check_file("BENCH_x.json", BASE, fresh, 0.30, 0.10)
+    assert failures == []
+    fresh["engines"]["jnp"]["recording_overhead_frac"] = 0.21  # +11 points
+    failures, _ = check_file("BENCH_x.json", BASE, fresh, 0.30, 0.10)
+    assert len(failures) == 1 and "recording_overhead_frac" in failures[0]
+
+
+def test_workload_mismatch_skips_instead_of_comparing():
+    fresh = copy.deepcopy(BASE)
+    fresh["meta"]["quick"] = False
+    fresh["engines"]["jnp"]["photons_per_s_record_on"] = 1.0  # huge "drop"
+    failures, notes = check_file("BENCH_x.json", BASE, fresh, 0.30, 0.10)
+    assert failures == []
+    assert any("SKIPPED" in n and "quick" in n for n in notes)
+
+
+def test_one_sided_keys_are_ignored():
+    fresh = copy.deepcopy(BASE)
+    del fresh["replay"]["engines"]["jnp"]["records_per_s"]
+    fresh["engines"]["pallas"] = {"photons_per_s_record_on": 1.0}  # new key
+    failures, _ = check_file("BENCH_x.json", BASE, fresh, 0.30, 0.10)
+    assert failures == []
+
+
+@pytest.mark.parametrize("regress", [False, True])
+def test_main_exit_codes(tmp_path, regress):
+    base_dir = tmp_path / "base"
+    fresh_dir = tmp_path / "fresh"
+    base_dir.mkdir()
+    fresh_dir.mkdir()
+    fresh = copy.deepcopy(BASE)
+    if regress:
+        fresh["engines"]["jnp"]["photons_per_s_record_on"] = 1.0
+    (base_dir / "BENCH_replay.json").write_text(json.dumps(BASE))
+    (fresh_dir / "BENCH_replay.json").write_text(json.dumps(fresh))
+    rc = main(["--baseline", str(base_dir), "--fresh", str(fresh_dir)])
+    assert rc == (1 if regress else 0)
+
+
+def test_main_fails_when_fresh_file_missing(tmp_path):
+    base_dir = tmp_path / "base"
+    fresh_dir = tmp_path / "fresh"
+    base_dir.mkdir()
+    fresh_dir.mkdir()
+    (base_dir / "BENCH_fused.json").write_text(json.dumps(BASE))
+    rc = main(["--baseline", str(base_dir), "--fresh", str(fresh_dir)])
+    assert rc == 1
+
+
+def test_negative_overhead_baseline_is_floored_at_zero():
+    """A negative baseline overhead is a timing-noise fluke; growth is
+    gated against max(baseline, 0) so a representative fresh value
+    (e.g. +0.09) still passes."""
+    base = copy.deepcopy(BASE)
+    base["engines"]["jnp"]["recording_overhead_frac"] = -0.09
+    fresh = copy.deepcopy(BASE)
+    fresh["engines"]["jnp"]["recording_overhead_frac"] = 0.09
+    failures, _ = check_file("BENCH_x.json", base, fresh, 0.30, 0.10)
+    assert failures == []
+    fresh["engines"]["jnp"]["recording_overhead_frac"] = 0.11
+    failures, _ = check_file("BENCH_x.json", base, fresh, 0.30, 0.10)
+    assert len(failures) == 1
+
+
+def test_machine_mismatch_notes_but_still_compares():
+    fresh = copy.deepcopy(BASE)
+    base = copy.deepcopy(BASE)
+    base["meta"]["machine"] = "x86_64"
+    fresh["meta"]["machine"] = "aarch64"
+    fresh["engines"]["jnp"]["photons_per_s_record_on"] = 100.0
+    failures, notes = check_file("BENCH_x.json", base, fresh, 0.30, 0.10)
+    assert len(failures) == 1  # compared despite the machine change
+    assert any("machine" in n for n in notes)

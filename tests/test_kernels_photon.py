@@ -216,3 +216,52 @@ def test_interpret_autodetect():
     _, flu_expl, *_ = photon_step_pallas(*args, block_lanes=128,
                                          interpret=expected)
     np.testing.assert_array_equal(np.asarray(flu_auto), np.asarray(flu_expl))
+
+
+def test_kernel_replay_jac_scatter_matches_oracle():
+    """Replay pass-B Jacobian scatter (DESIGN.md §replay): per-lane
+    ``jac_w * seg_len`` into a fixed column of the deposition voxel —
+    bit-identical to the oracle when the grid is one block (same
+    scatter order), fp-tolerance across blockings."""
+    vol = V.benchmark_b2((16, 16, 16))
+    cfg = V.SimConfig(do_reflect=True)
+    n = 128
+    state = _mk_state(n, vol)
+    labels = vol.labels.reshape(-1)
+    jac_w = jnp.linspace(0.1, 1.0, n).astype(jnp.float32)
+    jac_col = (jnp.arange(n) % 3).astype(jnp.int32)
+    args = (labels, vol.media, state, vol.shape, vol.unitinmm, cfg, 40)
+    kw = dict(jac_w=jac_w, jac_col=jac_col, jac_cols=3)
+
+    outs_r = photon_steps_ref(*args, **kw)
+    outs_1 = photon_step_pallas(*args, block_lanes=n, interpret=True, **kw)
+    jac_r, jac_1 = np.asarray(outs_r[-1]), np.asarray(outs_1[-1])
+    assert jac_r.shape == (vol.labels.size * 3,) and jac_r.sum() > 0
+    np.testing.assert_array_equal(jac_1, jac_r)
+
+    outs_4 = photon_step_pallas(*args, block_lanes=32, interpret=True, **kw)
+    np.testing.assert_allclose(np.asarray(outs_4[-1]), jac_r,
+                               rtol=1e-5, atol=1e-7)
+    # masked lanes (jac_w == 0) contribute nothing: zeroing every weight
+    # empties the accumulator
+    outs_0 = photon_step_pallas(*args, block_lanes=32, interpret=True,
+                                jac_w=jnp.zeros((n,), jnp.float32),
+                                jac_col=jac_col, jac_cols=3)
+    assert float(jnp.abs(outs_0[-1]).max()) == 0.0
+
+
+def test_kernel_replay_jac_requires_consistent_args():
+    vol = V.benchmark_b1((12, 12, 12))
+    cfg = V.SimConfig(do_reflect=False)
+    n = 64
+    state = _mk_state(n, vol)
+    labels = vol.labels.reshape(-1)
+    with pytest.raises(ValueError, match="jac_w"):
+        photon_step_pallas(labels, vol.media, state, vol.shape,
+                           vol.unitinmm, cfg, 5, block_lanes=n,
+                           interpret=True,
+                           jac_w=jnp.zeros((n,), jnp.float32))
+    with pytest.raises(ValueError, match="jac_w"):
+        photon_steps_ref(labels, vol.media, state, vol.shape,
+                         vol.unitinmm, cfg, 5,
+                         jac_col=jnp.zeros((n,), jnp.int32), jac_cols=2)

@@ -258,3 +258,53 @@ assert np.array_equal(row_sorted(detected_records(er)), recs_ref)
 print("OK")
 """)
     assert "OK" in out
+
+
+def test_sharded_replay_matches_single_device():
+    """shard_map'd replay (DESIGN.md §replay): record batches fan out
+    over 8 fake devices through multidevice.sharded_replay_fn; the
+    per-record outputs are bit-equal to the single-device replay
+    (trajectories are id-keyed) and the psum'd Jacobian agrees to
+    fp-accumulation order — for both round executors and the
+    gate-resolved scatter."""
+    out = _run("""
+import dataclasses
+import jax, numpy as np
+from repro.core import volume as V, simulator as S, analysis as A
+from repro.detectors import Detector
+from repro.replay import detected_records, replay_jacobian
+vol = V.benchmark_b1((16, 16, 16))
+cfg = dataclasses.replace(V.b1_config(), steps_per_round=2,
+                          tmax_ns=0.5, n_time_gates=4)
+dets = (Detector(11.0, 8.0, 3.0),)
+src = {"type": "pencil", "pos": (8.0, 8.0, 0.0)}
+res = S.simulate(vol, cfg, 1500, 256, 7, source=src, detectors=dets,
+                 record_detected=4096)
+rec = detected_records(res)
+assert rec.shape[0] > 50
+
+single = replay_jacobian(vol, cfg, rec, dets, source=src, seed=7,
+                         n_lanes=64)
+mesh = jax.make_mesh((8,), ("data",))
+shard = replay_jacobian(vol, cfg, rec, dets, source=src, seed=7,
+                        n_lanes=64, mesh=mesh)
+assert np.array_equal(single.w_exit, shard.w_exit)
+assert np.array_equal(single.gate, shard.gate)
+assert np.array_equal(single.replayed_det, shard.replayed_det)
+np.testing.assert_allclose(shard.jacobian, single.jacobian,
+                           rtol=1e-5, atol=1e-9)
+
+# pallas executor + gate-resolved scatter through the same fan-out
+sg = replay_jacobian(vol, cfg, rec, dets, source=src, seed=7,
+                     n_lanes=64, mesh=mesh, engine="pallas",
+                     gate_resolved=True)
+assert sg.jacobian.shape == (16, 16, 16, 1, 4)
+assert np.array_equal(sg.w_exit, single.w_exit)
+np.testing.assert_allclose(sg.jacobian.sum(axis=-1), single.jacobian,
+                           rtol=1e-5, atol=1e-9)
+M = A.jacobian_medium_sums(sg.jacobian, vol)
+np.testing.assert_allclose(M, np.asarray(res.det_ppath, np.float64),
+                           rtol=1e-4, atol=1e-4)
+print("OK")
+""")
+    assert "OK" in out

@@ -298,3 +298,188 @@ def test_detected_records_reassembles_sharded_buffers():
         rec, np.asarray([[1, 0, 0, 0], [2, 0, 1, 0], [7, 1, 0, 2]],
                         np.uint32))
     assert rec.shape[0] == 3 and cap == 4
+
+
+# ---------------------------------------------------------------------------
+# engine-pluggable, batched/sharded replay (DESIGN.md §replay)
+# ---------------------------------------------------------------------------
+
+def _b1_forward(seed=5, n_photons=400, cfg=None, lanes=128):
+    vol = V.benchmark_b1(SHAPE)
+    cfg = cfg or V.SimConfig(do_reflect=False)
+    res = S.simulate(vol, cfg, n_photons, lanes, seed, source=SRC,
+                     detectors=DETS, record_detected=2048)
+    return res, vol, cfg
+
+
+def test_replay_pallas_engine_matches_jnp():
+    """The Pallas round executor replays bit-identical trajectories:
+    per-record outputs equal the jnp engine exactly for any blocking,
+    and the Jacobian is bit-equal when the grid is a single block (the
+    in-kernel scatter then runs in the same order as the jnp rounds)."""
+    res, vol, cfg, src, dets = _b2_forward()
+    rec = detected_records(res)
+    rj = replay_jacobian(vol, cfg, rec, dets, source=src, seed=SEED,
+                         n_lanes=256, engine="jnp")
+    rp = replay_jacobian(vol, cfg, rec, dets, source=src, seed=SEED,
+                         n_lanes=256, engine="pallas", block_lanes=256)
+    np.testing.assert_array_equal(rp.w_exit, rj.w_exit)
+    np.testing.assert_array_equal(rp.gate, rj.gate)
+    np.testing.assert_array_equal(rp.replayed_det, rj.replayed_det)
+    np.testing.assert_array_equal(rp.jacobian, rj.jacobian)
+    # multi-block grids reorder the in-kernel scatter across lane
+    # blocks: per-record outputs stay bit-equal, the Jacobian agrees to
+    # fp-accumulation order
+    rp4 = replay_jacobian(vol, cfg, rec, dets, source=src, seed=SEED,
+                          n_lanes=256, engine="pallas", block_lanes=64)
+    np.testing.assert_array_equal(rp4.w_exit, rj.w_exit)
+    np.testing.assert_array_equal(rp4.replayed_det, rj.replayed_det)
+    np.testing.assert_allclose(rp4.jacobian, rj.jacobian,
+                               rtol=1e-5, atol=1e-9)
+
+
+def test_replay_gate_resolved_partitions_ungated():
+    """gate_resolved=True widens the scatter to (nvox, n_det, ntg)
+    keyed by each record's exit gate; the gates *partition* the
+    scatter, so the gate-sum recovers the ungated Jacobian and the
+    5-D medium sums keep the det_ppath identity."""
+    cfg = V.SimConfig(do_reflect=False, steps_per_round=2, tmax_ns=0.5,
+                      n_time_gates=4)
+    res, vol, cfg = _b1_forward(seed=7, n_photons=1500, cfg=cfg, lanes=256)
+    rec = detected_records(res)
+    gates = np.unique(rec[:, 3])
+    assert gates.size >= 2, "fixture must spread records over gates"
+    rj = replay_jacobian(vol, cfg, rec, DETS, source=SRC, seed=7,
+                         n_lanes=256)
+    rg = replay_jacobian(vol, cfg, rec, DETS, source=SRC, seed=7,
+                         n_lanes=256, gate_resolved=True)
+    assert rg.jacobian.shape == SHAPE + (len(DETS), 4)
+    np.testing.assert_array_equal(rg.w_exit, rj.w_exit)
+    np.testing.assert_array_equal(rg.gate, rec[:, 3].astype(np.int32))
+    np.testing.assert_allclose(rg.jacobian.sum(axis=-1), rj.jacobian,
+                               rtol=2e-5, atol=1e-9)
+    # gates with no records contribute empty slices
+    for g in range(4):
+        if g not in gates:
+            assert np.abs(rg.jacobian[..., g]).max() == 0.0
+    # 5-D medium sums: gate-summed identity vs the forward det_ppath,
+    # and the per-gate variant partitions it
+    M = A.jacobian_medium_sums(rg.jacobian, vol)
+    np.testing.assert_allclose(M, np.asarray(res.det_ppath, np.float64),
+                               rtol=1e-4, atol=1e-4)
+    Mg = A.jacobian_medium_sums(rg.jacobian, vol, per_gate=True)
+    assert Mg.shape == (len(DETS), 4, vol.media.shape[0])
+    np.testing.assert_allclose(Mg.sum(axis=1), M)
+    with pytest.raises(ValueError, match="per_gate"):
+        A.jacobian_medium_sums(rj.jacobian, vol, per_gate=True)
+
+
+def test_replay_gate_resolved_cw_is_bit_equal_ungated():
+    """ntg=1 (CW): the gate-resolved scatter is the ungated scatter
+    with a singleton gate axis — bit-for-bit."""
+    res, vol, cfg = _b1_forward()
+    rec = detected_records(res)
+    rj = replay_jacobian(vol, cfg, rec, DETS, source=SRC, seed=5,
+                         n_lanes=128)
+    rg = replay_jacobian(vol, cfg, rec, DETS, source=SRC, seed=5,
+                         n_lanes=128, gate_resolved=True)
+    assert rg.jacobian.shape == SHAPE + (len(DETS), 1)
+    np.testing.assert_array_equal(rg.jacobian[..., 0], rj.jacobian)
+
+
+def test_replay_batch_padding_contributes_exactly_zero():
+    """Regression for the batch-padding contract: padding lanes carry
+    id (0, 0) with active=False and must contribute *exactly* zero —
+    even when a real detected photon has id 0 (the padding id is not a
+    sentinel; only the active mask separates them)."""
+    res, vol, cfg = _b1_forward()  # seed 5: photon id 0 IS detected
+    rec = detected_records(res)
+    is_id0 = (rec[:, 0] == 0) & (rec[:, 1] == 0)
+    assert is_id0.any(), \
+        "fixture must detect photon id (0,0) — pick another seed"
+    id0 = rec[is_id0]
+    # 1 real lane + 7 padding lanes with the SAME id as the real one:
+    # padding adds exact zeros, so the result is bit-equal to the
+    # pad-free single-lane replay
+    padded = replay_jacobian(vol, cfg, id0, DETS, source=SRC, seed=5,
+                             n_lanes=8)
+    alone = replay_jacobian(vol, cfg, id0, DETS, source=SRC, seed=5,
+                            n_lanes=1)
+    np.testing.assert_array_equal(padded.jacobian, alone.jacobian)
+    np.testing.assert_array_equal(padded.w_exit, alone.w_exit)
+    # a 5-record subset including id 0, padded to 8 lanes vs exact fit
+    subset = rec[:5] if is_id0[:5].any() else np.concatenate(
+        [id0[:1], rec[~is_id0][:4]])
+    pad8 = replay_jacobian(vol, cfg, subset, DETS, source=SRC, seed=5,
+                           n_lanes=8)
+    fit5 = replay_jacobian(vol, cfg, subset, DETS, source=SRC, seed=5,
+                           n_lanes=5)
+    np.testing.assert_array_equal(pad8.jacobian, fit5.jacobian)
+
+
+def test_replay_batch_size_invariance():
+    """Replay is batched over fixed-size lane blocks; the per-record
+    outputs are bit-invariant across batch sizes (trajectories depend
+    only on the photon id) and the Jacobian agrees to fp-accumulation
+    order."""
+    res, vol, cfg = _b1_forward()
+    rec = detected_records(res)
+    assert rec.shape[0] > 64  # several batches at n_lanes=8
+    r8 = replay_jacobian(vol, cfg, rec, DETS, source=SRC, seed=5,
+                         n_lanes=8)
+    r64 = replay_jacobian(vol, cfg, rec, DETS, source=SRC, seed=5,
+                          n_lanes=64)
+    np.testing.assert_array_equal(r8.w_exit, r64.w_exit)
+    np.testing.assert_array_equal(r8.gate, r64.gate)
+    np.testing.assert_array_equal(r8.replayed_det, r64.replayed_det)
+    np.testing.assert_allclose(r8.jacobian, r64.jacobian,
+                               rtol=1e-5, atol=1e-9)
+
+
+def test_truncated_records_replay_matches_ppath_subset():
+    """det_rec_overflow semantics under replay: a deliberately tiny id
+    buffer truncates the record list but not the aggregates; replaying
+    the truncated records yields exactly the det_ppath share of those
+    records (truncated + dropped = the full forward det_ppath)."""
+    full, vol, cfg = _b1_forward()
+    n_cap = int(full.det_rec_n)
+    assert n_cap > 12
+    cap = 8
+    small = S.simulate(vol, cfg, 400, 128, 5, source=SRC, detectors=DETS,
+                       record_detected=cap)
+    assert int(small.det_rec_n) == cap
+    assert int(small.det_rec_overflow) == n_cap - cap
+    # aggregates are untouched by the truncation
+    np.testing.assert_array_equal(np.asarray(small.det_w),
+                                  np.asarray(full.det_w))
+    np.testing.assert_array_equal(np.asarray(small.det_ppath),
+                                  np.asarray(full.det_ppath))
+    rec_full = detected_records(full)
+    rec_small = detected_records(small)
+    np.testing.assert_array_equal(rec_small, rec_full[:cap])
+    # the truncated replay covers exactly its records' det_ppath share
+    M_trunc = A.jacobian_medium_sums(
+        replay_jacobian(vol, cfg, rec_small, DETS, source=SRC,
+                        seed=5, n_lanes=64).jacobian, vol)
+    M_rest = A.jacobian_medium_sums(
+        replay_jacobian(vol, cfg, rec_full[cap:], DETS, source=SRC,
+                        seed=5, n_lanes=64).jacobian, vol)
+    ppath = np.asarray(full.det_ppath, np.float64)
+    np.testing.assert_allclose(M_trunc + M_rest, ppath,
+                               rtol=1e-4, atol=1e-4)
+    assert (M_trunc <= ppath + 1e-6).all()
+
+
+def test_replay_engine_and_gate_validation():
+    res, vol, cfg = _b1_forward()
+    rec = detected_records(res)
+    with pytest.raises(ValueError, match="unknown engine"):
+        replay_jacobian(vol, cfg, rec, DETS, source=SRC, seed=5,
+                        engine="bogus")
+    # gate-resolved replay refuses records whose gates exceed the cfg's
+    # gate count (records from a different forward gate layout)
+    bad = rec.copy()
+    bad[0, 3] = 7
+    with pytest.raises(ValueError, match="time gate 7"):
+        replay_jacobian(vol, cfg, bad, DETS, source=SRC, seed=5,
+                        gate_resolved=True)
