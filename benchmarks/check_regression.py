@@ -11,12 +11,15 @@ committed baselines and **fails** (exit code 1) when
     more than ``--max-overhead-points`` (default 0.10, i.e. 10
     percentage points).
 
-Keys ending in ``_cold`` are ignored (cold numbers include one-shot
-compile time — too noisy for a gate), as are keys present on only one
-side (schema evolution is not a regression).  A file whose ``meta``
-records a different *workload* (``quick`` flag, ``size``, ``backend``)
-is skipped with a warning: cross-workload throughput ratios are
-meaningless.  Machine-to-machine variance is what the 30% headroom is
+A ``meta.schema_version`` mismatch between baseline and fresh is a hard
+**failure**, not a skip: intentional layout changes must come with a
+baseline refresh (the bench-refresh workflow), never a silent
+cross-version comparison.  Keys ending in ``_cold`` are ignored (cold
+numbers include one-shot compile time — too noisy for a gate), as are
+keys present on only one side within a schema version (leaf-level
+evolution is not a regression).  A file whose ``meta`` records a
+different *workload* (``quick`` flag, ``size``, ``backend``) is skipped
+with a warning: cross-workload throughput ratios are meaningless.  Machine-to-machine variance is what the 30% headroom is
 for; tighten or loosen per lane with the CLI flags or the
 ``BENCH_MAX_DROP`` / ``BENCH_MAX_OVERHEAD_POINTS`` env vars.
 
@@ -71,6 +74,19 @@ def check_file(name: str, baseline: dict, fresh: dict, max_drop: float,
     failures, notes = [], []
     meta_b = baseline.get("meta", {})
     meta_f = fresh.get("meta", {})
+    # schema version first, and LOUDLY: a layout change must never be
+    # silently absorbed by the only-one-side key rule or demoted to a
+    # workload-mismatch skip — either would let a regression through as
+    # "schema evolution"
+    sv_b = meta_b.get("schema_version")
+    sv_f = meta_f.get("schema_version")
+    if sv_b != sv_f:
+        failures.append(
+            f"{name}: schema_version mismatch — baseline {sv_b!r} vs "
+            f"fresh {sv_f!r}; regenerate the committed baseline with the "
+            f"current writers (bench-refresh workflow) instead of "
+            f"comparing across layouts")
+        return failures, notes
     mismatched = [k for k in WORKLOAD_KEYS
                   if k in meta_b and k in meta_f and meta_b[k] != meta_f[k]]
     if mismatched:

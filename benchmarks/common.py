@@ -9,6 +9,14 @@ import jax
 from repro.core import simulator as S
 from repro.core import volume as V
 
+# Version of the BENCH_*.json layout.  Bump whenever a writer changes
+# the meaning or structure of recorded values; check_regression.py
+# refuses to compare files across versions (a silent cross-version
+# comparison is how a perf regression sneaks through as a "workload
+# mismatch" skip).  v2: added schema_version itself + the
+# collect_stats_overhead_frac leaf in BENCH_fused.json.
+SCHEMA_VERSION = 2
+
 
 def get_bench(name: str, size: int = 40):
     shape = (size, size, size)

@@ -21,17 +21,46 @@ import argparse
 import dataclasses
 import json
 import platform
+import time
 from pathlib import Path
 
 import jax
+import numpy as np
 
-from benchmarks.common import get_bench, time_sim
+from benchmarks.common import SCHEMA_VERSION, get_bench, time_sim
 from repro.core import simulator as S
 from repro.core.volume import SimConfig
 from repro.kernels.photon_step.photon_step import default_interpret
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 ROUNDS = (1, 4, 8, 16, 32)
+
+
+def _time_stats_pair(vol, cfg, n_photons, lanes, engine, repeats, seed=11):
+    """Median per-pair overhead fraction of ``collect_stats=True``.
+
+    Times the stats-off and stats-on simulators as back-to-back
+    interleaved pairs (same pattern as benchmarks/replay.py's recording
+    overhead): the fraction feeds the CI regression gate, and a ratio of
+    two independently best-of timings lets one contended sample swing it
+    by tens of points, while the median of per-pair ratios drops
+    contention spikes entirely.
+    """
+    fns = [S.make_simulator(vol, dataclasses.replace(cfg, collect_stats=c),
+                            lanes, engine=engine)
+           for c in (False, True)]
+    args = (vol.labels.reshape(-1), vol.media, n_photons, seed)
+    for fn in fns:
+        jax.block_until_ready(fn(*args))  # compile + warm
+    fracs = []
+    for _ in range(repeats):
+        pair = []
+        for fn in fns:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            pair.append(time.perf_counter() - t0)
+        fracs.append((pair[1] - pair[0]) / pair[0])
+    return float(np.median(fracs))
 
 
 def run(quick=False, engines=("jnp", "pallas"), rounds=ROUNDS,
@@ -49,6 +78,7 @@ def run(quick=False, engines=("jnp", "pallas"), rounds=ROUNDS,
 
     results: dict = {
         "meta": {
+            "schema_version": SCHEMA_VERSION,
             "bench": "B1-pencil",
             "size": 24 if quick else 40,
             "quick": quick,
@@ -78,15 +108,23 @@ def run(quick=False, engines=("jnp", "pallas"), rounds=ROUNDS,
         base_k = "1" if "1" in rows else str(min(int(k) for k in rows))
         base = rows[base_k]["photons_per_s"]
         best_k = max(rows, key=lambda k: rows[k]["photons_per_s"])
+        # telemetry budget (DESIGN.md §observability): collect_stats must
+        # stay under ~10% at the production-relevant K; the gate enforces
+        # growth on every *_overhead_frac leaf
+        stats_overhead = _time_stats_pair(
+            vol, dataclasses.replace(cfg0, steps_per_round=int(best_k)),
+            n_photons, lanes, engine, repeats=5 if quick else 3)
         rows_meta = {
             "n_photons": n_photons,
             "lanes": lanes,
             "baseline_k": int(base_k),
             "best_k": int(best_k),
             "best_speedup_vs_k1": rows[best_k]["photons_per_s"] / base,
+            "collect_stats_overhead_frac": stats_overhead,
         }
         print(f"[fused] {engine}: best K={best_k} "
-              f"({rows_meta['best_speedup_vs_k1']:.3f}x vs K={base_k})",
+              f"({rows_meta['best_speedup_vs_k1']:.3f}x vs K={base_k}), "
+              f"collect_stats overhead {100 * stats_overhead:+.1f}%",
               flush=True)
         results["engines"][engine] = {"rows": rows, **rows_meta}
 

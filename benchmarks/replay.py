@@ -38,6 +38,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from benchmarks.common import SCHEMA_VERSION
 from repro.core import analysis as An
 from repro.core import simulator as S
 from repro.core import volume as V
@@ -106,6 +107,7 @@ def run(quick=False, engines=("jnp", "pallas"),
 
     results: dict = {
         "meta": {
+            "schema_version": SCHEMA_VERSION,
             "bench": "B2-pencil",
             "size": size,
             "quick": quick,

@@ -33,7 +33,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from benchmarks.common import get_bench, time_sim
+from benchmarks.common import SCHEMA_VERSION, get_bench, time_sim
 from repro.core import analysis as An
 from repro.core import simulator as S
 from repro.core.volume import SimConfig
@@ -57,6 +57,7 @@ def run(quick=False, engines=("jnp", "pallas"), gates=GATES,
 
     results: dict = {
         "meta": {
+            "schema_version": SCHEMA_VERSION,
             "bench": "B1-pencil",
             "size": size,
             "quick": quick,

@@ -38,6 +38,7 @@ from repro.core.simulator import SimResult, build_sim_fn
 from repro.core.volume import SimConfig, Source, Volume
 from repro.detectors import as_detectors
 from repro.sources import PhotonSource, as_source
+from repro.telemetry.stats import RoundStats
 
 # jax >= 0.6 exposes shard_map at the top level (vma type check); older
 # releases keep it in jax.experimental (replication rule check).  Either
@@ -86,6 +87,7 @@ def sharded_sim_fn(volume: Volume, cfg: SimConfig, n_lanes: int,
                        source, engine, detectors=detectors,
                        record_detected=record_detected)
     ax = axis_names
+    collect = bool(cfg.collect_stats)
 
     def worker(labels_flat, media, counts, offsets_lo, offsets_hi, seed):
         res = raw(labels_flat, media, counts[0], seed, offsets_lo[0],
@@ -101,6 +103,11 @@ def sharded_sim_fn(volume: Volume, cfg: SimConfig, n_lanes: int,
             "n_launched": res.n_launched,
             "launched_w": res.launched_w,
         }
+        if collect:
+            # RoundStats totals are additive over disjoint photon
+            # subsets, so the cross-shard reduction is the same psum as
+            # every other accumulator
+            summed["stats"] = res.stats
         for a in ax:
             summed = {k: jax.lax.psum(v, a) for k, v in summed.items()}
         # steps and the record buffer/cursor stay per-shard (rank-1 /
@@ -109,6 +116,8 @@ def sharded_sim_fn(volume: Volume, cfg: SimConfig, n_lanes: int,
                          det_rec_n=res.det_rec_n[None], **summed)
 
     pspec = P(ax)  # counts/offsets sharded across the photon axes
+    stats_spec = (RoundStats(*([P()] * len(RoundStats._fields)))
+                  if collect else None)
     mapped = _shard_map(
         worker,
         mesh=mesh,
@@ -117,7 +126,8 @@ def sharded_sim_fn(volume: Volume, cfg: SimConfig, n_lanes: int,
                             timed_out_w=P(), det_w=P(), det_ppath=P(),
                             det_rec=P(ax), det_rec_n=P(ax),
                             det_rec_overflow=P(),
-                            n_launched=P(), launched_w=P(), steps=P(ax)),
+                            n_launched=P(), launched_w=P(), steps=P(ax),
+                            stats=stats_spec),
     )
     return jax.jit(mapped)
 
@@ -256,6 +266,12 @@ class ChunkScheduler:
     JAX dispatch is asynchronous, so while a device crunches chunk k the
     host can already enqueue k+1 elsewhere; `jax.Array` readiness is the
     completion signal.
+
+    ``tracer`` (a ``repro.telemetry.Tracer``) records one span per chunk
+    dispatch — opened when the chunk is enqueued, closed when its result
+    is ready — tagged with device, engine and photon count, so the run's
+    timeline exports to Chrome tracing and its per-device photons/s feed
+    ``telemetry.fit_device_models`` (DESIGN.md §observability).
     """
 
     def __init__(self, volume: Volume, cfg: SimConfig, n_lanes: int = 1024,
@@ -263,7 +279,7 @@ class ChunkScheduler:
                  mode: str = "dynamic",
                  source: PhotonSource | Source | None = None,
                  engine: str = "jnp", detectors=None,
-                 record_detected: int = 0):
+                 record_detected: int = 0, tracer=None):
         self.volume = volume
         self.cfg = cfg
         self.devices = list(devices or jax.devices())
@@ -272,6 +288,7 @@ class ChunkScheduler:
         self._engine = engine
         self._detectors = detectors
         self._record_detected = int(record_detected)
+        self.tracer = tracer
         self._default_source = as_source(source)
         # one jitted fn per source (sources are frozen/hashable);
         # placement follows the device_put of the inputs
@@ -299,18 +316,24 @@ class ChunkScheduler:
             for s in range(0, n_photons, chunk_size)
         ]
         queue = list(reversed(chunks))
-        inflight: dict[jax.Device, tuple[Chunk, SimResult]] = {}
+        inflight: dict[jax.Device, tuple[Chunk, SimResult, object]] = {}
         stats = {d.id: 0 for d in self.devices}
+        collect = bool(self.cfg.collect_stats)
 
         def dispatch(dev: jax.Device):
             ch = queue.pop()
             lo, hi = split_id64(ch.start_id)
+            span = None
+            if self.tracer is not None:
+                span = self.tracer.span(
+                    "chunk", device=dev, engine=self._engine,
+                    photons=ch.count, chunk_start=ch.start_id)
             res = fn(
                 jax.device_put(self._labels, dev),
                 jax.device_put(self._media, dev),
                 ch.count, seed, lo, hi,
             )
-            inflight[dev] = (ch, res)
+            inflight[dev] = (ch, res, span)
 
         for dev in self.devices:
             if queue:
@@ -330,6 +353,7 @@ class ChunkScheduler:
             "n_launched": 0,
             "launched_w": 0.0,
             "steps": 0,
+            "stats": RoundStats.zeros() if collect else None,
         }
 
         def merge(res: SimResult):
@@ -345,13 +369,17 @@ class ChunkScheduler:
             acc["n_launched"] += int(res.n_launched)
             acc["launched_w"] += float(res.launched_w)
             acc["steps"] += int(res.steps)
+            if collect:
+                acc["stats"] = acc["stats"].add(res.stats)
 
         while inflight:
             progressed = False
             for dev in list(inflight):
-                ch, res = inflight[dev]
+                ch, res, span = inflight[dev]
                 if res.energy.is_ready():
                     del inflight[dev]
+                    if span is not None:
+                        span.end()
                     merge(res)
                     stats[dev.id] += ch.count
                     progressed = True
@@ -375,6 +403,7 @@ class ChunkScheduler:
             n_launched=jnp.int32(acc["n_launched"]),
             launched_w=jnp.float32(acc["launched_w"]),
             steps=jnp.int32(acc["steps"]),
+            stats=acc["stats"],
         )
         return total, stats
 
@@ -392,16 +421,23 @@ class ElasticSimulator:
     ``state_dict``/``load_state_dict`` give checkpoint/restart: the
     checkpoint stores only the accumulated grids and the completed-chunk
     cursor — O(volume), independent of photon count.
+
+    ``tracer`` (a ``repro.telemetry.Tracer``) records one span per chunk
+    (synchronous: the chunk is blocked on inside the span, so durations
+    are true device times), tagged with device, engine and photon count
+    (DESIGN.md §observability).
     """
 
     def __init__(self, volume: Volume, cfg: SimConfig, n_photons: int,
                  chunk_size: int, n_lanes: int = 1024, seed: int = 1234,
                  source: PhotonSource | Source | None = None,
                  engine: str = "jnp", detectors=None,
-                 record_detected: int = 0):
+                 record_detected: int = 0, tracer=None):
         self.volume = volume
         self.cfg = cfg
         self.seed = seed
+        self.engine = engine
+        self.tracer = tracer
         self.source = as_source(source)
         self.detectors = as_detectors(detectors)
         self.chunk_size = chunk_size
@@ -428,6 +464,7 @@ class ElasticSimulator:
         self.det_rec_overflow = 0
         self.n_launched = 0
         self.launched_w = 0.0
+        self.stats = (RoundStats.zeros() if cfg.collect_stats else None)
         self._raw = build_sim_fn(volume.shape, volume.unitinmm, cfg, n_lanes,
                                  source=self.source, engine=engine,
                                  detectors=self.detectors,
@@ -469,11 +506,22 @@ class ElasticSimulator:
     def _run_chunk(self, ch: Chunk, dev: jax.Device) -> SimResult:
         vol = self.volume
         lo, hi = split_id64(ch.start_id)
-        return self._jit(
+        span = None
+        if self.tracer is not None:
+            span = self.tracer.span("chunk", device=dev, engine=self.engine,
+                                    photons=ch.count,
+                                    chunk_start=ch.start_id)
+        res = self._jit(
             jax.device_put(vol.labels.reshape(-1), dev),
             jax.device_put(vol.media, dev),
             ch.count, self.seed, lo, hi,
         )
+        if span is not None:
+            # block inside the span so the duration is the true chunk
+            # time, not just the async dispatch
+            jax.block_until_ready(res)
+            span.end()
+        return res
 
     def _merge(self, ch: Chunk, res: SimResult):
         self.energy += np.asarray(res.energy)
@@ -488,6 +536,8 @@ class ElasticSimulator:
         self.det_rec_overflow += int(res.det_rec_overflow)
         self.n_launched += int(res.n_launched)
         self.launched_w += float(res.launched_w)
+        if self.stats is not None and res.stats is not None:
+            self.stats = self.stats.add(res.stats)
         self.completed.append(ch)
 
     @property
@@ -518,6 +568,7 @@ class ElasticSimulator:
             n_launched=jnp.int32(self.n_launched),
             launched_w=jnp.float32(self.launched_w),
             steps=jnp.int32(0),
+            stats=self.stats,
         )
 
     # -- checkpoint / restart ------------------------------------------------
@@ -543,7 +594,15 @@ class ElasticSimulator:
         return json.dumps(to_dicts(self.detectors), sort_keys=True)
 
     def state_dict(self) -> dict:
+        extra = {}
+        if self.stats is not None:
+            # RoundStats totals checkpoint as one float64 vector in field
+            # order (only present when cfg.collect_stats, so templates of
+            # non-collecting runs are unchanged)
+            extra["stats"] = np.asarray([float(v) for v in self.stats],
+                                        np.float64)
         return {
+            **extra,
             "energy": self.energy.copy(),
             "exitance": self.exitance.copy(),
             "escaped_w": np.float64(self.escaped_w),
@@ -612,6 +671,9 @@ class ElasticSimulator:
             self.det_rec_overflow = int(state.get("det_rec_overflow", 0))
         self.n_launched = int(state["n_launched"])
         self.launched_w = float(state.get("launched_w", state["n_launched"]))
+        if self.stats is not None and "stats" in state:
+            self.stats = RoundStats.from_vector(
+                np.asarray(state["stats"], np.float64))
         self.pending = [Chunk(int(s), int(c)) for s, c in state["pending"]]
         self.completed = [Chunk(int(s), int(c)) for s, c in state["completed"]]
 

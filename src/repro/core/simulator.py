@@ -48,6 +48,7 @@ from repro.detectors import (Detector, accumulate_capture, as_detectors,
                              det_geometry, update_capture,
                              validate_detectors)
 from repro.sources import PhotonSource, as_source
+from repro.telemetry.stats import RoundStats
 
 ENGINES = ("jnp", "pallas")
 
@@ -88,6 +89,11 @@ class SimResult(NamedTuple):
     det_rec_overflow: jnp.ndarray = np.int32(0)  # () captures dropped
     #                          once the buffer filled (det_w still
     #                          counts them; only the id record is lost)
+    stats: RoundStats | None = None  # round-level telemetry counters
+    #                          (telemetry.RoundStats) when
+    #                          cfg.collect_stats is set; None otherwise
+    #                          (an empty pytree node, so jit/shard_map
+    #                          signatures stay stable either way)
 
 
 class _Carry(NamedTuple):
@@ -117,6 +123,10 @@ class _Carry(NamedTuple):
     next_id_hi: jnp.ndarray  #   seeding), as a uint32 (lo, hi) pair
     launched_w: jnp.ndarray  # total initial weight launched so far
     steps: jnp.ndarray
+    stats: tuple | RoundStats = ()  # RoundStats of jnp scalars when
+    #                          cfg.collect_stats, else () — an empty
+    #                          pytree, so the loop structure is
+    #                          identical with collection off
 
 
 def _as_id_pair(next_id):
@@ -310,6 +320,7 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
     ntg = int(cfg.n_time_gates)
     if ntg < 1:
         raise ValueError(f"cfg.n_time_gates must be >= 1, got {ntg}")
+    collect = bool(cfg.collect_stats)
     if engine == "pallas":
         from repro.kernels.photon_step.photon_step import (
             default_interpret, photon_step_pallas, resolve_block_lanes)
@@ -365,6 +376,13 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
             next_id_hi=id_hi,
             launched_w=jnp.float32(0.0),
             steps=jnp.int32(0),
+            stats=(RoundStats(
+                rounds=jnp.int32(0), regen_rounds=jnp.int32(0),
+                relaunched=jnp.int32(0), live_segments=jnp.float32(0.0),
+                lane_segments=jnp.float32(0.0),
+                deposited_w=jnp.float32(0.0), escaped_w=jnp.float32(0.0),
+                timed_out_w=jnp.float32(0.0), detected_w=jnp.float32(0.0),
+            ) if collect else ()),
         )
 
         def cond(c: _Carry):
@@ -385,10 +403,16 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
             and (n_det, n_media) accumulators per segment (they are
             tiny, unlike the fluence volume).  With recording on, the
             trailing (cap_det, cap_gate) carry tracks the round's
-            per-lane capture (at most one: escape kills the lane)."""
+            per-lane capture (at most one: escape kills the lane).
+            With ``cfg.collect_stats``, the final ``live`` element
+            counts lane-segments entered alive — a reduction over the
+            mask the step already computes, never fed back into any
+            physics value."""
             def seg(k, rc):
                 (st, pp, dep_i, dep_w, ex_i, ex_w, esc, timed, dw, dp,
-                 capd, capg) = rc
+                 capd, capg, live) = rc
+                if collect:
+                    live = live + jnp.sum(st.alive, dtype=jnp.float32)
                 res = ph.step(st, labels_flat, media, shape, unitinmm, cfg)
                 gate = ph.time_gate_bins(res.dep_t, cfg.tmax_ns, ntg)
                 dep_i = dep_i.at[k].set(res.dep_idx * ntg + gate)
@@ -405,7 +429,7 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
                     capd, capg = update_capture(capd, capg, res, gate,
                                                 det_geom)
                 return (res.state, pp, dep_i, dep_w, ex_i, ex_w, esc,
-                        timed, dw, dp, capd, capg)
+                        timed, dw, dp, capd, capg, live)
 
             cap_w = n_lanes if record else 0
             init = (
@@ -421,6 +445,7 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
                 jnp.zeros((n_det, n_media), jnp.float32),
                 jnp.full((cap_w,), -1, jnp.int32),
                 jnp.zeros((cap_w,), jnp.int32),
+                jnp.float32(0.0),
             )
             return jax.lax.fori_loop(0, K, seg, init)
 
@@ -462,28 +487,40 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
                     quota, source, seed, mode, shape)
                 ppath = c.ppath
             capd = capg = None
+            live = dep_sum = det_new = None
             if engine == "pallas":
                 outs = photon_step_pallas(
                     labels_flat, media, state, shape, unitinmm, cfg, K,
                     block_lanes, interpret,
                     ppath=ppath if n_det else None, det_geom=det_geom,
-                    record=record)
+                    record=record, stats=collect)
                 state, flu, exi, esc, timed = outs[:5]
                 energy = c.energy + flu
                 exitance = c.exitance + exi
                 escaped_w = c.escaped_w + jnp.sum(esc)
                 timed_out_w = c.timed_out_w + jnp.sum(timed)
+                cur = 5
                 if n_det:
-                    ppath, dw, dp = outs[5:8]
+                    ppath, dw, dp = outs[cur:cur + 3]
+                    cur += 3
                     det_w = c.det_w + dw
                     det_ppath = c.det_ppath + dp
                 else:
                     det_w, det_ppath = c.det_w, c.det_ppath
                 if record:
-                    capd, capg = outs[8:]
+                    capd, capg = outs[cur:cur + 2]
+                    cur += 2
+                if collect:
+                    # the kernel's (n_lanes, 2) stats block: col 0 counts
+                    # segments entered alive, col 1 sums deposited weight
+                    st_block = outs[cur]
+                    live = jnp.sum(st_block[:, 0])
+                    dep_sum = jnp.sum(st_block[:, 1])
+                    det_new = (jnp.sum(dw) if n_det
+                               else jnp.float32(0.0))
             else:
                 (state, ppath, dep_i, dep_w, ex_i, ex_w, esc, timed,
-                 dw, dp, capd, capg) = round_jnp(state, ppath)
+                 dw, dp, capd, capg, live) = round_jnp(state, ppath)
                 energy = c.energy.at[dep_i.reshape(-1)].add(dep_w.reshape(-1))
                 exitance = c.exitance.at[ex_i.reshape(-1)].add(
                     ex_w.reshape(-1))
@@ -491,6 +528,30 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
                 timed_out_w = c.timed_out_w + timed
                 det_w = c.det_w + dw
                 det_ppath = c.det_ppath + dp
+                if collect:
+                    dep_sum = jnp.sum(dep_w)
+                    det_new = jnp.sum(dw)
+            if collect:
+                # uint32 difference is exact across a low-word wrap, and
+                # per-round relaunch counts stay far below 2**31
+                rel = (next_id[0] - c.next_id_lo).astype(jnp.int32)
+                s = c.stats
+                stats = RoundStats(
+                    rounds=s.rounds + 1,
+                    regen_rounds=s.regen_rounds + (rel > 0).astype(
+                        jnp.int32),
+                    relaunched=s.relaunched + rel,
+                    live_segments=s.live_segments + live,
+                    lane_segments=s.lane_segments,  # derived at the end
+                    deposited_w=s.deposited_w + dep_sum,
+                    # escaped/timed totals mirror the main carry's exact
+                    # accumulation, so they stay bit-equal to SimResult
+                    escaped_w=escaped_w,
+                    timed_out_w=timed_out_w,
+                    detected_w=s.detected_w + det_new,
+                )
+            else:
+                stats = ()
             if record:
                 rec, rec_n, rec_overflow = append_records(
                     c, lane_ids, capd, capg)
@@ -515,6 +576,7 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
                 next_id_hi=next_id[1],
                 launched_w=c.launched_w + w_new,
                 steps=c.steps + K,
+                stats=stats,
             )
 
         final = jax.lax.while_loop(cond, body, carry0)
@@ -522,6 +584,16 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
         # deterministically, like the time gate — account it there so the
         # energy-balance residue only measures roulette statistics
         capped_w = jnp.sum(jnp.where(final.state.alive, final.state.w, 0.0))
+        if collect:
+            # mirror the SimResult timed_out_w accounting (capped weight
+            # retires deterministically) and fill the occupancy
+            # denominator; float avoids int32 overflow at large
+            # steps * n_lanes products
+            stats_out = final.stats._replace(
+                timed_out_w=final.stats.timed_out_w + capped_w,
+                lane_segments=final.steps.astype(jnp.float32) * n_lanes)
+        else:
+            stats_out = None
         energy = final.energy
         energy = (energy.reshape(shape + (ntg,)) if ntg > 1
                   else energy.reshape(shape))
@@ -540,6 +612,7 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
             n_launched=(final.next_id_lo - id_lo).astype(jnp.int32),
             launched_w=final.launched_w,
             steps=final.steps,
+            stats=stats_out,
         )
 
     return sim_fn

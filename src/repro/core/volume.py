@@ -171,6 +171,14 @@ class SimConfig:
     §time-resolved).  The default 1 is the continuous-wave special case
     and is bit-identical to the ungated engine; any larger value only
     widens the accumulator — trajectories never depend on it.
+
+    ``collect_stats`` threads a ``telemetry.RoundStats`` accumulator
+    through the round loop (DESIGN.md §observability): per-round
+    live-lane counts, relaunch counts, and deposited/escaped/timed-out/
+    detected weight, returned on ``SimResult.stats``.  The counters are
+    pure extra reductions over values the engines already compute —
+    every physics output stays bit-identical (asserted in tests) and
+    the overhead is budgeted in BENCH_fused.json.
     """
 
     do_reflect: bool = False
@@ -182,6 +190,7 @@ class SimConfig:
     max_steps: int = 500_000     # hard cap on lock-step iterations
     steps_per_round: int = 1     # K: fused segments per outer iteration
     n_time_gates: int = 1        # time-resolved fluence gates over [0, tmax_ns]
+    collect_stats: bool = False  # accumulate RoundStats onto SimResult.stats
 
     @property
     def gate_width_ns(self) -> float:

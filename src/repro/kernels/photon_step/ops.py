@@ -17,30 +17,32 @@ from repro.sources import PhotonSource, as_source
 
 @functools.partial(jax.jit, static_argnames=(
     "shape", "unitinmm", "cfg", "n_steps", "block_lanes", "interpret",
-    "record", "jac_cols"))
+    "record", "jac_cols", "stats"))
 def _photon_steps_jit(labels_flat, media, state, shape, unitinmm,
                       cfg: SimConfig, n_steps: int, block_lanes: int,
                       interpret: bool, ppath=None, det_geom=None,
                       record: bool = False, jac_w=None, jac_col=None,
-                      jac_cols: int = 0):
+                      jac_cols: int = 0, stats: bool = False):
     return photon_step_pallas(labels_flat, media, state, shape, unitinmm,
                               cfg, n_steps, block_lanes, interpret,
                               ppath=ppath, det_geom=det_geom, record=record,
                               jac_w=jac_w, jac_col=jac_col,
-                              jac_cols=jac_cols)
+                              jac_cols=jac_cols, stats=stats)
 
 
 def photon_steps(labels_flat, media, state, shape, unitinmm, cfg: SimConfig,
                  n_steps: int, block_lanes: int = 256,
                  interpret: bool | None = None, ppath=None, det_geom=None,
                  record: bool = False, jac_w=None, jac_col=None,
-                 jac_cols: int = 0):
+                 jac_cols: int = 0, stats: bool = False):
     """Returns ``(new_state, fluence_flat, exitance_flat,
     escaped_per_lane, timed_per_lane)`` — plus
     ``(ppath, det_w_flat, det_ppath)`` when detectors are configured,
     plus per-lane ``(cap_det, cap_gate)`` capture records when
     ``record`` is set, plus the ``(nvox * jac_cols,)`` replay-Jacobian
-    accumulator when ``jac_cols > 0`` (see ``photon_step_pallas``).
+    accumulator when ``jac_cols > 0``, plus the trailing ``(n, 2)``
+    telemetry counter block when ``stats`` is set (see
+    ``photon_step_pallas``).
 
     ``interpret=None`` auto-detects: interpreter off TPU, compiled
     Mosaic kernel on TPU.  Resolved here, outside jit, so ``None`` and
@@ -52,7 +54,7 @@ def photon_steps(labels_flat, media, state, shape, unitinmm, cfg: SimConfig,
                              cfg, n_steps, block_lanes, interpret,
                              ppath=ppath, det_geom=det_geom, record=record,
                              jac_w=jac_w, jac_col=jac_col,
-                             jac_cols=jac_cols)
+                             jac_cols=jac_cols, stats=stats)
 
 
 def simulate_kernel(volume: Volume, cfg: SimConfig, n_photons: int,

@@ -99,11 +99,11 @@ def resolve_block_lanes(n_lanes: int, block_lanes: int) -> int:
 
 def _kernel(labels_ref, media_ref, *refs,
             shape, unitinmm, cfg: SimConfig, n_steps: int, n_det: int,
-            record: bool, jac_cols: int):
+            record: bool, jac_cols: int, stats: bool):
     # unpack the variadic refs: 8 state inputs [+ ppath + det_geom]
     # [+ jac_w + jac_col], then 8 state outputs + fluence/exitance/esc/
     # timed [+ ppath + det_w + det_ppath] [+ cap_det + cap_gate]
-    # [+ jac] — assembled to match photon_step_pallas's specs
+    # [+ jac] [+ stats] — assembled to match photon_step_pallas's specs
     (pos_ref, dir_ref, ivox_ref, w_ref, s_ref, t_ref, rng_ref,
      alive_ref) = refs[:8]
     cur = 8
@@ -125,6 +125,9 @@ def _kernel(labels_ref, media_ref, *refs,
         cur += 2
     if jac_cols:
         jac_ref = outs[cur]
+        cur += 1
+    if stats:
+        stats_ref = outs[cur]
 
     ntg = int(cfg.n_time_gates)
 
@@ -164,6 +167,9 @@ def _kernel(labels_ref, media_ref, *refs,
             cur += 2
         if jac_cols:
             jac = carry[cur]
+            cur += 1
+        if stats:
+            stbl = carry[cur]
         res = ph.step(st, labels, media, shape, unitinmm, cfg)
         gate = ph.time_gate_bins(res.dep_t, cfg.tmax_ns, ntg)
         flu = flu.at[res.dep_idx * ntg + gate].add(res.dep_w)
@@ -187,6 +193,13 @@ def _kernel(labels_ref, media_ref, *refs,
             jac = jac.at[res.dep_idx * jac_cols + jac_col].add(
                 jac_w * res.seg_len)
             out = out + (jac,)
+        if stats:
+            # telemetry counters (DESIGN.md §observability): col 0 counts
+            # segments entered alive, col 1 sums deposited weight; pure
+            # extra reductions, never read back by any physics value
+            stbl = stbl + jnp.stack(
+                [st.alive.astype(jnp.float32), res.dep_w], axis=1)
+            out = out + (stbl,)
         return out
 
     init = (state, jnp.zeros_like(fluence_ref),
@@ -200,6 +213,8 @@ def _kernel(labels_ref, media_ref, *refs,
                        jnp.zeros((n,), jnp.int32))
     if jac_cols:
         init = init + (jnp.zeros_like(jac_ref),)
+    if stats:
+        init = init + (jnp.zeros((n, 2), jnp.float32),)
     final = jax.lax.fori_loop(0, n_steps, body, init)
     state, flu_add, exi_add, esc, timed = final[:5]
 
@@ -229,6 +244,9 @@ def _kernel(labels_ref, media_ref, *refs,
         cur += 2
     if jac_cols:
         jac_ref[...] += final[cur]
+        cur += 1
+    if stats:
+        stats_ref[...] = final[cur]
 
 
 def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
@@ -236,7 +254,8 @@ def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
                        block_lanes: int = 256,
                        interpret: bool | None = None,
                        ppath=None, det_geom=None, record: bool = False,
-                       jac_w=None, jac_col=None, jac_cols: int = 0):
+                       jac_w=None, jac_col=None, jac_cols: int = 0,
+                       stats: bool = False):
     """Advance all lanes ``n_steps`` segments; returns
     ``(new_state, fluence_flat, exitance_flat, escaped_per_lane,
     timed_per_lane)`` — plus ``(ppath, det_w_flat, det_ppath)`` when
@@ -251,6 +270,15 @@ def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
     voxel (``jac_w``/``jac_col`` are per-lane (n,) f32/int32 inputs —
     the exit-weight scale and fixed Jacobian column of the record being
     replayed; DESIGN.md §replay).
+
+    ``stats=True`` appends one more lane-blocked ``(n, 2)`` float32
+    output (always last): column 0 counts segments each lane entered
+    alive, column 1 sums the lane's deposited weight over the round —
+    the in-kernel half of the ``SimConfig.collect_stats`` telemetry
+    counters (DESIGN.md §observability).  The block is accumulated
+    alongside the physics carries and written per lane block; it never
+    feeds back into any physics value, so every other output is
+    bit-identical with ``stats`` on or off.
 
     ``fluence_flat`` is gate-major ``(nvox * cfg.n_time_gates,)``
     (``(nvox,)`` for the CW case, bit-identical to the ungated kernel),
@@ -350,10 +378,15 @@ def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
             jax.ShapeDtypeStruct((nvox * jac_cols,), jnp.float32),  # jac
         ]
         out_specs += [full_spec(nvox * jac_cols)]              # revisited
+    if stats:
+        out_shapes += [
+            jax.ShapeDtypeStruct((n, 2), jnp.float32),   # telemetry block
+        ]
+        out_specs += [lane_spec((2,))]
 
     kernel = functools.partial(
         _kernel, shape=shape, unitinmm=unitinmm, cfg=cfg, n_steps=n_steps,
-        n_det=n_det, record=record, jac_cols=jac_cols)
+        n_det=n_det, record=record, jac_cols=jac_cols, stats=stats)
     outs = pl.pallas_call(
         kernel,
         grid=(nblocks,),

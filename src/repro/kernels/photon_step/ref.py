@@ -23,14 +23,16 @@ from repro.detectors import accumulate_capture, update_capture
 def photon_steps_ref(labels_flat, media, state: ph.PhotonState,
                      shape, unitinmm, cfg: SimConfig, n_steps: int,
                      ppath=None, det_geom=None, record=False,
-                     jac_w=None, jac_col=None, jac_cols: int = 0):
+                     jac_w=None, jac_col=None, jac_cols: int = 0,
+                     stats: bool = False):
     """Returns ``(new_state, fluence_flat, exitance_flat,
     escaped_per_lane, timed_per_lane)`` — plus
     ``(ppath, det_w_flat, det_ppath)`` when detectors are configured,
     plus ``(cap_det, cap_gate)`` per-lane capture records when
     ``record`` is set, plus the ``(nvox * jac_cols,)`` replay-Jacobian
-    accumulator when ``jac_cols > 0`` (same contract as
-    ``photon_step_pallas``)."""
+    accumulator when ``jac_cols > 0``, plus the trailing ``(n, 2)``
+    telemetry counter block (segments-entered-alive, deposited weight)
+    when ``stats`` is set (same contract as ``photon_step_pallas``)."""
     if (ppath is None) != (det_geom is None):
         raise ValueError("ppath and det_geom must be given together")
     jac_cols = int(jac_cols)
@@ -58,6 +60,9 @@ def photon_steps_ref(labels_flat, media, state: ph.PhotonState,
             cur += 2
         if jac_cols:
             jac = carry[cur]
+            cur += 1
+        if stats:
+            stbl = carry[cur]
         res = ph.step(st, labels_flat, media, shape, unitinmm, cfg)
         gate = ph.time_gate_bins(res.dep_t, cfg.tmax_ns, ntg)
         flu = flu.at[res.dep_idx * ntg + gate].add(res.dep_w)
@@ -77,6 +82,10 @@ def photon_steps_ref(labels_flat, media, state: ph.PhotonState,
             jac = jac.at[res.dep_idx * jac_cols + jac_col].add(
                 jac_w * res.seg_len)
             out = out + (jac,)
+        if stats:
+            stbl = stbl + jnp.stack(
+                [st.alive.astype(jnp.float32), res.dep_w], axis=1)
+            out = out + (stbl,)
         return out
 
     init = (state, jnp.zeros((nvox * ntg,), jnp.float32),
@@ -90,4 +99,6 @@ def photon_steps_ref(labels_flat, media, state: ph.PhotonState,
                        jnp.zeros((n,), jnp.int32))
     if jac_cols:
         init = init + (jnp.zeros((nvox * jac_cols,), jnp.float32),)
+    if stats:
+        init = init + (jnp.zeros((n, 2), jnp.float32),)
     return jax.lax.fori_loop(0, n_steps, body, init)

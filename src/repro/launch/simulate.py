@@ -15,6 +15,7 @@ import jax
 import numpy as np
 
 from repro import detectors as D
+from repro import telemetry as T
 from repro.core import analysis as A
 from repro.core import loadbalance as LB
 from repro.core import simulator as S
@@ -88,6 +89,24 @@ def main(argv=None):
                          "resolved (nvox, n_det, n_time_gates) Jacobian "
                          "keyed by each record's exit gate (requires "
                          "--replay)")
+    ap.add_argument("--tmax-ns", type=float, default=None,
+                    help="time-of-flight cutoff in ns (default: the "
+                         "benchmark config's 5.0); weight still in "
+                         "flight at the cutoff is retired as timed-out")
+    ap.add_argument("--collect-stats", action="store_true",
+                    help="accumulate round-level telemetry counters "
+                         "(lane occupancy, relaunches, retired weight) "
+                         "onto SimResult.stats (DESIGN.md "
+                         "§observability); physics outputs stay "
+                         "bit-identical")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="stream structured telemetry events (spans, "
+                         "counters) as JSON lines to PATH")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the host-side span timeline as Chrome "
+                         "trace_event JSON to PATH (open in "
+                         "chrome://tracing or Perfetto; per-device "
+                         "photons/s feeds telemetry.fit_device_models)")
     args = ap.parse_args(argv)
     if args.save_detected and not args.detectors:
         ap.error("--save-detected requires --detectors")
@@ -104,6 +123,16 @@ def main(argv=None):
         cfg = dataclasses.replace(cfg, steps_per_round=args.steps_per_round)
     if args.time_gates != 1:
         cfg = dataclasses.replace(cfg, n_time_gates=args.time_gates)
+    if args.tmax_ns is not None:
+        cfg = dataclasses.replace(cfg, tmax_ns=args.tmax_ns)
+    if args.collect_stats:
+        cfg = dataclasses.replace(cfg, collect_stats=True)
+
+    sinks = []
+    if args.metrics_out:
+        sinks.append(T.JsonlSink(args.metrics_out))
+    tracer = (T.Tracer(sinks=sinks)
+              if (args.trace_out or sinks) else None)
     lanes = args.lanes
     if args.autotune:
         lanes, timings = S.autotune_lanes(vol, cfg, n_pilot=args.photons // 10,
@@ -116,29 +145,61 @@ def main(argv=None):
     if args.chunk:
         sched = ChunkScheduler(vol, cfg, n_lanes=lanes, source=source,
                                engine=args.engine, detectors=detectors,
-                               record_detected=args.save_detected)
+                               record_detected=args.save_detected,
+                               tracer=tracer)
         res, stats = sched.run(args.photons, args.chunk, seed=args.seed)
         print("per-device photons:", stats)
     elif args.devices == "all" and len(jax.devices()) > 1:
         mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        span = tracer.span("simulate", device="mesh", engine=args.engine,
+                           photons=args.photons) if tracer else None
         res = simulate_sharded(vol, cfg, args.photons, mesh,
                                n_lanes=lanes, seed=args.seed, source=source,
                                engine=args.engine, detectors=detectors,
                                record_detected=args.save_detected)
+        if span is not None:
+            jax.block_until_ready(res)
+            span.end()
     else:
+        span = tracer.span("simulate", device=jax.devices()[0],
+                           engine=args.engine,
+                           photons=args.photons) if tracer else None
         res = S.simulate(vol, cfg, args.photons, lanes, args.seed,
                          source=source, engine=args.engine,
                          detectors=detectors,
                          record_detected=args.save_detected)
+        if span is not None:
+            jax.block_until_ready(res)
+            span.end()
     jax.block_until_ready(res)
     dt = time.time() - t0
 
     bal = A.energy_balance(res)
+    fwd_pps = args.photons / dt
     print(f"{args.bench}: {args.photons} photons in {dt:.2f}s "
           f"({args.photons/dt/1e3:.2f} photons/ms)")
     print(f"energy balance: absorbed={bal['absorbed']:.1f} "
           f"escaped={bal['escaped']:.1f} timed_out={bal['timed_out']:.2e} "
           f"residue={bal['residue_frac']:.2e}")
+    timed_frac = bal["timed_out"] / max(bal["launched"], 1e-30)
+    if timed_frac > 0.01:
+        print(f"WARNING: {timed_frac:.1%} of launched weight "
+              f"({bal['timed_out']:.3f}) was retired by the "
+              f"tmax_ns={cfg.tmax_ns} time gate / max_steps cap — "
+              f"fluence and detector readings are truncated; raise "
+              f"--tmax-ns if unintended")
+    if res.stats is not None:
+        sd = res.stats.to_dict()
+        print(f"round stats: {sd['rounds']} rounds "
+              f"({sd['regen_rounds']} regenerating, "
+              f"{sd['relaunched']} relaunches), lane occupancy "
+              f"{sd['lane_occupancy']:.1%} "
+              f"({sd['live_segments']:.3g}/{sd['lane_segments']:.3g} "
+              f"lane-segments live)")
+        if tracer is not None:
+            for k, v in sd.items():
+                tracer.counter(f"round_stats.{k}", v, bench=args.bench,
+                               engine=args.engine)
     phi = A.fluence_cw(res, vol)
     print(f"fluence: max={float(np.max(np.asarray(phi))):.3e} "
           f"nonzero voxels={int(np.sum(np.asarray(phi) > 0))}")
@@ -160,16 +221,21 @@ def main(argv=None):
         from repro.replay import detected_records, replay_jacobian
 
         recs = detected_records(res)
+        overflow = int(np.asarray(res.det_rec_overflow))
         print(f"detected-photon records: {recs.shape[0]} "
-              f"(overflow: {int(np.asarray(res.det_rec_overflow))} — "
-              f"raise --save-detected if nonzero)")
+              f"(overflow: {overflow})")
+        if overflow > 0:
+            print(f"WARNING: {overflow} detector captures were dropped "
+                  f"from the id buffer (capacity {args.save_detected} per "
+                  f"simulation unit) — det_w still counts them, but "
+                  f"replay will miss them; raise --save-detected")
         if args.replay and recs.shape[0]:
             t0 = time.time()
             rep = replay_jacobian(vol, cfg, recs, detectors, source=source,
                                   seed=args.seed, n_lanes=lanes,
                                   engine=args.replay_engine,
                                   gate_resolved=args.replay_gate_resolved,
-                                  mesh=mesh)
+                                  mesh=mesh, tracer=tracer)
             dt = time.time() - t0
             ok = int((rep.replayed_det == rep.det).sum())
             sharded = f" over {mesh.size} devices" if mesh is not None else ""
@@ -188,6 +254,15 @@ def main(argv=None):
                 per_gate = jac.sum(axis=(0, 1, 2, 3))
                 print(f"  gate-resolved: {jac.shape[-1]} gates, "
                       f"peak gate {int(per_gate.argmax())}")
+    if tracer is not None:
+        tracer.counter("photons_per_s", fwd_pps,
+                       bench=args.bench, engine=args.engine)
+        if args.trace_out:
+            path = tracer.save_chrome_trace(args.trace_out)
+            print(f"trace timeline: {path} "
+                  f"({len(tracer.events)} spans; open in chrome://tracing)")
+        for sink in sinks:
+            sink.close()
     return res
 
 

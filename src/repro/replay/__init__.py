@@ -277,7 +277,8 @@ def replay_jacobian(volume: Volume, cfg: SimConfig, records,
                     n_lanes: int = 4096, engine: str = "jnp",
                     gate_resolved: bool = False, block_lanes: int = 256,
                     interpret: bool | None = None, mesh=None,
-                    axis_names: tuple[str, ...] = ("data",)) -> ReplayResult:
+                    axis_names: tuple[str, ...] = ("data",),
+                    tracer=None) -> ReplayResult:
     """Replay detected-photon records into per-detector absorption
     Jacobian volumes (DESIGN.md §replay).
 
@@ -301,7 +302,10 @@ def replay_jacobian(volume: Volume, cfg: SimConfig, records,
 
     Records are replayed in fixed-size lane batches through one jitted
     two-pass transport; the Jacobian is accumulated on the host in
-    float64.
+    float64.  ``tracer`` (a ``repro.telemetry.Tracer``) records one span
+    per batch — blocked on inside the span, tagged with the record count
+    so records/s throughput lands on the trace timeline (DESIGN.md
+    §observability).
     """
     if isinstance(records, SimResult):
         records = detected_records(records)
@@ -370,10 +374,18 @@ def replay_jacobian(volume: Volume, cfg: SimConfig, records,
     w_exit = np.zeros((n_rec,), np.float32)
     gate = np.full((n_rec,), -1, np.int32)
     rdet = np.full((n_rec,), -1, np.int32)
+    trace_dev = "mesh" if mesh is not None else jax.devices()[0]
     for start in range(0, n_rec, batch_lanes):
         nb, id_lo, id_hi, col, active = _batch_arrays(
             records, start, batch_lanes, gate_resolved, ntg)
+        span = None
+        if tracer is not None:
+            span = tracer.span("replay_batch", device=trace_dev,
+                               engine=engine, records=nb, batch_start=start)
         jac_b, w_b, g_b, rd_b = run_batch(id_lo, id_hi, col, active)
+        if span is not None:
+            jax.block_until_ready(jac_b)
+            span.end()
         jac += np.asarray(jac_b, np.float64)
         w_exit[start: start + nb] = np.asarray(w_b)[:nb]
         gate[start: start + nb] = np.asarray(g_b)[:nb]

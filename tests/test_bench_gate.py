@@ -134,3 +134,27 @@ def test_machine_mismatch_notes_but_still_compares():
     failures, notes = check_file("BENCH_x.json", base, fresh, 0.30, 0.10)
     assert len(failures) == 1  # compared despite the machine change
     assert any("machine" in n for n in notes)
+
+
+def test_schema_version_mismatch_fails_loudly():
+    """A layout change must surface as a gate FAILURE demanding a
+    baseline refresh — never as a silent skip or a one-sided-key
+    ignore."""
+    base = copy.deepcopy(BASE)
+    base["meta"]["schema_version"] = 2
+    fresh = copy.deepcopy(base)
+    fresh["meta"]["schema_version"] = 3
+    # make the workload mismatch too: version must win over the skip
+    fresh["meta"]["quick"] = False
+    failures, _ = check_file("BENCH_x.json", base, fresh, 0.30, 0.10)
+    assert len(failures) == 1
+    assert "schema_version mismatch" in failures[0]
+    assert "refresh" in failures[0]
+    # a baseline written before versioning vs a versioned fresh file is
+    # itself a version mismatch (None vs 2)
+    failures, _ = check_file("BENCH_x.json", BASE, fresh, 0.30, 0.10)
+    assert len(failures) == 1 and "schema_version mismatch" in failures[0]
+    # matching versions compare as before
+    fresh = copy.deepcopy(base)
+    failures, _ = check_file("BENCH_x.json", base, fresh, 0.30, 0.10)
+    assert failures == []

@@ -308,3 +308,31 @@ np.testing.assert_allclose(M, np.asarray(res.det_ppath, np.float64),
 print("OK")
 """)
     assert "OK" in out
+
+
+def test_sharded_collect_stats_bit_identity_and_psum():
+    """collect_stats under shard_map: the RoundStats pytree psums across
+    shards without touching any physics bit, and the merged counters
+    keep exact photon accounting (DESIGN.md §observability)."""
+    out = _run(_PRELUDE + """
+import dataclasses
+mesh = jax.make_mesh((8,), ("data",))
+off = simulate_sharded(vol, cfg, 6000, mesh, n_lanes=256, seed=5)
+cfg_on = dataclasses.replace(cfg, collect_stats=True)
+on = simulate_sharded(vol, cfg_on, 6000, mesh, n_lanes=256, seed=5)
+assert off.stats is None and on.stats is not None
+assert np.array_equal(np.asarray(off.energy), np.asarray(on.energy))
+assert np.array_equal(np.asarray(off.exitance), np.asarray(on.exitance))
+assert float(off.escaped_w) == float(on.escaped_w)
+assert int(off.n_launched) == int(on.n_launched)
+st = on.stats
+assert int(st.relaunched) == int(on.n_launched) == 6000
+assert float(st.escaped_w) == float(on.escaped_w)
+occ = st.lane_occupancy()
+assert 0.0 < occ <= 1.0, occ
+bal = A.energy_balance(on)
+rel = abs(float(st.deposited_w) - bal["absorbed"]) / max(bal["absorbed"], 1e-9)
+assert rel < 1e-5, rel
+print("OK", occ)
+""")
+    assert "OK" in out

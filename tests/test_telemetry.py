@@ -1,0 +1,324 @@
+"""Simulation telemetry (DESIGN.md §observability).
+
+Contracts under test:
+
+  * ``collect_stats=True`` changes NO physics bit: energy, exitance,
+    escaped_w, timed_out_w, n_launched, launched_w and steps are
+    bit-identical to the stats-off run — for both round executors and
+    for K in {1, 4}.
+  * ``SimResult.stats`` reconciles with the energy-balance identity:
+    relaunched == n_launched, escaped_w / timed_out_w are bit-equal to
+    the SimResult fields, deposited_w matches sum(energy) to fp
+    accumulation order, detected_w matches sum(det_w), and
+    lane_segments == steps * n_lanes.
+  * The Tracer's span timeline round-trips through Chrome trace JSON
+    and feeds ``loadbalance.fit_pilot`` as measured-throughput samples
+    (the dispatch -> measure -> refit -> re-partition loop).
+  * The CLI surfaces the silent-loss warnings (timed-out weight,
+    detector id-buffer overflow) and writes trace/metrics files that
+    parse back into device models.
+"""
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import analysis as A
+from repro.core import loadbalance as LB
+from repro.core import simulator as S
+from repro.core import volume as V
+from repro.core.multidevice import ChunkScheduler, ElasticSimulator
+from repro.detectors import Detector
+from repro.launch import simulate as CLI
+from repro.telemetry import (InMemorySink, JsonlSink, RoundStats, SpanEvent,
+                             Tracer, chrome_trace, device_label,
+                             fit_device_models, load_chrome_trace)
+
+SHAPE = (16, 16, 16)
+N_PHOTONS = 2000
+LANES = 256
+SEED = 9
+
+
+def _bench(reflect=False):
+    vol = V.benchmark_b2(SHAPE) if reflect else V.benchmark_b1(SHAPE)
+    return vol, V.SimConfig(do_reflect=reflect)
+
+
+def _run(vol, cfg, engine="jnp", **kw):
+    return S.simulate(vol, cfg, N_PHOTONS, LANES, SEED, engine=engine, **kw)
+
+
+# ---------------------------------------------------------------------------
+# RoundStats: bit-identical physics + counter reconciliation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["jnp", "pallas"])
+@pytest.mark.parametrize("k", [1, 4])
+def test_collect_stats_changes_no_physics_bit(engine, k):
+    vol, cfg = _bench()
+    cfg = dataclasses.replace(cfg, steps_per_round=k)
+    off = _run(vol, cfg, engine)
+    on = _run(vol, dataclasses.replace(cfg, collect_stats=True), engine)
+    assert off.stats is None and on.stats is not None
+    np.testing.assert_array_equal(np.asarray(off.energy),
+                                  np.asarray(on.energy))
+    np.testing.assert_array_equal(np.asarray(off.exitance),
+                                  np.asarray(on.exitance))
+    for field in ("escaped_w", "timed_out_w", "launched_w"):
+        assert float(getattr(off, field)) == float(getattr(on, field)), field
+    assert int(off.n_launched) == int(on.n_launched)
+    assert int(off.steps) == int(on.steps)
+
+
+@pytest.mark.parametrize("engine", ["jnp", "pallas"])
+def test_round_stats_reconcile_with_energy_balance(engine):
+    vol, cfg = _bench()
+    cfg = dataclasses.replace(cfg, steps_per_round=4, collect_stats=True)
+    res = _run(vol, cfg, engine)
+    st = res.stats
+    bal = A.energy_balance(res)
+    # exact photon accounting: every launch goes through regeneration
+    assert int(st.relaunched) == int(res.n_launched) == N_PHOTONS
+    assert int(st.rounds) == int(res.steps) // 4
+    assert 0 < int(st.regen_rounds) <= int(st.rounds)
+    # retired-weight counters mirror the physics accumulators bit-exactly
+    assert float(st.escaped_w) == float(res.escaped_w) == bal["escaped"]
+    assert float(st.timed_out_w) == float(res.timed_out_w)
+    # deposited weight re-sums the same per-segment deposits the energy
+    # grid scatters, so it agrees to fp accumulation order
+    np.testing.assert_allclose(float(st.deposited_w), bal["absorbed"],
+                               rtol=1e-5)
+    # the counters close the balance like the grids do, up to the
+    # statistical Russian-roulette residue
+    total = (float(st.deposited_w) + float(st.escaped_w)
+             + float(st.timed_out_w))
+    np.testing.assert_allclose(total, bal["launched"], rtol=5e-4)
+    # occupancy bookkeeping: denominator is exactly steps * n_lanes
+    assert float(st.lane_segments) == float(int(res.steps) * LANES)
+    assert 0.0 < st.lane_occupancy() <= 1.0
+
+
+def test_round_stats_engine_and_k_invariant_live_segments():
+    """live_segments counts id-keyed trajectory segments, so it is
+    invariant across engines and K (trajectories are identical)."""
+    vol, cfg0 = _bench()
+    vals = set()
+    for engine in ("jnp", "pallas"):
+        for k in (1, 4):
+            cfg = dataclasses.replace(cfg0, steps_per_round=k,
+                                      collect_stats=True)
+            vals.add(float(_run(vol, cfg, engine).stats.live_segments))
+    assert len(vals) == 1, vals
+
+
+def test_round_stats_detected_w_reconciles():
+    vol, cfg = _bench()
+    cfg = dataclasses.replace(cfg, collect_stats=True)
+    dets = (Detector(SHAPE[0] / 2.0, SHAPE[1] / 2.0, SHAPE[0] / 2.0),)
+    res = _run(vol, cfg, detectors=dets)
+    assert float(np.asarray(res.det_w).sum()) > 0
+    np.testing.assert_allclose(float(res.stats.detected_w),
+                               float(np.asarray(res.det_w).sum()), rtol=1e-5)
+
+
+def test_round_stats_host_merge_helpers():
+    a = RoundStats.zeros()
+    assert a.lane_occupancy() == 0.0
+    b = RoundStats.from_vector([2, 1, 100, 50.0, 200.0, 1.5, 2.5, 0.5, 0.25])
+    m = a.add(b).add(b)
+    assert int(m.rounds) == 4 and int(m.relaunched) == 200
+    assert float(m.live_segments) == 100.0
+    assert m.lane_occupancy() == pytest.approx(0.25)
+    d = m.to_dict()
+    assert isinstance(d["rounds"], int)
+    assert d["lane_occupancy"] == pytest.approx(0.25)
+    # round-trips through the checkpoint vector form
+    rt = RoundStats.from_vector([float(v) for v in m])
+    assert rt == m
+
+
+# ---------------------------------------------------------------------------
+# Tracer, sinks, Chrome trace round-trip, device-model fitting
+# ---------------------------------------------------------------------------
+
+def test_tracer_spans_and_sinks(tmp_path):
+    mem = InMemorySink()
+    jsonl = JsonlSink(tmp_path / "m.jsonl")
+    tr = Tracer(sinks=[mem, jsonl])
+    with tr.span("chunk", device="cpu:0", engine="jnp", photons=100):
+        pass
+    sp = tr.span("chunk", device="cpu:1", engine="jnp", photons=50)
+    sp.end(overflow=3)
+    tr.counter("photons_per_s", 123.0, bench="B1")
+    jsonl.close()
+    assert len(tr.events) == 2
+    assert tr.events[1].args["overflow"] == 3
+    assert [e["type"] for e in mem.events] == ["span", "span", "counter"]
+    lines = [json.loads(line)
+             for line in (tmp_path / "m.jsonl").read_text().splitlines()]
+    assert len(lines) == 3 and lines[2]["value"] == 123.0
+    # throughput is derived from the photons arg and the measured span
+    assert tr.events[0].photons_per_s > 0
+
+
+def test_chrome_trace_round_trip(tmp_path):
+    events = [
+        SpanEvent("chunk", "cpu:0", t0=1.0, dur=0.5, engine="jnp",
+                  args={"photons": 1000}),
+        SpanEvent("chunk", "cpu:1", t0=1.2, dur=0.25, engine="jnp",
+                  args={"photons": 500}),
+    ]
+    obj = chrome_trace(events)
+    # one viewer thread per device, named via metadata rows
+    names = {r["args"]["name"] for r in obj["traceEvents"]
+             if r.get("ph") == "M" and r["name"] == "thread_name"}
+    assert names == {"cpu:0", "cpu:1"}
+    path = tmp_path / "trace.json"
+    path.write_text(json.dumps(obj))
+    back = load_chrome_trace(path)
+    assert {(e.name, e.device, e.engine) for e in back} == \
+        {("chunk", "cpu:0", "jnp"), ("chunk", "cpu:1", "jnp")}
+    by_dev = {e.device: e for e in back}
+    assert by_dev["cpu:0"].args["photons"] == 1000
+    assert by_dev["cpu:0"].dur == pytest.approx(0.5, rel=1e-6)
+
+
+def test_fit_device_models_pilot_and_throughput_fallback():
+    # two distinct chunk sizes -> the full T = a*n + T0 pilot fit
+    ev = [SpanEvent("chunk", "tpu:0", 0.0, 0.1 + 1e-4 * n,
+                    args={"photons": n}) for n in (1000, 4000, 8000)]
+    # equal chunk sizes -> aggregate-throughput fallback (t0 = 0)
+    ev += [SpanEvent("chunk", "tpu:1", 0.0, 0.5, args={"photons": 1000}),
+           SpanEvent("chunk", "tpu:1", 1.0, 0.5, args={"photons": 1000})]
+    models = fit_device_models(ev, name="chunk")
+    assert set(models) == {"tpu:0", "tpu:1"}
+    assert models["tpu:0"].a == pytest.approx(1e-4, rel=1e-3)
+    assert models["tpu:0"].t0 == pytest.approx(0.1, rel=1e-3)
+    assert models["tpu:1"].t0 == 0.0
+    assert models["tpu:1"].a == pytest.approx(1.0 / 1000 * 0.5 * 2 / 2)
+    # the fits plug straight into the paper's partitioners
+    part = LB.partition_s2(10_000, list(models.values()))
+    assert sum(part) == 10_000 and all(p >= 0 for p in part)
+
+
+def test_device_label():
+    assert device_label(None) == "host"
+    assert device_label("mesh") == "mesh"
+    d = jax.devices()[0]
+    assert device_label(d) == f"{d.platform}:{d.id}"
+
+
+# ---------------------------------------------------------------------------
+# Schedulers: chunk spans + merged stats
+# ---------------------------------------------------------------------------
+
+def test_chunk_scheduler_trace_and_stats_merge():
+    vol, cfg = _bench()
+    cfg = dataclasses.replace(cfg, collect_stats=True)
+    tr = Tracer(sinks=[InMemorySink()])
+    sched = ChunkScheduler(vol, cfg, n_lanes=LANES, tracer=tr)
+    res, per_dev = sched.run(N_PHOTONS, chunk_size=500, seed=SEED)
+    spans = [e for e in tr.events if e.name == "chunk"]
+    assert len(spans) == 4
+    assert {e.device for e in spans} <= \
+        {device_label(d) for d in jax.devices()}
+    assert sum(e.args["photons"] for e in spans) == N_PHOTONS
+    # merged counters keep exact photon accounting across chunks
+    assert int(res.stats.relaunched) == int(res.n_launched) == N_PHOTONS
+    # chunked run matches the single-shot physics (id-keyed photons)
+    ref = _run(vol, dataclasses.replace(cfg, collect_stats=False))
+    np.testing.assert_allclose(np.asarray(res.energy), np.asarray(ref.energy),
+                               rtol=5e-5, atol=1e-5)
+    # ...and its spans fit device models the partitioners accept
+    models = fit_device_models(tr.events, name="chunk")
+    assert models
+    part = LB.partition_s2(N_PHOTONS, list(models.values()))
+    assert sum(part) == N_PHOTONS
+
+
+def test_elastic_simulator_stats_checkpoint_roundtrip():
+    vol, cfg = _bench()
+    cfg = dataclasses.replace(cfg, collect_stats=True)
+    tr = Tracer()
+    sim = ElasticSimulator(vol, cfg, N_PHOTONS, chunk_size=500,
+                           n_lanes=LANES, seed=SEED, tracer=tr)
+    sim.run_round()
+    state = sim.state_dict()
+    assert "stats" in state
+    res = sim.run_to_completion()
+    assert int(res.stats.relaunched) == N_PHOTONS
+    assert len([e for e in tr.events if e.name == "chunk"]) == 4
+    # restart from the checkpoint: stats resume mid-campaign
+    sim2 = ElasticSimulator(vol, cfg, N_PHOTONS, chunk_size=500,
+                            n_lanes=LANES, seed=SEED)
+    sim2.load_state_dict(state)
+    res2 = sim2.run_to_completion()
+    assert int(res2.stats.relaunched) == N_PHOTONS
+    np.testing.assert_array_equal(np.asarray(res.energy),
+                                  np.asarray(res2.energy))
+    for a, b in zip(res.stats, res2.stats):
+        assert float(a) == float(b)
+
+
+# ---------------------------------------------------------------------------
+# CLI: loss warnings + trace/metrics files (the end-to-end loop)
+# ---------------------------------------------------------------------------
+
+_CLI_BASE = ["--bench", "B1", "--size", "16", "--photons", "800",
+             "--lanes", "128", "--seed", "3"]
+
+
+def test_cli_warns_on_timed_out_weight(capsys):
+    CLI.main(_CLI_BASE + ["--tmax-ns", "0.02"])
+    out = capsys.readouterr().out
+    assert "WARNING" in out and "tmax" in out
+    assert "retired" in out
+
+
+def test_cli_no_timeout_warning_by_default(capsys):
+    CLI.main(_CLI_BASE)
+    out = capsys.readouterr().out
+    assert "WARNING" not in out
+
+
+def test_cli_warns_on_detector_record_overflow(capsys):
+    # B2 (mismatched boundary, reflection on) backscatters enough weight
+    # into the z=0 disk to overrun a tiny id buffer
+    det = json.dumps([{"x": 8, "y": 8, "radius": 8}])
+    CLI.main(["--bench", "B2", "--size", "16", "--photons", "800",
+              "--lanes", "128", "--seed", "3",
+              "--detectors", det, "--save-detected", "8"])
+    out = capsys.readouterr().out
+    assert "WARNING" in out and "overflow" in out
+    assert "raise --save-detected" in out
+
+
+def test_cli_trace_metrics_feed_load_balancer(tmp_path, capsys):
+    """The acceptance loop: a chunked CLI run's --trace-out spans
+    round-trip into loadbalance device models."""
+    trace = tmp_path / "trace.json"
+    metrics = tmp_path / "metrics.jsonl"
+    CLI.main(_CLI_BASE + ["--chunk", "200", "--collect-stats",
+                          "--trace-out", str(trace),
+                          "--metrics-out", str(metrics)])
+    out = capsys.readouterr().out
+    assert "round stats:" in out and "lane occupancy" in out
+    events = load_chrome_trace(trace)
+    spans = [e for e in events if e.name == "chunk"]
+    assert len(spans) == 4
+    for d in jax.devices():
+        assert any(e.device == device_label(d) for e in spans)
+    models = fit_device_models(events, name="chunk")
+    assert models
+    part = LB.partition_s2(4000, list(models.values()))
+    assert sum(part) == 4000
+    recs = [json.loads(line)
+            for line in metrics.read_text().splitlines()]
+    assert any(r["type"] == "span" for r in recs)
+    names = {r["name"] for r in recs if r["type"] == "counter"}
+    assert "photons_per_s" in names
+    assert "round_stats.lane_occupancy" in names
