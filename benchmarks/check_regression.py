@@ -1,8 +1,8 @@
 """Perf-regression gate over the BENCH_*.json trajectories.
 
 Compares freshly produced benchmark JSONs (``benchmarks/fused.py``,
-``benchmarks/timegates.py``, ``benchmarks/replay.py``) against the
-committed baselines and **fails** (exit code 1) when
+``benchmarks/timegates.py``, ``benchmarks/replay.py``,
+``benchmarks/resilience.py``) against the committed baselines and **fails** (exit code 1) when
 
   * any throughput leaf (a key named ``photons_per_s*`` or
     ``records_per_s*``, at any nesting depth) drops by more than
@@ -39,7 +39,7 @@ import sys
 from pathlib import Path
 
 BENCH_FILES = ("BENCH_fused.json", "BENCH_timegates.json",
-               "BENCH_replay.json")
+               "BENCH_replay.json", "BENCH_resilience.json")
 THROUGHPUT_MARKERS = ("photons_per_s", "records_per_s")
 OVERHEAD_SUFFIX = "_overhead_frac"
 # meta keys that define the workload: a mismatch means the two files

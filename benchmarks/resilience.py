@@ -1,0 +1,192 @@
+"""Resilient-pool overhead benchmark (DESIGN.md §resilience).
+
+The PR-7 `DevicePool` adds a robustness layer to chunked execution —
+host-side harvest + `validate_chunk` merge guards, chunk-id-order
+frontier merging, retry/deadline bookkeeping.  The acceptance bar is
+that all of it costs **< 10% wall time when nothing fails**: this
+benchmark times the same fault-free chunked workload through
+
+  * a faithful replica of the pre-PR greedy async scheduler (dispatch
+    to every device, merge in completion order, no validation) — the
+    committed baseline the gate compares against, kept here so the
+    pre-PR loop stays measurable after `ChunkScheduler` moved onto the
+    pool; and
+  * the resilient `ChunkScheduler`/`DevicePool` path with validation
+    on (the default),
+
+and writes ``BENCH_resilience.json`` at the repo root with
+``resilience.pool_overhead_frac`` = (t_pool - t_baseline)/t_baseline —
+gated by ``check_regression.py`` like every other ``_overhead_frac``
+key (limit +0.10 points), alongside the gated throughput keys.  A
+seeded chaos row (faults + NaN corruption + delays) is recorded for
+trend-watching but not gated: its wall time is dominated by the
+injected delays, not scheduler work.
+
+  PYTHONPATH=src python -m benchmarks.resilience [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.common import SCHEMA_VERSION
+from repro.core import volume as V
+from repro.core.multidevice import ChunkScheduler
+from repro.core.rng import split_id64
+from repro.core.simulator import build_sim_fn
+from repro.resilience import FaultInjector, RetryPolicy
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _make_baseline(vol, cfg, lanes):
+    """The pre-PR-7 ChunkScheduler loop: greedy async dispatch, merge in
+    completion order, chunks lost on error, no validation/deadlines.
+    Returns a ``run_once(n_photons, chunk_size, seed)`` closure with the
+    executor compiled once, like the real scheduler's per-source cache.
+    """
+    fn = jax.jit(build_sim_fn(vol.shape, vol.unitinmm, cfg, lanes,
+                              "dynamic", None, "jnp"))
+    devices = jax.devices()
+    labels = vol.labels.reshape(-1)
+
+    def run_once(n_photons, chunk_size, seed):
+        chunks = [(s, min(chunk_size, n_photons - s))
+                  for s in range(0, n_photons, chunk_size)]
+        queue = list(reversed(chunks))
+        inflight = {}
+
+        def dispatch(dev):
+            start, count = queue.pop()
+            lo, hi = split_id64(start)
+            inflight[dev] = (count, fn(jax.device_put(labels, dev),
+                                       jax.device_put(vol.media, dev),
+                                       count, seed, lo, hi))
+
+        energy = None
+        n_launched = 0
+        for dev in devices:
+            if queue:
+                dispatch(dev)
+        while inflight:
+            progressed = False
+            for dev in list(inflight):
+                count, res = inflight[dev]
+                if res.energy.is_ready():
+                    del inflight[dev]
+                    e = np.asarray(res.energy)
+                    energy = e if energy is None else energy + e
+                    n_launched += int(res.n_launched)
+                    progressed = True
+                    if queue:
+                        dispatch(dev)
+            if not progressed:
+                time.sleep(0.001)
+        assert n_launched == n_photons
+        return energy
+
+    return run_once
+
+
+def run(quick=False,
+        out_path: Path | str = REPO_ROOT / "BENCH_resilience.json"):
+    size = 20 if quick else 40
+    vol = V.benchmark_b1((size, size, size))
+    cfg = V.SimConfig(do_reflect=False, steps_per_round=4)
+    n_photons, chunk, lanes = ((6_000, 750, 512) if quick
+                               else (40_000, 5_000, 2048))
+    seed = 11
+    # the overhead fraction is a ratio of two short wall times and feeds
+    # the CI regression gate — interleaved pairs + median, like
+    # benchmarks/replay.py, so one contended sample can't swing it
+    repeats = 5 if quick else 3
+
+    sched = ChunkScheduler(vol, cfg, n_lanes=lanes)  # validate=True default
+    baseline = _make_baseline(vol, cfg, lanes)
+
+    # warm both paths (compile + device_put caches)
+    baseline(n_photons, chunk, seed)
+    sched.run(n_photons, chunk, seed=seed)
+
+    best = [float("inf"), float("inf")]
+    fracs = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        baseline(n_photons, chunk, seed)
+        t_base = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        sched.run(n_photons, chunk, seed=seed)
+        t_pool = time.perf_counter() - t0
+        best[0] = min(best[0], t_base)
+        best[1] = min(best[1], t_pool)
+        fracs.append((t_pool - t_base) / t_base)
+    t_base, t_pool = best
+    overhead = float(np.median(fracs))
+
+    # chaos trend row (not gated): seeded faults over the same workload
+    injector = FaultInjector(seed=5, p_fail=0.15, p_nan=0.1, p_delay=0.15,
+                             delay_s=0.02)
+    chaos_sched = ChunkScheduler(vol, cfg, n_lanes=lanes,
+                                 fault_injector=injector,
+                                 retry_policy=RetryPolicy(max_attempts=10))
+    t0 = time.perf_counter()
+    chaos_sched.run(n_photons, chunk, seed=seed)
+    t_chaos = time.perf_counter() - t0
+    chaos = chaos_sched.last_report.counters()
+
+    results = {
+        "meta": {
+            "schema_version": SCHEMA_VERSION,
+            "bench": "B1",
+            "size": size,
+            "quick": quick,
+            "steps_per_round": cfg.steps_per_round,
+            "n_photons": n_photons,
+            "chunk_size": chunk,
+            "lanes": lanes,
+            "devices": len(jax.devices()),
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "machine": platform.machine(),
+        },
+        "resilience": {
+            "photons_per_s_baseline": n_photons / t_base,
+            "photons_per_s": n_photons / t_pool,
+            "pool_overhead_frac": overhead,
+        },
+        "chaos": {
+            # wall time here is injected-delay-dominated: trend only
+            "wall_s_cold": t_chaos,
+            **{k: v for k, v in chaos.items()
+               if k in ("retries", "speculative", "validation_failures",
+                        "dispatch_failures", "injected_faults",
+                        "quarantine_events")},
+        },
+    }
+    print(f"baseline scheduler : {n_photons/t_base/1e3:8.2f} photons/ms "
+          f"({t_base:.3f}s)")
+    print(f"resilient pool     : {n_photons/t_pool/1e3:8.2f} photons/ms "
+          f"({t_pool:.3f}s)  fault-free overhead "
+          f"{100*overhead:+.1f}%")
+    print(f"chaos drill        : {t_chaos:.3f}s with {chaos['retries']} "
+          f"retries, {chaos['validation_failures']} rejected merges, "
+          f"{chaos['injected_faults']} injected faults", flush=True)
+
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_path}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick)

@@ -20,7 +20,7 @@ def main():
 
     from benchmarks import (fig2_optimizations, fig3a_workgroup,
                             fig3b_devicelb, fig3c_scaling, fused, replay,
-                            roofline, sources, timegates)
+                            resilience, roofline, sources, timegates)
 
     t0 = time.time()
     results = {}
@@ -63,6 +63,11 @@ def main():
     print("Replay — detected-photon recording overhead + Jacobian replay")
     print("=" * 70, flush=True)
     results["replay"] = replay.run(quick=quick)
+
+    print("=" * 70)
+    print("Resilience — fault-free DevicePool overhead vs pre-PR scheduler")
+    print("=" * 70, flush=True)
+    results["resilience"] = resilience.run(quick=quick)
 
     print("=" * 70)
     print("Roofline — per (arch x shape x mesh) from the dry-run")

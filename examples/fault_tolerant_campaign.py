@@ -1,10 +1,15 @@
-"""Fault-tolerant photon campaign: checkpoints, failure, elastic restart.
+"""Fault-tolerant photon campaign: chaos, checkpoints, crash, restart.
 
-Simulates the large-run lifecycle: an ElasticSimulator campaign
-checkpoints between rounds, a device "dies" mid-round (its chunk is
-requeued), the process "crashes", and a fresh process resumes from the
-checkpoint — producing the exact same fluence as an uninterrupted run
-(counter-based RNG keys photons by global id).
+Simulates the large-run lifecycle end to end (DESIGN.md §resilience):
+
+  1. a resilient DevicePool run under a *seeded* chaos schedule —
+     injected dispatch failures, NaN-corrupted results (rejected by the
+     merge guard) and delays — is bit-identical to the fault-free run;
+  2. an ElasticSimulator campaign auto-checkpoints every merged chunk,
+     the host "crashes" (FaultInjector.kill_after_merges), and a fresh
+     process restores from the atomic keep-k Checkpointer and finishes
+     — again bit-identical to an uninterrupted run (counter-based RNG
+     keys photons by global id, so every replay is exact).
 
   PYTHONPATH=src python examples/fault_tolerant_campaign.py
 """
@@ -13,38 +18,51 @@ import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.core import analysis as A
-from repro.core import simulator as S
 from repro.core import volume as V
-from repro.core.multidevice import ElasticSimulator
+from repro.core.multidevice import ChunkScheduler, ElasticSimulator
+from repro.resilience import FaultInjector, InjectedCrash, RetryPolicy
 
 vol = V.benchmark_b2((30, 30, 30))
 cfg = V.b2_config()
 N, CHUNK = 20_000, 2_000
 
-# ---- uninterrupted reference ----
-ref = S.simulate(vol, cfg, N, 1024, seed=5)
+# ---- 1. chaos drill: faults change no output bit ----
+clean = ChunkScheduler(vol, cfg, n_lanes=1024)
+ref, _ = clean.run(N, CHUNK, seed=5)
 
-# ---- campaign with a failure + crash + restart ----
+chaos = ChunkScheduler(
+    vol, cfg, n_lanes=1024,
+    fault_injector=FaultInjector(seed=3, p_fail=0.25, p_nan=0.15,
+                                 p_delay=0.2, delay_s=0.02),
+    retry_policy=RetryPolicy(max_attempts=10))
+res, _ = chaos.run(N, CHUNK, seed=5, deadline_s=600)
+rep = chaos.last_report
+print(f"chaos drill: {rep.merged}/{rep.n_chunks} chunks merged with "
+      f"{rep.retries} retries ({rep.validation_failures} rejected merges, "
+      f"{rep.dispatch_failures} failed dispatches)")
+assert np.array_equal(np.asarray(res.energy), np.asarray(ref.energy))
+print("OK: bit-identical to the fault-free run under injected faults\n")
+
+# ---- 2. crash mid-campaign + restart from auto-checkpoint ----
 ck = Checkpointer("/tmp/repro_campaign", keep=2)
-sim = ElasticSimulator(vol, cfg, N, CHUNK, n_lanes=1024, seed=5)
+sim = ElasticSimulator(vol, cfg, N, CHUNK, n_lanes=1024, seed=5,
+                       fault_injector=FaultInjector(kill_after_merges=4),
+                       checkpointer=ck, checkpoint_every=1)
+try:
+    sim.run_to_completion()
+except InjectedCrash as e:
+    print(f"host crash: {e}")
+print(f"newest checkpoint: step {ck.latest_step()} "
+      f"({ck.manifest()['extra']})")
 
-killed = [True]
-sim.run_round(fail=lambda ch, dev: ch.start_id == 2 * CHUNK and killed
-              and (killed.pop(), True)[1])
-print(f"round 1: {len(sim.completed)} chunks done, "
-      f"{len(sim.pending)} pending (1 failed + requeued)")
-ck.save(1, sim.state_dict())
-print("checkpoint saved; simulating process crash...")
-
-# ---- new process: restore and finish ----
+# ---- new process: restore and finish (no injector this time) ----
 sim2 = ElasticSimulator(vol, cfg, N, CHUNK, n_lanes=1024, seed=5)
 _, state = ck.restore(sim2.state_dict())
 sim2.load_state_dict(state)
-res = sim2.run_to_completion()
+print(f"restored: {len(sim2.completed)} chunks done, "
+      f"{len(sim2.pending)} to go")
+res2 = sim2.run_to_completion()
 
-diff = np.abs(np.asarray(res.energy) - np.asarray(ref.energy)).max()
-rel = diff / np.asarray(ref.energy).max()
-print(f"resumed campaign: {A.energy_balance(res)}")
-print(f"max voxel energy diff vs uninterrupted run: {rel:.2e} (fp-order only)")
-assert rel < 1e-3
-print("OK: failure + restart reproduced the uninterrupted result")
+print(f"resumed campaign: {A.energy_balance(res2)}")
+assert np.array_equal(np.asarray(res2.energy), np.asarray(ref.energy))
+print("OK: crash + restart reproduced the uninterrupted result bit-exactly")

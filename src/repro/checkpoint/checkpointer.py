@@ -89,6 +89,17 @@ class Checkpointer:
         s = self.steps()
         return s[-1] if s else None
 
+    def manifest(self, step: int | None = None) -> dict:
+        """Read one checkpoint's manifest (``step``/``keys``/``extra``)
+        without loading the arrays — the resilience layer stamps its
+        merge counters into ``extra`` so a restarting campaign (or an
+        operator) can inspect progress cheaply."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        with open(self._path(step) + ".manifest.json") as f:
+            return json.load(f)
+
     def restore(self, template: PyTree, step: int | None = None
                 ) -> tuple[int, PyTree]:
         step = step if step is not None else self.latest_step()

@@ -101,6 +101,34 @@ def fit_pilot(ns: Sequence[float], times: Sequence[float], name: str = "dev",
     return DeviceModel(name=name, a=a, t0=max(float(t0), 0.0), cores=cores)
 
 
+def model_from_samples(samples: Sequence[tuple[float, float]],
+                       name: str = "dev", cores: int = 1) -> DeviceModel | None:
+    """Fit a DeviceModel from runtime ``(photons, seconds)`` samples.
+
+    The shared fitting rule for measured-throughput feedback (telemetry
+    ``fit_device_models``, the resilience pool's per-worker deadline
+    models): samples spanning >= 2 distinct photon counts get the
+    paper's full ``T = a*n + T0`` fit; equal-size samples (the common
+    fixed chunk-size case) fall back to the aggregate-throughput model
+    ``a = sum(T)/sum(n), t0 = 0``.  A degenerate fit (timing noise
+    producing a non-positive slope) falls back the same way rather than
+    raising — live feedback must tolerate noisy early samples.  Returns
+    None when the samples carry no usable signal (no positive photon
+    count or elapsed time).
+    """
+    ns = [float(n) for n, _ in samples]
+    ts = [float(t) for _, t in samples]
+    if len(set(ns)) >= 2:
+        try:
+            return fit_pilot(ns, ts, name=name, cores=cores)
+        except ValueError:
+            pass  # noisy fit: fall through to aggregate throughput
+    total_n, total_t = sum(ns), sum(ts)
+    if total_n <= 0 or total_t <= 0:
+        return None
+    return DeviceModel(name=name, a=total_t / total_n, t0=0.0, cores=cores)
+
+
 def run_pilot(run_fn: Callable[[int], float], n1: int, n2: int,
               name: str = "dev", cores: int = 1) -> DeviceModel:
     """Fit a model by timing ``run_fn`` (returns wall seconds) at n1, n2."""

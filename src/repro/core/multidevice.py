@@ -37,8 +37,12 @@ from repro.core.rng import split_id64
 from repro.core.simulator import SimResult, build_sim_fn
 from repro.core.volume import SimConfig, Source, Volume
 from repro.detectors import as_detectors
+from repro.resilience import (DevicePool, DeviceSpec, FaultInjector,
+                              InjectedFault, RetryPolicy, corrupt_harvest,
+                              harvest_result, validate_chunk)
 from repro.sources import PhotonSource, as_source
 from repro.telemetry.stats import RoundStats
+from repro.telemetry.trace import device_label
 
 # jax >= 0.6 exposes shard_map at the top level (vma type check); older
 # releases keep it in jax.experimental (replication rule check).  Either
@@ -267,6 +271,16 @@ class ChunkScheduler:
     host can already enqueue k+1 elsewhere; `jax.Array` readiness is the
     completion signal.
 
+    Since PR 7 this is a front-end over ``repro.resilience.DevicePool``
+    (DESIGN.md §resilience): a dispatch that raises requeues the chunk
+    through ``RetryPolicy`` instead of losing it, results pass the
+    ``validate_chunk`` merge guard, stragglers past their
+    ``DeviceModel`` deadline re-dispatch speculatively, ``deadline_s``
+    bounds the whole run, and merges happen in chunk-id order so the
+    result is bit-independent of completion order.  Heterogeneous
+    fleets pass ``specs`` (a list of ``resilience.DeviceSpec``) instead
+    of ``devices``; ``fault_injector`` enables the chaos drill.
+
     ``tracer`` (a ``repro.telemetry.Tracer``) records one span per chunk
     dispatch — opened when the chunk is enqueued, closed when its result
     is ready — tagged with device, engine and photon count, so the run's
@@ -279,133 +293,52 @@ class ChunkScheduler:
                  mode: str = "dynamic",
                  source: PhotonSource | Source | None = None,
                  engine: str = "jnp", detectors=None,
-                 record_detected: int = 0, tracer=None):
+                 record_detected: int = 0, tracer=None,
+                 specs: Sequence[DeviceSpec] | None = None,
+                 retry_policy: RetryPolicy | None = None,
+                 fault_injector: FaultInjector | None = None,
+                 validate: bool = True, max_residue_frac: float = 5e-3,
+                 chunk_timeout_s: float | None = None,
+                 checkpointer=None, checkpoint_every: int = 0,
+                 bind_engines: bool = True,
+                 raise_on_quarantine: bool = True):
         self.volume = volume
         self.cfg = cfg
-        self.devices = list(devices or jax.devices())
-        self._n_lanes = n_lanes
-        self._mode = mode
-        self._engine = engine
-        self._detectors = detectors
-        self._record_detected = int(record_detected)
+        if specs is None:
+            self.devices = list(devices or jax.devices())
+            specs = [DeviceSpec(device=d, engine=engine, n_lanes=n_lanes,
+                                mode=mode) for d in self.devices]
+        else:
+            if devices is not None:
+                raise ValueError("pass either devices or specs, not both")
+            self.devices = [s.device if s.device is not None
+                            else jax.devices()[0] for s in specs]
         self.tracer = tracer
-        self._default_source = as_source(source)
-        # one jitted fn per source (sources are frozen/hashable);
-        # placement follows the device_put of the inputs
-        self._fns: dict[PhotonSource, Callable] = {}
-        self._labels = volume.labels.reshape(-1)
-        self._media = volume.media
-
-    def _fn_for(self, source: PhotonSource):
-        if source not in self._fns:
-            raw = build_sim_fn(self.volume.shape, self.volume.unitinmm,
-                               self.cfg, self._n_lanes, self._mode, source,
-                               self._engine, detectors=self._detectors,
-                               record_detected=self._record_detected)
-            self._fns[source] = jax.jit(raw)
-        return self._fns[source]
+        self.pool = DevicePool(
+            volume, cfg, specs, source=source, detectors=detectors,
+            record_detected=record_detected, retry_policy=retry_policy,
+            fault_injector=fault_injector, validate=validate,
+            max_residue_frac=max_residue_frac,
+            chunk_timeout_s=chunk_timeout_s, bind_engines=bind_engines,
+            raise_on_quarantine=raise_on_quarantine,
+            checkpointer=checkpointer, checkpoint_every=checkpoint_every,
+            tracer=tracer)
+        self.last_report = None
 
     def run(self, n_photons: int, chunk_size: int, seed: int = 1234,
-            source: PhotonSource | Source | None = None
+            source: PhotonSource | Source | None = None,
+            deadline_s: float | None = None, resume: bool = False
             ) -> tuple[SimResult, dict]:
-        fn = self._fn_for(
-            as_source(source) if source is not None else self._default_source
-        )
-        chunks = [
-            Chunk(s, min(chunk_size, n_photons - s))
-            for s in range(0, n_photons, chunk_size)
-        ]
-        queue = list(reversed(chunks))
-        inflight: dict[jax.Device, tuple[Chunk, SimResult, object]] = {}
+        """Returns ``(SimResult, {device.id: photons merged})``; the full
+        resilience accounting lands on ``self.last_report``."""
+        res, report = self.pool.run(n_photons, chunk_size, seed=seed,
+                                    source=source, deadline_s=deadline_s,
+                                    resume=resume)
+        self.last_report = report
         stats = {d.id: 0 for d in self.devices}
-        collect = bool(self.cfg.collect_stats)
-
-        def dispatch(dev: jax.Device):
-            ch = queue.pop()
-            lo, hi = split_id64(ch.start_id)
-            span = None
-            if self.tracer is not None:
-                span = self.tracer.span(
-                    "chunk", device=dev, engine=self._engine,
-                    photons=ch.count, chunk_start=ch.start_id)
-            res = fn(
-                jax.device_put(self._labels, dev),
-                jax.device_put(self._media, dev),
-                ch.count, seed, lo, hi,
-            )
-            inflight[dev] = (ch, res, span)
-
-        for dev in self.devices:
-            if queue:
-                dispatch(dev)
-        nx, ny = self.volume.shape[:2]
-        eshape, dw_shape, dp_shape = _accumulator_shapes(
-            self.volume, self.cfg, self._detectors)
-        acc = {
-            "energy": np.zeros(eshape, np.float32),
-            "exitance": np.zeros((nx, ny), np.float32),
-            "escaped_w": 0.0,
-            "timed_out_w": 0.0,
-            "det_w": np.zeros(dw_shape, np.float32),
-            "det_ppath": np.zeros(dp_shape, np.float32),
-            "det_rec": [],
-            "det_rec_overflow": 0,
-            "n_launched": 0,
-            "launched_w": 0.0,
-            "steps": 0,
-            "stats": RoundStats.zeros() if collect else None,
-        }
-
-        def merge(res: SimResult):
-            acc["energy"] += np.asarray(res.energy)
-            acc["exitance"] += np.asarray(res.exitance)
-            acc["escaped_w"] += float(res.escaped_w)
-            acc["timed_out_w"] += float(res.timed_out_w)
-            acc["det_w"] += np.asarray(res.det_w)
-            acc["det_ppath"] += np.asarray(res.det_ppath)
-            acc["det_rec"].append(
-                np.asarray(res.det_rec)[: int(res.det_rec_n)])
-            acc["det_rec_overflow"] += int(res.det_rec_overflow)
-            acc["n_launched"] += int(res.n_launched)
-            acc["launched_w"] += float(res.launched_w)
-            acc["steps"] += int(res.steps)
-            if collect:
-                acc["stats"] = acc["stats"].add(res.stats)
-
-        while inflight:
-            progressed = False
-            for dev in list(inflight):
-                ch, res, span = inflight[dev]
-                if res.energy.is_ready():
-                    del inflight[dev]
-                    if span is not None:
-                        span.end()
-                    merge(res)
-                    stats[dev.id] += ch.count
-                    progressed = True
-                    if queue:
-                        dispatch(dev)
-            if not progressed:
-                time.sleep(0.001)
-
-        det_rec = (np.concatenate(acc["det_rec"], axis=0)
-                   if acc["det_rec"] else np.zeros((0, 4), np.uint32))
-        total = SimResult(
-            energy=jnp.asarray(acc["energy"]),
-            exitance=jnp.asarray(acc["exitance"]),
-            escaped_w=jnp.float32(acc["escaped_w"]),
-            timed_out_w=jnp.float32(acc["timed_out_w"]),
-            det_w=jnp.asarray(acc["det_w"]),
-            det_ppath=jnp.asarray(acc["det_ppath"]),
-            det_rec=jnp.asarray(det_rec),
-            det_rec_n=jnp.int32(det_rec.shape[0]),
-            det_rec_overflow=jnp.int32(acc["det_rec_overflow"]),
-            n_launched=jnp.int32(acc["n_launched"]),
-            launched_w=jnp.float32(acc["launched_w"]),
-            steps=jnp.int32(acc["steps"]),
-            stats=acc["stats"],
-        )
-        return total, stats
+        for did, n in report.per_device_photons.items():
+            stats[did] = stats.get(did, 0) + n
+        return res, stats
 
 
 # ---------------------------------------------------------------------------
@@ -422,6 +355,17 @@ class ElasticSimulator:
     checkpoint stores only the accumulated grids and the completed-chunk
     cursor — O(volume), independent of photon count.
 
+    Failure handling routes through ``repro.resilience`` (DESIGN.md
+    §resilience): a failed chunk requeues at the *back* of ``pending``
+    (a deterministic poison chunk can no longer starve the campaign)
+    and is quarantined onto ``self.skipped`` once it exhausts
+    ``retry_policy.max_attempts``; ``fault_injector`` drives seeded
+    chaos drills (dispatch faults, delays, NaN corruption — rejected by
+    the ``validate_chunk`` merge guard — and ``kill_after_merges`` host
+    crashes); ``checkpointer``/``checkpoint_every`` auto-save the
+    campaign state every N merged chunks through the atomic
+    ``checkpoint.Checkpointer``.
+
     ``tracer`` (a ``repro.telemetry.Tracer``) records one span per chunk
     (synchronous: the chunk is blocked on inside the span, so durations
     are true device times), tagged with device, engine and photon count
@@ -432,7 +376,11 @@ class ElasticSimulator:
                  chunk_size: int, n_lanes: int = 1024, seed: int = 1234,
                  source: PhotonSource | Source | None = None,
                  engine: str = "jnp", detectors=None,
-                 record_detected: int = 0, tracer=None):
+                 record_detected: int = 0, tracer=None,
+                 retry_policy: RetryPolicy | None = None,
+                 fault_injector: FaultInjector | None = None,
+                 validate: bool = True, max_residue_frac: float = 5e-3,
+                 checkpointer=None, checkpoint_every: int = 0):
         self.volume = volume
         self.cfg = cfg
         self.seed = seed
@@ -443,11 +391,20 @@ class ElasticSimulator:
         self.chunk_size = chunk_size
         self.n_photons = n_photons
         self.record_detected = int(record_detected)
+        self.policy = retry_policy or RetryPolicy()
+        self.injector = fault_injector
+        self.validate = bool(validate)
+        self.max_residue_frac = float(max_residue_frac)
+        self.checkpointer = checkpointer
+        self.checkpoint_every = int(checkpoint_every)
         self.pending: list[Chunk] = [
             Chunk(s, min(chunk_size, n_photons - s))
             for s in range(0, n_photons, chunk_size)
         ]
         self.completed: list[Chunk] = []
+        self.skipped: list[Chunk] = []   # chunks quarantined by the cap
+        self.failures: dict[int, int] = {}   # chunk start_id -> attempts
+        self.n_retries = 0
         nx, ny = volume.shape[:2]
         eshape, dw_shape, dp_shape = _accumulator_shapes(
             volume, cfg, self.detectors)
@@ -480,6 +437,9 @@ class ElasticSimulator:
 
         ``fail(chunk, device)`` simulates a device failure: the chunk is
         re-queued instead of merged (used by tests + chaos drills).
+        Failed and rejected chunks requeue at the *back* of ``pending``
+        (RetryPolicy-capped, then quarantined to ``self.skipped``) so a
+        poison chunk cannot starve the rest of the campaign.
         """
         devices = list(devices or jax.devices())
         n_done = 0
@@ -489,14 +449,55 @@ class ElasticSimulator:
         requeue = []
         for i, ch in enumerate(batch):
             dev = devices[i % len(devices)]
-            if fail is not None and fail(ch, dev):
-                requeue.append(ch)  # lost: device died mid-chunk
+            attempt = self.failures.get(ch.start_id, 0)
+            try:
+                if fail is not None and fail(ch, dev):
+                    raise InjectedFault(
+                        f"fail callback killed chunk {ch.start_id} on "
+                        f"{device_label(dev)}")
+                if self.injector is not None:
+                    self.injector.check_dispatch(ch.start_id, attempt,
+                                                 device_label(dev))
+                    delay = self.injector.delay_for(ch.start_id, attempt)
+                    if delay > 0:
+                        # the synchronous simulator has no speculation to
+                        # overlap with: a straggler simply takes longer
+                        time.sleep(delay)
+                harvest = harvest_result(self._run_chunk(ch, dev))
+                if self.injector is not None and \
+                        self.injector.corrupts(ch.start_id, attempt):
+                    harvest = corrupt_harvest(harvest)
+                if self.validate:
+                    errs = validate_chunk(harvest, ch.count,
+                                          self.max_residue_frac)
+                    if errs:
+                        raise InjectedFault(
+                            f"chunk {ch.start_id} rejected by merge "
+                            f"guard: {errs}")
+            except InjectedFault as e:
+                self._record_failure(ch, requeue, e)
                 continue
-            res = self._run_chunk(ch, dev)
-            self._merge(ch, res)
+            self._merge(ch, harvest)
             n_done += 1
-        self.pending = requeue + self.pending
+        self.pending = self.pending + requeue
         return n_done
+
+    def _record_failure(self, ch: Chunk, requeue: list,
+                        err: BaseException) -> None:
+        n = self.failures.get(ch.start_id, 0) + 1
+        self.failures[ch.start_id] = n
+        if self.policy.exhausted(n):
+            self.skipped.append(ch)
+            if self.tracer is not None:
+                self.tracer.counter("resilience.chunk_quarantined", 1,
+                                    chunk_start=ch.start_id,
+                                    reason=str(err))
+        else:
+            self.n_retries += 1
+            requeue.append(ch)
+            if self.tracer is not None:
+                self.tracer.counter("resilience.retries", 1,
+                                    chunk_start=ch.start_id)
 
     def run_to_completion(self, devices=None) -> SimResult:
         while self.pending:
@@ -523,22 +524,36 @@ class ElasticSimulator:
             span.end()
         return res
 
-    def _merge(self, ch: Chunk, res: SimResult):
-        self.energy += np.asarray(res.energy)
-        self.exitance += np.asarray(res.exitance)
-        self.escaped_w += float(res.escaped_w)
-        self.timed_out_w += float(res.timed_out_w)
-        self.det_w += np.asarray(res.det_w)
-        self.det_ppath += np.asarray(res.det_ppath)
-        part = np.asarray(res.det_rec)[: int(res.det_rec_n)]
-        if part.size:
-            self._det_rec_parts.append(part)
-        self.det_rec_overflow += int(res.det_rec_overflow)
-        self.n_launched += int(res.n_launched)
-        self.launched_w += float(res.launched_w)
-        if self.stats is not None and res.stats is not None:
-            self.stats = self.stats.add(res.stats)
+    def _merge(self, ch: Chunk, harvest: dict):
+        """Merge one validated host-side harvest (resilience.validate),
+        then auto-checkpoint and honor any injected host crash (the
+        crash fires *after* the checkpoint, mimicking a host that dies
+        between campaigns rather than mid-write — the atomic
+        Checkpointer already covers torn writes)."""
+        self.energy += harvest["energy"]
+        self.exitance += harvest["exitance"]
+        self.escaped_w += harvest["escaped_w"]
+        self.timed_out_w += harvest["timed_out_w"]
+        self.det_w += harvest["det_w"]
+        self.det_ppath += harvest["det_ppath"]
+        if harvest["det_rec"].size:
+            self._det_rec_parts.append(harvest["det_rec"])
+        self.det_rec_overflow += harvest["det_rec_overflow"]
+        self.n_launched += harvest["n_launched"]
+        self.launched_w += harvest["launched_w"]
+        if self.stats is not None and harvest["stats"] is not None:
+            self.stats = self.stats.add(harvest["stats"])
         self.completed.append(ch)
+        n_merged = len(self.completed)
+        if (self.checkpointer is not None and self.checkpoint_every
+                and n_merged % self.checkpoint_every == 0):
+            self.checkpointer.save(n_merged, self.state_dict(),
+                                   extra={"kind": "elastic",
+                                          "merged": n_merged})
+            if self.tracer is not None:
+                self.tracer.counter("resilience.checkpoint", n_merged)
+        if self.injector is not None:
+            self.injector.maybe_kill(n_merged)
 
     @property
     def det_rec(self) -> np.ndarray:
@@ -619,6 +634,9 @@ class ElasticSimulator:
             "completed": np.asarray(
                 [(c.start_id, c.count) for c in self.completed], np.int64
             ).reshape(-1, 2),
+            "skipped": np.asarray(
+                [(c.start_id, c.count) for c in self.skipped], np.int64
+            ).reshape(-1, 2),
             "seed": np.int64(self.seed),
             "n_photons": np.int64(self.n_photons),
             # the grids are only mergeable with chunks from the same source /
@@ -676,6 +694,12 @@ class ElasticSimulator:
                 np.asarray(state["stats"], np.float64))
         self.pending = [Chunk(int(s), int(c)) for s, c in state["pending"]]
         self.completed = [Chunk(int(s), int(c)) for s, c in state["completed"]]
+        # pre-PR-7 state dicts have no skipped list; attempt counters
+        # deliberately reset on restart (a restarted host gets a fresh
+        # retry budget for transient faults)
+        self.skipped = [Chunk(int(s), int(c))
+                        for s, c in state.get("skipped", [])]
+        self.failures = {}
 
 
 def heterogeneous_partition(n_photons: int, models: Sequence[DeviceModel],

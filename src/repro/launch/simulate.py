@@ -51,6 +51,35 @@ def main(argv=None):
     ap.add_argument("--devices", default="one", choices=["one", "all"])
     ap.add_argument("--chunk", type=int, default=0,
                     help=">0: dynamic chunk scheduling (straggler-safe)")
+    ap.add_argument("--chaos", default=None, metavar="JSON",
+                    help="seeded fault-injection drill for the --chunk "
+                         "scheduler (DESIGN.md §resilience): JSON "
+                         "FaultInjector config, e.g. '{\"seed\": 1, "
+                         "\"p_fail\": 0.2, \"p_nan\": 0.1, \"p_delay\": "
+                         "0.2, \"delay_s\": 0.1, \"poison_chunks\": [0], "
+                         "\"dropout\": {\"w0:cpu:0\": 2}}'; results stay "
+                         "bit-identical to the fault-free run")
+    ap.add_argument("--max-retries", type=int, default=None, metavar="N",
+                    help="attempt cap per chunk before it is quarantined "
+                         "(default: RetryPolicy's 5); requires --chunk")
+    ap.add_argument("--chunk-timeout-s", type=float, default=None,
+                    metavar="S",
+                    help="hard per-chunk deadline: a chunk inflight "
+                         "longer re-dispatches speculatively (on top of "
+                         "the fitted DeviceModel deadlines); requires "
+                         "--chunk")
+    ap.add_argument("--deadline-s", type=float, default=None, metavar="S",
+                    help="overall wall-clock bound for the chunked run "
+                         "(TimeoutError past it instead of waiting "
+                         "forever); requires --chunk")
+    ap.add_argument("--checkpoint-every", type=int, default=0, metavar="N",
+                    help="auto-checkpoint the chunked campaign every N "
+                         "merged chunks (atomic Checkpointer); requires "
+                         "--chunk and --checkpoint-dir")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="checkpoint directory for --checkpoint-every; "
+                         "if it already holds a matching campaign "
+                         "checkpoint the run resumes from it")
     ap.add_argument("--source", default=None,
                     help="JSON source spec (repro.sources), e.g. "
                          '\'{"type": "disk", "pos": [30, 30, 0], '
@@ -114,6 +143,11 @@ def main(argv=None):
         ap.error("--replay requires --save-detected")
     if args.replay_gate_resolved and not args.replay:
         ap.error("--replay-gate-resolved requires --replay")
+    for flag in ("chaos", "max_retries", "chunk_timeout_s", "deadline_s"):
+        if getattr(args, flag) is not None and not args.chunk:
+            ap.error(f"--{flag.replace('_', '-')} requires --chunk")
+    if args.checkpoint_every and not (args.chunk and args.checkpoint_dir):
+        ap.error("--checkpoint-every requires --chunk and --checkpoint-dir")
 
     source = json.loads(args.source) if args.source else None
     detectors = D.as_detectors(
@@ -143,12 +177,42 @@ def main(argv=None):
     t0 = time.time()
     mesh = None
     if args.chunk:
+        from repro.resilience import FaultInjector, RetryPolicy
+
+        injector = (FaultInjector(**json.loads(args.chaos))
+                    if args.chaos else None)
+        policy = (RetryPolicy(max_attempts=args.max_retries)
+                  if args.max_retries is not None else None)
+        checkpointer = None
+        resume = False
+        if args.checkpoint_every:
+            from repro.checkpoint import Checkpointer
+
+            checkpointer = Checkpointer(args.checkpoint_dir)
+            resume = checkpointer.latest_step() is not None
+            if resume:
+                print(f"resuming from checkpoint step "
+                      f"{checkpointer.latest_step()} in "
+                      f"{args.checkpoint_dir}")
         sched = ChunkScheduler(vol, cfg, n_lanes=lanes, source=source,
                                engine=args.engine, detectors=detectors,
                                record_detected=args.save_detected,
-                               tracer=tracer)
-        res, stats = sched.run(args.photons, args.chunk, seed=args.seed)
+                               tracer=tracer, fault_injector=injector,
+                               retry_policy=policy,
+                               chunk_timeout_s=args.chunk_timeout_s,
+                               checkpointer=checkpointer,
+                               checkpoint_every=args.checkpoint_every)
+        res, stats = sched.run(args.photons, args.chunk, seed=args.seed,
+                               deadline_s=args.deadline_s, resume=resume)
         print("per-device photons:", stats)
+        rep = sched.last_report
+        if injector is not None or rep.retries or rep.quarantine_events:
+            c = rep.counters()
+            print(f"resilience: {c['merged']}/{c['chunks']} chunks merged, "
+                  f"{c['retries']} retries, {c['speculative']} speculative, "
+                  f"{c['validation_failures']} rejected by merge guard, "
+                  f"{c['quarantine_events']} quarantine events, "
+                  f"{c['checkpoints']} checkpoints")
     elif args.devices == "all" and len(jax.devices()) > 1:
         mesh = jax.make_mesh((len(jax.devices()),), ("data",))
         span = tracer.span("simulate", device="mesh", engine=args.engine,

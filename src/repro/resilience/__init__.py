@@ -1,0 +1,25 @@
+"""Fault-tolerant heterogeneous execution (DESIGN.md §resilience).
+
+Public surface of the robustness layer: the device pool and its specs,
+the retry/health policy, the merge-guard validators, and the seeded
+chaos injector used by tests, benchmarks, and the CLI ``--chaos``
+drill.
+"""
+
+from repro.resilience.faults import (FaultInjector, InjectedCrash,
+                                     InjectedFault)
+from repro.resilience.policy import (HEALTHY, QUARANTINED, SUSPECT,
+                                     RetryPolicy)
+from repro.resilience.pool import (ChunkQuarantinedError, DevicePool,
+                                   DeviceSpec, PoolExhaustedError,
+                                   PoolReport, Worker)
+from repro.resilience.validate import (corrupt_harvest, harvest_result,
+                                       validate_chunk)
+
+__all__ = [
+    "DevicePool", "DeviceSpec", "Worker", "PoolReport",
+    "PoolExhaustedError", "ChunkQuarantinedError",
+    "RetryPolicy", "HEALTHY", "SUSPECT", "QUARANTINED",
+    "FaultInjector", "InjectedFault", "InjectedCrash",
+    "validate_chunk", "harvest_result", "corrupt_harvest",
+]

@@ -1,0 +1,867 @@
+"""Fault-tolerant heterogeneous device pool (DESIGN.md §resilience).
+
+The paper's headline result runs *unequal* CPU+GPU devices together
+under device-level load balancing; any such fleet serving long
+campaigns will see stragglers, hangs, dropped devices, and corrupted
+results.  :class:`DevicePool` is the robustness layer that lets the
+chunked schedulers survive all of them:
+
+  * **Heterogeneous workers** — each :class:`Worker` wraps one
+    :class:`DeviceSpec` ``(device, engine, n_lanes)`` with its own
+    compiled executor (per *bit-class* fn cache, shared by workers
+    whose specs compile identically), so CPU-jnp and GPU/interpreted-
+    Pallas workers coexist in one run.
+  * **Retries with caps** — a failed dispatch or rejected result is
+    requeued through :class:`repro.resilience.RetryPolicy` (exponential
+    backoff, honored as a non-blocking eligibility gate); a chunk that
+    exhausts its attempt budget is quarantined and recorded, never
+    merged.
+  * **Deadlines + speculation** — per-chunk deadlines derive from the
+    worker's fitted ``loadbalance.DeviceModel`` (measured samples feed
+    back as chunks complete); an overdue chunk is speculatively
+    re-dispatched to another worker, the first valid result wins, and
+    duplicates are discarded by chunk id.
+  * **Validated merges** — every result is harvested to host numpy and
+    run through :func:`repro.resilience.validate_chunk` (NaN/inf scan +
+    per-chunk energy-balance residual) before it may touch the
+    accumulator.
+  * **Worker health** — healthy -> suspect -> quarantined, with
+    graceful degradation down to one device; an empty pool raises
+    :class:`PoolExhaustedError` with the full failure history.
+  * **Deterministic merges** — valid results are buffered and merged in
+    *chunk-id order* (a bounded reordering frontier), so the float
+    accumulation order — and therefore every output bit — is
+    independent of completion order, worker assignment and fault
+    schedule.  Combined with engine binding (below) this makes the
+    final result bit-identical to the fault-free run under any fault
+    schedule.
+  * **Engine binding** — per-chunk results are only bit-reproducible
+    across workers of the same *bit-class* ``(engine, n_lanes, mode)``
+    (engines agree to fp-accumulation order, not bitwise).  With
+    ``bind_engines=True`` (default) each chunk is deterministically
+    bound round-robin to one of the pool's bit-classes, so retries and
+    speculation move a chunk only between bit-identical workers.  If a
+    class loses its last live worker the chunk is re-bound to survive
+    (counted in ``PoolReport.rebound`` — bit-identity degrades to
+    engine-parity tolerance for exactly those chunks).
+  * **Checkpoints** — every ``checkpoint_every`` merged chunks the
+    contiguous merged prefix is saved through the atomic
+    ``checkpoint.Checkpointer``; ``run(resume=True)`` restores it and
+    only simulates the remainder.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from collections import deque
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.loadbalance import DeviceModel, model_from_samples
+from repro.core.rng import split_id64
+from repro.core.simulator import SimResult, build_sim_fn
+from repro.core.volume import SimConfig, Source, Volume
+from repro.detectors import as_detectors
+from repro.resilience.faults import FaultInjector, InjectedFault
+from repro.resilience.policy import (HEALTHY, QUARANTINED, SUSPECT,
+                                     RetryPolicy)
+from repro.resilience.validate import (corrupt_harvest, harvest_result,
+                                       validate_chunk)
+from repro.sources import PhotonSource, as_source
+from repro.telemetry.stats import RoundStats
+from repro.telemetry.trace import device_label
+
+
+class PoolExhaustedError(RuntimeError):
+    """Every worker has been quarantined/dropped with work remaining."""
+
+
+class ChunkQuarantinedError(RuntimeError):
+    """A chunk exhausted its retry budget (raise_on_quarantine=True)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    """One worker's execution recipe: device + engine + lane count.
+
+    ``device=None`` resolves to the default device.  ``label`` names the
+    worker in reports, fault schedules (``FaultInjector.dropout``) and
+    telemetry; it defaults to ``w<i>:<platform>:<id>``.  ``throttle_s``
+    imposes a per-chunk latency floor — a *simulated* slow device, used
+    by tests and benchmarks to build genuinely unequal fleets on
+    identical host CPUs (the paper's unequal-device Fig. 8 setup,
+    fake-device approximation).
+    """
+
+    device: Any = None
+    engine: str = "jnp"
+    n_lanes: int = 1024
+    mode: str = "dynamic"
+    label: str | None = None
+    throttle_s: float = 0.0
+
+    @property
+    def bit_class(self) -> tuple:
+        """Workers sharing this key produce bit-identical chunk results
+        (same compiled computation; devices only change placement)."""
+        return (self.engine, int(self.n_lanes), self.mode)
+
+
+class Worker:
+    """One pool member: a spec, its health, and its measured samples."""
+
+    def __init__(self, spec: DeviceSpec, index: int):
+        self.spec = spec
+        self.device = spec.device if spec.device is not None \
+            else jax.devices()[0]
+        self.label = spec.label or f"w{index}:{device_label(self.device)}"
+        self.health = HEALTHY
+        self.consecutive_failures = 0
+        self.n_dispatched = 0
+        self.n_merged = 0
+        self.photons_merged = 0
+        self.failures = 0
+        self.samples: list[tuple[float, float]] = []  # (photons, seconds)
+        self.busy = False
+        self._model: DeviceModel | None = None
+
+    @property
+    def bit_class(self) -> tuple:
+        return self.spec.bit_class
+
+    def record_sample(self, photons: int, seconds: float) -> None:
+        if seconds > 0:
+            self.samples.append((float(photons), float(seconds)))
+            self._model = None  # refit lazily
+
+    @property
+    def model(self) -> DeviceModel | None:
+        """Runtime model fitted from this worker's completed chunks
+        (the measured-throughput feedback loop)."""
+        if self._model is None and self.samples:
+            self._model = model_from_samples(self.samples, name=self.label)
+        return self._model
+
+    def predict_s(self, photons: int) -> float | None:
+        m = self.model
+        return m.predict(photons) if m is not None else None
+
+    def summary(self) -> dict:
+        m = self.model
+        return {
+            "label": self.label,
+            "device": device_label(self.device),
+            "engine": self.spec.engine,
+            "n_lanes": int(self.spec.n_lanes),
+            "health": self.health,
+            "chunks_merged": self.n_merged,
+            "photons_merged": self.photons_merged,
+            "dispatched": self.n_dispatched,
+            "failures": self.failures,
+            "photons_per_s": (m.throughput if m is not None else None),
+        }
+
+
+@dataclasses.dataclass
+class PoolReport:
+    """Resilience accounting of one :meth:`DevicePool.run`."""
+
+    n_chunks: int = 0
+    merged: int = 0
+    retries: int = 0               # chunk re-entries into the queue
+    speculative: int = 0           # deadline-triggered re-dispatches
+    duplicates_discarded: int = 0  # late results for already-merged chunks
+    validation_failures: int = 0   # results rejected by validate_chunk
+    dispatch_failures: int = 0     # dispatches that raised
+    injected_faults: int = 0       # ... of which were FaultInjector's
+    rebound: int = 0               # chunks re-bound after class extinction
+    workers_quarantined: int = 0   # workers dropped/quarantined mid-run
+    checkpoints: int = 0
+    wall_s: float = 0.0
+    quarantined_chunks: list = dataclasses.field(default_factory=list)
+    chunk_failures: dict = dataclasses.field(default_factory=dict)
+    workers: list = dataclasses.field(default_factory=list)
+    per_device_photons: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def quarantine_events(self) -> int:
+        """Total quarantine events (poison chunks + lost workers)."""
+        return len(self.quarantined_chunks) + self.workers_quarantined
+
+    def counters(self) -> dict:
+        """Flat numeric counters (telemetry sinks, benchmark JSON)."""
+        return {
+            "chunks": self.n_chunks,
+            "merged": self.merged,
+            "retries": self.retries,
+            "speculative": self.speculative,
+            "duplicates_discarded": self.duplicates_discarded,
+            "validation_failures": self.validation_failures,
+            "dispatch_failures": self.dispatch_failures,
+            "injected_faults": self.injected_faults,
+            "rebound": self.rebound,
+            "quarantined_chunks": len(self.quarantined_chunks),
+            "workers_quarantined": self.workers_quarantined,
+            "quarantine_events": self.quarantine_events,
+            "checkpoints": self.checkpoints,
+            "wall_s": self.wall_s,
+        }
+
+    def to_dict(self) -> dict:
+        return {**self.counters(),
+                "quarantined": [(c.start_id, c.count)
+                                for c in self.quarantined_chunks],
+                "chunk_failures": dict(self.chunk_failures),
+                "workers": list(self.workers)}
+
+
+@dataclasses.dataclass
+class _Chunk:
+    start_id: int
+    count: int
+
+
+class _Task:
+    """Per-chunk scheduler state."""
+
+    __slots__ = ("chunk", "idx", "bound", "failures", "retry_at", "merged",
+                 "quarantined", "inflight", "reasons", "last_error",
+                 "harvest", "merged_by")
+
+    def __init__(self, chunk, idx, bound):
+        self.chunk = chunk
+        self.idx = idx
+        self.bound = bound          # bit-class this chunk is bound to
+        self.failures = 0
+        self.retry_at = 0.0
+        self.merged = False
+        self.quarantined = False
+        self.inflight = 0
+        self.reasons: list[str] = []
+        self.last_error: BaseException | None = None
+        self.harvest: dict | None = None   # valid result awaiting frontier
+        self.merged_by: Worker | None = None
+
+
+class _Inflight:
+    __slots__ = ("task", "worker", "attempt", "result", "span", "t0",
+                 "ready_at", "deadline", "speculated")
+
+    def __init__(self, task, worker, attempt, result, span, t0, ready_at,
+                 deadline):
+        self.task = task
+        self.worker = worker
+        self.attempt = attempt
+        self.result = result
+        self.span = span
+        self.t0 = t0
+        self.ready_at = ready_at
+        self.deadline = deadline
+        self.speculated = False
+
+
+class DevicePool:
+    """Resilient chunk executor over heterogeneous device workers.
+
+    ``specs`` defaults to one jnp worker per visible device.  See the
+    module docstring for the full semantics; ``run()`` returns
+    ``(SimResult, PoolReport)``.
+    """
+
+    def __init__(self, volume: Volume, cfg: SimConfig,
+                 specs: Sequence[DeviceSpec] | None = None, *,
+                 source: PhotonSource | Source | None = None,
+                 detectors=None, record_detected: int = 0,
+                 retry_policy: RetryPolicy | None = None,
+                 fault_injector: FaultInjector | None = None,
+                 validate: bool = True, max_residue_frac: float = 5e-3,
+                 chunk_timeout_s: float | None = None,
+                 deadline_factor: float = 4.0, deadline_slack_s: float = 1.0,
+                 bind_engines: bool = True,
+                 raise_on_quarantine: bool = True,
+                 checkpointer=None, checkpoint_every: int = 0,
+                 tracer=None):
+        self.volume = volume
+        self.cfg = cfg
+        if specs is None:
+            specs = [DeviceSpec(device=d) for d in jax.devices()]
+        if not specs:
+            raise ValueError("DevicePool needs at least one DeviceSpec")
+        self.workers = [Worker(spec, i) for i, spec in enumerate(specs)]
+        labels = [w.label for w in self.workers]
+        if len(set(labels)) != len(labels):
+            raise ValueError(f"worker labels must be unique, got {labels}")
+        self.policy = retry_policy or RetryPolicy()
+        self.injector = fault_injector
+        self.validate = bool(validate)
+        self.max_residue_frac = float(max_residue_frac)
+        self.chunk_timeout_s = chunk_timeout_s
+        self.deadline_factor = float(deadline_factor)
+        self.deadline_slack_s = float(deadline_slack_s)
+        self.bind_engines = bool(bind_engines)
+        self.raise_on_quarantine = bool(raise_on_quarantine)
+        self.checkpointer = checkpointer
+        self.checkpoint_every = int(checkpoint_every)
+        self.tracer = tracer
+        self._default_source = as_source(source)
+        self.detectors = as_detectors(detectors)
+        self.record_detected = int(record_detected)
+        self._labels = volume.labels.reshape(-1)
+        self._media = volume.media
+        # compiled executors shared per (source, bit-class); device
+        # placement follows the device_put of the inputs
+        self._fns: dict[tuple, Callable] = {}
+        self._dev_buffers: dict[Any, tuple] = {}
+        # deterministic class order for engine binding: list order of
+        # first appearance in `specs`, so the binding — and therefore
+        # the output bits — depends only on the spec list, never on
+        # which workers survive
+        self._classes: list[tuple] = []
+        for w in self.workers:
+            if w.bit_class not in self._classes:
+                self._classes.append(w.bit_class)
+
+    # -- executors -----------------------------------------------------------
+
+    def _fn_for(self, source: PhotonSource, bit_class: tuple):
+        key = (source, bit_class)
+        if key not in self._fns:
+            engine, n_lanes, mode = bit_class
+            raw = build_sim_fn(self.volume.shape, self.volume.unitinmm,
+                               self.cfg, n_lanes, mode, source, engine,
+                               detectors=self.detectors,
+                               record_detected=self.record_detected)
+            self._fns[key] = jax.jit(raw)
+        return self._fns[key]
+
+    def _buffers_for(self, device):
+        if device not in self._dev_buffers:
+            self._dev_buffers[device] = (
+                jax.device_put(self._labels, device),
+                jax.device_put(self._media, device),
+            )
+        return self._dev_buffers[device]
+
+    # -- fleet bookkeeping ---------------------------------------------------
+
+    def live_workers(self) -> list[Worker]:
+        return [w for w in self.workers if w.health != QUARANTINED]
+
+    def _quarantine_worker(self, w: Worker, report: PoolReport,
+                           reason: str) -> None:
+        if w.health == QUARANTINED:
+            return
+        w.health = QUARANTINED
+        report.workers_quarantined += 1
+        if self.tracer is not None:
+            self.tracer.counter("resilience.worker_quarantined", 1,
+                                worker=w.label, reason=reason)
+
+    def _mark_failure(self, w: Worker, report: PoolReport,
+                      reason: str) -> None:
+        w.failures += 1
+        w.consecutive_failures += 1
+        health = self.policy.health_for(w.consecutive_failures)
+        if health == QUARANTINED:
+            self._quarantine_worker(w, report, reason)
+        else:
+            w.health = health
+
+    def _mark_success(self, w: Worker) -> None:
+        w.consecutive_failures = 0
+        if w.health == SUSPECT:
+            w.health = HEALTHY
+
+    # -- chunk failure routing ----------------------------------------------
+
+    def _chunk_failed(self, task: _Task, report: PoolReport, reason: str,
+                      now: float, pending: deque,
+                      error: BaseException | None = None) -> None:
+        task.failures += 1
+        task.reasons.append(reason)
+        if error is not None:
+            task.last_error = error
+        report.chunk_failures.setdefault(task.chunk.start_id,
+                                         []).append(reason)
+        if self.policy.exhausted(task.failures):
+            task.quarantined = True
+            report.quarantined_chunks.append(task.chunk)
+            if self.tracer is not None:
+                self.tracer.counter("resilience.chunk_quarantined", 1,
+                                    chunk_start=task.chunk.start_id,
+                                    reason=reason)
+        else:
+            task.retry_at = now + self.policy.backoff(task.failures)
+            report.retries += 1
+            if task.inflight == 0 and task not in pending:
+                pending.append(task)  # back of the queue: no starvation
+
+    # -- the run loop --------------------------------------------------------
+
+    def run(self, n_photons: int, chunk_size: int, seed: int = 1234,
+            source: PhotonSource | Source | None = None,
+            deadline_s: float | None = None, id_offset: int = 0,
+            resume: bool = False) -> tuple[SimResult, dict]:
+        """Simulate ``n_photons`` in ``chunk_size`` chunks across the
+        pool; returns ``(SimResult, PoolReport)``.
+
+        ``deadline_s`` bounds the whole run (TimeoutError past it —
+        never an unbounded busy-wait).  ``resume=True`` restores the
+        newest auto-checkpoint (requires ``checkpointer``) and only
+        simulates the chunks past its merged frontier.
+        """
+        t_start = time.monotonic()
+        src = (as_source(source) if source is not None
+               else self._default_source)
+        chunks = [_Chunk(id_offset + s, min(chunk_size, n_photons - s))
+                  for s in range(0, n_photons, chunk_size)]
+        n_classes = len(self._classes) if self.bind_engines else 1
+        tasks = [
+            _Task(ch, i,
+                  self._classes[i % n_classes] if self.bind_engines else None)
+            for i, ch in enumerate(chunks)
+        ]
+        report = PoolReport(n_chunks=len(tasks))
+        acc = self._zero_acc()
+        frontier = 0
+        if resume:
+            frontier = self._restore(acc, tasks, n_photons, chunk_size,
+                                     seed, src)
+            for t in tasks[:frontier]:
+                if not t.quarantined:
+                    t.merged = True
+                    report.merged += 1
+        pending: deque[_Task] = deque(t for t in tasks if not t.merged
+                                      and not t.quarantined)
+        inflight: list[_Inflight] = []
+        last_ckpt_merged = report.merged
+
+        def all_done() -> bool:
+            return all(t.merged or t.quarantined for t in tasks)
+
+        while not all_done():
+            now = time.monotonic()
+            if deadline_s is not None and now - t_start > deadline_s:
+                stuck = [(i.task.chunk.start_id, i.worker.label)
+                         for i in inflight]
+                raise TimeoutError(
+                    f"pool run exceeded deadline_s={deadline_s}: "
+                    f"{report.merged}/{len(tasks)} chunks merged, "
+                    f"inflight {stuck}")
+            progressed = False
+
+            # scheduled device dropout (the chaos layer's fleet faults)
+            if self.injector is not None:
+                for w in self.live_workers():
+                    if self.injector.dropped(w.label, w.n_dispatched):
+                        self._quarantine_worker(w, report,
+                                                "injected dropout")
+                        progressed = True
+
+            # harvest ready results
+            for inf in list(inflight):
+                if now < inf.ready_at or not inf.result.energy.is_ready():
+                    continue
+                inflight.remove(inf)
+                inf.worker.busy = False
+                inf.task.inflight -= 1
+                progressed = True
+                self._complete(inf, report, time.monotonic(), pending)
+
+            # lost workers keep "computing" forever as far as the pool
+            # is concerned; their inflight entries are abandoned and the
+            # chunks requeued (unless already merged elsewhere)
+            for inf in list(inflight):
+                if inf.worker.health == QUARANTINED:
+                    inflight.remove(inf)
+                    inf.task.inflight -= 1
+                    if inf.span is not None:
+                        inf.span.end(outcome="abandoned")
+                    if not (inf.task.merged or inf.task.quarantined
+                            or inf.task.inflight > 0
+                            or inf.task in pending):
+                        inf.task.retry_at = 0.0
+                        report.retries += 1
+                        pending.appendleft(inf.task)
+                    progressed = True
+
+            # deadline scan: overdue chunks speculate on another worker
+            for inf in inflight:
+                if (inf.deadline is not None and not inf.speculated
+                        and now - inf.t0 > inf.deadline
+                        and not inf.task.merged):
+                    inf.speculated = True
+                    if inf.worker.health == HEALTHY:
+                        inf.worker.health = SUSPECT
+                    if inf.task.inflight == 1 and inf.task not in pending:
+                        inf.task.retry_at = 0.0
+                        report.speculative += 1
+                        pending.appendleft(inf.task)
+                        progressed = True
+                        if self.tracer is not None:
+                            self.tracer.counter(
+                                "resilience.speculative_dispatch", 1,
+                                chunk_start=inf.task.chunk.start_id,
+                                worker=inf.worker.label)
+
+            # merge the contiguous frontier (chunk-id order => the
+            # accumulation order is schedule-independent)
+            while frontier < len(tasks):
+                t = tasks[frontier]
+                if t.quarantined and t.harvest is None:
+                    frontier += 1
+                    continue
+                if t.harvest is None:
+                    break
+                self._merge(acc, t, report)
+                frontier += 1
+                progressed = True
+                if (self.checkpointer is not None and self.checkpoint_every
+                        and report.merged - last_ckpt_merged
+                        >= self.checkpoint_every):
+                    self._save_checkpoint(acc, frontier, tasks, n_photons,
+                                          chunk_size, seed, src, report)
+                    last_ckpt_merged = report.merged
+                if self.injector is not None:
+                    # the injected host crash fires after the checkpoint
+                    # (a host dying between saves; the atomic writer
+                    # already covers torn files)
+                    self.injector.maybe_kill(report.merged)
+
+            live = self.live_workers()
+            if not live and not all_done():
+                raise PoolExhaustedError(
+                    f"every worker is quarantined with "
+                    f"{len(tasks) - report.merged} chunks unfinished; "
+                    f"worker history: {[w.summary() for w in self.workers]}")
+
+            # dispatch: healthy workers first, suspects as last resort
+            for w in sorted((w for w in live if not w.busy),
+                            key=lambda w: w.health != HEALTHY):
+                task = self._next_task(pending, w, now)
+                if task is None:
+                    continue
+                pending.remove(task)
+                self._dispatch(w, task, seed, src, report, inflight,
+                               pending)
+                progressed = True
+
+            if not progressed:
+                time.sleep(5e-4)
+
+        report.wall_s = time.monotonic() - t_start
+        report.workers = [w.summary() for w in self.workers]
+        for w in self.workers:
+            did = w.device.id
+            report.per_device_photons[did] = (
+                report.per_device_photons.get(did, 0) + w.photons_merged)
+        self._emit_counters(report)
+        if report.quarantined_chunks and self.raise_on_quarantine:
+            qc = report.quarantined_chunks[0]
+            raise ChunkQuarantinedError(
+                f"{len(report.quarantined_chunks)} chunk(s) exhausted "
+                f"their {self.policy.max_attempts}-attempt budget; first: "
+                f"chunk {qc.start_id} (+{qc.count}) after failures "
+                f"{report.chunk_failures.get(qc.start_id)}"
+            ) from tasks[[t.chunk for t in tasks].index(qc)].last_error
+        return self._result(acc), report
+
+    # -- dispatch / completion ----------------------------------------------
+
+    def _next_task(self, pending: deque, w: Worker,
+                   now: float) -> _Task | None:
+        """First eligible pending task for this worker (binding-aware)."""
+        for task in pending:
+            if task.merged or task.quarantined or task.retry_at > now:
+                continue
+            if task.bound is not None and task.bound != w.bit_class:
+                # the bound class may have lost its last worker; only
+                # then may a foreign worker steal the chunk (bit-
+                # identity degrades to engine parity for this chunk)
+                if any(lw.bit_class == task.bound
+                       for lw in self.live_workers()):
+                    continue
+                task.bound = w.bit_class
+                self._report_rebound(task)
+            return task
+        return None
+
+    def _report_rebound(self, task: _Task) -> None:
+        self._rebound_count = getattr(self, "_rebound_count", 0) + 1
+        if self.tracer is not None:
+            self.tracer.counter("resilience.chunk_rebound", 1,
+                                chunk_start=task.chunk.start_id)
+
+    def _dispatch(self, w: Worker, task: _Task, seed: int,
+                  src: PhotonSource, report: PoolReport,
+                  inflight: list[_Inflight], pending: deque) -> None:
+        ch = task.chunk
+        attempt = task.failures
+        w.n_dispatched += 1
+        span = None
+        if self.tracer is not None:
+            span = self.tracer.span("chunk", device=w.device,
+                                    engine=w.spec.engine, photons=ch.count,
+                                    chunk_start=ch.start_id, attempt=attempt,
+                                    worker=w.label)
+        now = time.monotonic()
+        delay = w.spec.throttle_s
+        try:
+            if self.injector is not None:
+                self.injector.check_dispatch(ch.start_id, attempt, w.label)
+                delay = max(delay, self.injector.delay_for(ch.start_id,
+                                                           attempt))
+            labels_dev, media_dev = self._buffers_for(w.device)
+            fn = self._fn_for(src, w.bit_class)
+            lo, hi = split_id64(ch.start_id)
+            result = fn(labels_dev, media_dev, ch.count, seed, lo, hi)
+        except InjectedFault as e:
+            if span is not None:
+                span.end(outcome="injected-fault")
+            report.dispatch_failures += 1
+            report.injected_faults += 1
+            self._mark_failure(w, report, str(e))
+            self._chunk_failed(task, report, f"dispatch: {e}", now, pending,
+                               e)
+            return
+        except Exception as e:  # real dispatch error: requeue + surface
+            if span is not None:
+                span.end(outcome="error")
+            report.dispatch_failures += 1
+            self._mark_failure(w, report, repr(e))
+            self._chunk_failed(task, report, f"dispatch: {e!r}", now,
+                               pending, e)
+            return
+        deadline = self.chunk_timeout_s
+        predicted = w.predict_s(ch.count)
+        if predicted is not None:
+            model_deadline = (self.deadline_factor * predicted
+                              + self.deadline_slack_s)
+            deadline = (model_deadline if deadline is None
+                        else min(deadline, model_deadline))
+        task.inflight += 1
+        w.busy = True
+        inflight.append(_Inflight(task, w, attempt, result, span, now,
+                                  now + delay, deadline))
+
+    def _complete(self, inf: _Inflight, report: PoolReport,
+                  now: float, pending: deque) -> None:
+        task, w = inf.task, inf.worker
+        elapsed = now - inf.t0
+        if task.merged or task.harvest is not None or task.quarantined:
+            # a speculative twin (or a late result for a quarantined
+            # chunk) already settled this chunk id — discard, but keep
+            # the timing sample: the worker did real work
+            report.duplicates_discarded += 1
+            if inf.span is not None:
+                inf.span.end(outcome="duplicate")
+            w.record_sample(task.chunk.count, elapsed)
+            return
+        harvest = harvest_result(inf.result)
+        if self.injector is not None and \
+                self.injector.corrupts(task.chunk.start_id, inf.attempt):
+            harvest = corrupt_harvest(harvest)
+            report.injected_faults += 1
+        errs = (validate_chunk(harvest, task.chunk.count,
+                               self.max_residue_frac)
+                if self.validate else [])
+        if errs:
+            if inf.span is not None:
+                inf.span.end(outcome="invalid")
+            report.validation_failures += 1
+            self._mark_failure(w, report, errs[0])
+            self._chunk_failed(task, report, f"validation: {errs}", now,
+                               pending)
+            return
+        if inf.span is not None:
+            inf.span.end(outcome="merged")
+        w.record_sample(task.chunk.count, elapsed)
+        self._mark_success(w)
+        task.harvest = harvest
+        task.merged_by = w
+
+    # -- accumulation --------------------------------------------------------
+
+    def _zero_acc(self) -> dict:
+        nx, ny = self.volume.shape[:2]
+        ntg = int(self.cfg.n_time_gates)
+        n_det = len(self.detectors)
+        n_media = self.volume.media.shape[0]
+        eshape = (self.volume.shape if ntg == 1
+                  else (*self.volume.shape, ntg))
+        return {
+            "energy": np.zeros(eshape, np.float32),
+            "exitance": np.zeros((nx, ny), np.float32),
+            "escaped_w": 0.0,
+            "timed_out_w": 0.0,
+            "det_w": np.zeros((n_det, ntg), np.float32),
+            "det_ppath": np.zeros((n_det, n_media), np.float32),
+            "det_rec": [],
+            "det_rec_overflow": 0,
+            "n_launched": 0,
+            "launched_w": 0.0,
+            "steps": 0,
+            "stats": (RoundStats.zeros() if self.cfg.collect_stats
+                      else None),
+        }
+
+    def _merge(self, acc: dict, task: _Task, report: PoolReport) -> None:
+        h = task.harvest
+        task.harvest = None
+        task.merged = True
+        report.merged += 1
+        acc["energy"] += h["energy"]
+        acc["exitance"] += h["exitance"]
+        acc["escaped_w"] += h["escaped_w"]
+        acc["timed_out_w"] += h["timed_out_w"]
+        acc["det_w"] += h["det_w"]
+        acc["det_ppath"] += h["det_ppath"]
+        if h["det_rec"].size:
+            acc["det_rec"].append(h["det_rec"])
+        acc["det_rec_overflow"] += h["det_rec_overflow"]
+        acc["n_launched"] += h["n_launched"]
+        acc["launched_w"] += h["launched_w"]
+        acc["steps"] += h["steps"]
+        if acc["stats"] is not None and h["stats"] is not None:
+            acc["stats"] = acc["stats"].add(h["stats"])
+        w = task.merged_by
+        if w is not None:
+            w.n_merged += 1
+            w.photons_merged += task.chunk.count
+
+    def _result(self, acc: dict) -> SimResult:
+        det_rec = (np.concatenate(acc["det_rec"], axis=0)
+                   if acc["det_rec"] else np.zeros((0, 4), np.uint32))
+        return SimResult(
+            energy=jnp.asarray(acc["energy"]),
+            exitance=jnp.asarray(acc["exitance"]),
+            escaped_w=jnp.float32(acc["escaped_w"]),
+            timed_out_w=jnp.float32(acc["timed_out_w"]),
+            det_w=jnp.asarray(acc["det_w"]),
+            det_ppath=jnp.asarray(acc["det_ppath"]),
+            det_rec=jnp.asarray(det_rec),
+            det_rec_n=jnp.int32(det_rec.shape[0]),
+            det_rec_overflow=jnp.int32(acc["det_rec_overflow"]),
+            n_launched=jnp.int32(acc["n_launched"]),
+            launched_w=jnp.float32(acc["launched_w"]),
+            steps=jnp.int32(acc["steps"]),
+            stats=acc["stats"],
+        )
+
+    # -- checkpoint / resume -------------------------------------------------
+
+    def _run_key(self, n_photons: int, chunk_size: int, seed: int,
+                 src: PhotonSource) -> np.ndarray:
+        """Campaign identity: mixing checkpoints across different
+        configs would merge incompatible accumulators."""
+        from repro.detectors import to_dicts
+        from repro.sources import to_dict as source_to_dict
+
+        src_key = (json.dumps(source_to_dict(src), sort_keys=True)
+                   if hasattr(src, "type_name")
+                   else f"<custom:{type(src).__qualname__}>")
+        key = json.dumps({
+            "n_photons": int(n_photons), "chunk_size": int(chunk_size),
+            "seed": int(seed), "source": src_key,
+            "detectors": to_dicts(self.detectors),
+            "record_detected": self.record_detected,
+        }, sort_keys=True)
+        return np.frombuffer(key.encode(), np.uint8)
+
+    def _state_dict(self, acc: dict, frontier: int, tasks: list,
+                    n_photons: int, chunk_size: int, seed: int,
+                    src: PhotonSource) -> dict:
+        det_rec = (np.concatenate(acc["det_rec"], axis=0)
+                   if acc["det_rec"] else np.zeros((0, 4), np.uint32))
+        state = {
+            "energy": acc["energy"].copy(),
+            "exitance": acc["exitance"].copy(),
+            "escaped_w": np.float64(acc["escaped_w"]),
+            "timed_out_w": np.float64(acc["timed_out_w"]),
+            "det_w": acc["det_w"].copy(),
+            "det_ppath": acc["det_ppath"].copy(),
+            "det_rec": det_rec,
+            "det_rec_overflow": np.int64(acc["det_rec_overflow"]),
+            "n_launched": np.int64(acc["n_launched"]),
+            "launched_w": np.float64(acc["launched_w"]),
+            "steps": np.int64(acc["steps"]),
+            "frontier": np.int64(frontier),
+            "quarantined": np.asarray(
+                [(t.chunk.start_id, t.chunk.count)
+                 for t in tasks if t.quarantined], np.int64).reshape(-1, 2),
+            "run_key": self._run_key(n_photons, chunk_size, seed, src),
+        }
+        if acc["stats"] is not None:
+            state["stats"] = np.asarray(
+                [float(v) for v in acc["stats"]], np.float64)
+        return state
+
+    def _save_checkpoint(self, acc, frontier, tasks, n_photons, chunk_size,
+                         seed, src, report: PoolReport) -> None:
+        state = self._state_dict(acc, frontier, tasks, n_photons,
+                                 chunk_size, seed, src)
+        self.checkpointer.save(frontier, state,
+                               extra={"kind": "device_pool",
+                                      "merged": report.merged,
+                                      **{k: v for k, v in
+                                         report.counters().items()
+                                         if isinstance(v, int)}})
+        report.checkpoints += 1
+        if self.tracer is not None:
+            self.tracer.counter("resilience.checkpoint", frontier)
+
+    def _restore(self, acc: dict, tasks: list, n_photons: int,
+                 chunk_size: int, seed: int, src: PhotonSource) -> int:
+        """Load the newest checkpoint into ``acc``; returns the merged
+        frontier (0 when no checkpoint exists yet)."""
+        if self.checkpointer is None:
+            raise ValueError("resume=True needs a checkpointer")
+        if self.checkpointer.latest_step() is None:
+            return 0
+        template = self._state_dict(self._zero_acc(), 0, [], n_photons,
+                                    chunk_size, seed, src)
+        _, state = self.checkpointer.restore(template)
+        want = self._run_key(n_photons, chunk_size, seed, src)
+        got = np.asarray(state["run_key"], np.uint8)
+        if got.shape != want.shape or not np.array_equal(got, want):
+            raise ValueError(
+                f"checkpoint belongs to a different campaign: "
+                f"{bytes(got).decode()} vs {bytes(want).decode()}")
+        acc["energy"] = np.asarray(state["energy"], np.float32).copy()
+        acc["exitance"] = np.asarray(state["exitance"], np.float32).copy()
+        acc["escaped_w"] = float(state["escaped_w"])
+        acc["timed_out_w"] = float(state["timed_out_w"])
+        acc["det_w"] = np.asarray(state["det_w"], np.float32).copy()
+        acc["det_ppath"] = np.asarray(state["det_ppath"], np.float32).copy()
+        rec = np.asarray(state["det_rec"], np.uint32).reshape(-1, 4)
+        acc["det_rec"] = [rec] if rec.size else []
+        acc["det_rec_overflow"] = int(state["det_rec_overflow"])
+        acc["n_launched"] = int(state["n_launched"])
+        acc["launched_w"] = float(state["launched_w"])
+        acc["steps"] = int(state["steps"])
+        if acc["stats"] is not None and "stats" in state:
+            acc["stats"] = RoundStats.from_vector(
+                np.asarray(state["stats"], np.float64))
+        quarantined = {int(s) for s, _ in
+                       np.asarray(state["quarantined"],
+                                  np.int64).reshape(-1, 2)}
+        frontier = int(state["frontier"])
+        for t in tasks[:frontier]:
+            if t.chunk.start_id in quarantined:
+                t.quarantined = True
+        return frontier
+
+    # -- telemetry -----------------------------------------------------------
+
+    def _emit_counters(self, report: PoolReport) -> None:
+        report.rebound = getattr(self, "_rebound_count", 0)
+        self._rebound_count = 0
+        if self.tracer is None:
+            return
+        for k, v in report.counters().items():
+            self.tracer.counter(f"resilience.{k}", v)

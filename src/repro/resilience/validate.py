@@ -1,0 +1,113 @@
+"""Merge-guard validation of per-chunk results (DESIGN.md §resilience).
+
+A corrupted chunk that reaches the host-side accumulator poisons the
+whole campaign: one NaN voxel NaNs every downstream fluence sum, and a
+silently short-launched chunk skews the normalization.  The schedulers
+therefore harvest every chunk to host numpy first and run it through
+:func:`validate_chunk` *before* merging; a rejected chunk is requeued
+(bit-identical replay makes that free) instead of corrupting the
+accumulator.
+
+Checks, in order of cost:
+
+  * scalar accounting is finite and a chunk launched exactly the
+    photons it was assigned (``n_launched == chunk.count``);
+  * every grid (energy, exitance, detector TPSF, partial pathlengths)
+    is finite and non-negative — NaN/inf *or* negative-weight
+    corruption is caught;
+  * the per-chunk energy balance closes: ``launched_w = absorbed +
+    escaped + timed_out + roulette residue`` with ``|residue| /
+    launched_w <= max_residue_frac``.  The residue of a healthy chunk
+    is the unbiased Russian-roulette leftover (|residue_frac| < 1e-4
+    for the benchmark volumes); the default tolerance of 5e-3 leaves
+    headroom for very small chunks while still rejecting any
+    corruption large enough to matter.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# SimResult fields harvested to host numpy before validation/merge.
+# det_rec is trimmed to its valid rows at harvest time so buffered
+# copies don't pin the full capacity buffer.
+_GRID_FIELDS = ("energy", "exitance", "det_w", "det_ppath")
+_SCALAR_FIELDS = ("escaped_w", "timed_out_w", "launched_w")
+
+
+def harvest_result(res) -> dict:
+    """Copy one SimResult's fields to host numpy (blocks on readiness).
+
+    Returns a plain dict the schedulers buffer, validate, and merge —
+    detached from device memory so buffered out-of-order chunks don't
+    hold device buffers alive.
+    """
+    out = {
+        "energy": np.asarray(res.energy),
+        "exitance": np.asarray(res.exitance),
+        "escaped_w": float(res.escaped_w),
+        "timed_out_w": float(res.timed_out_w),
+        "det_w": np.asarray(res.det_w),
+        "det_ppath": np.asarray(res.det_ppath),
+        "det_rec": np.asarray(res.det_rec)[: int(res.det_rec_n)],
+        "det_rec_overflow": int(res.det_rec_overflow),
+        "n_launched": int(res.n_launched),
+        "launched_w": float(res.launched_w),
+        "steps": int(np.max(np.asarray(res.steps))),
+        "stats": None,
+    }
+    if res.stats is not None:
+        from repro.telemetry.stats import RoundStats
+
+        out["stats"] = RoundStats(*(np.asarray(v) for v in res.stats))
+    return out
+
+
+def validate_chunk(harvest: dict, expected_photons: int | None = None,
+                   max_residue_frac: float = 5e-3) -> list[str]:
+    """Validate one harvested chunk; returns a list of defects (empty =
+    the chunk is safe to merge)."""
+    errs: list[str] = []
+    for k in _SCALAR_FIELDS:
+        if not np.isfinite(harvest[k]):
+            errs.append(f"{k} is not finite ({harvest[k]!r})")
+    if expected_photons is not None and \
+            harvest["n_launched"] != int(expected_photons):
+        errs.append(f"launched {harvest['n_launched']} photons, chunk "
+                    f"assigned {int(expected_photons)}")
+    for k in _GRID_FIELDS:
+        a = harvest[k]
+        if a.size == 0:
+            continue
+        if not np.isfinite(a).all():
+            errs.append(f"{k} contains {int((~np.isfinite(a)).sum())} "
+                        f"non-finite value(s)")
+        elif float(a.min()) < 0.0:
+            errs.append(f"{k} contains negative weight "
+                        f"(min {float(a.min()):.3g})")
+    if errs:
+        # the residue check below would just re-report NaN arithmetic
+        return errs
+    launched = harvest["launched_w"]
+    residue = (launched - float(harvest["energy"].sum())
+               - harvest["escaped_w"] - harvest["timed_out_w"])
+    frac = residue / max(launched, 1.0)
+    if abs(frac) > max_residue_frac:
+        errs.append(f"energy-balance residue {frac:.3e} of launched "
+                    f"weight exceeds {max_residue_frac:.1e} "
+                    f"(launched={launched:.4f}, "
+                    f"absorbed={float(harvest['energy'].sum()):.4f}, "
+                    f"escaped={harvest['escaped_w']:.4f}, "
+                    f"timed_out={harvest['timed_out_w']:.4f})")
+    return errs
+
+
+def corrupt_harvest(harvest: dict) -> dict:
+    """NaN-corrupt one harvested chunk (the FaultInjector's ``p_nan``
+    fault, applied to the host-side copy so device results and other
+    chunks are untouched)."""
+    bad = dict(harvest)
+    energy = harvest["energy"].copy()
+    energy.flat[0] = np.nan
+    bad["energy"] = energy
+    return bad

@@ -267,14 +267,13 @@ def fit_device_models(events_or_trace, name: str | None = None) -> dict:
 
     ``events_or_trace`` is a list of :class:`SpanEvent` (a live
     ``Tracer.events``) or anything :func:`load_chrome_trace` accepts (a
-    saved ``--trace-out`` path).  Devices whose samples span >= 2
-    distinct photon counts get the paper's full ``T = a*n + T0`` fit via
-    ``loadbalance.fit_pilot``; equal-size samples (the common fixed
-    chunk-size case) fall back to the aggregate-throughput model
-    ``a = sum(T) / sum(n), t0 = 0``.  The result plugs straight into
+    saved ``--trace-out`` path).  Fitting follows the shared rule in
+    ``loadbalance.model_from_samples`` (full ``T = a*n + T0`` fit when
+    the samples span >= 2 distinct photon counts, aggregate-throughput
+    fallback otherwise).  The result plugs straight into
     ``loadbalance.PARTITIONERS`` / ``heterogeneous_partition``.
     """
-    from repro.core.loadbalance import DeviceModel, fit_pilot
+    from repro.core.loadbalance import DeviceModel, model_from_samples
 
     events = events_or_trace
     if not (isinstance(events, (list, tuple)) and
@@ -282,14 +281,7 @@ def fit_device_models(events_or_trace, name: str | None = None) -> dict:
         events = load_chrome_trace(events_or_trace)
     models: dict[str, DeviceModel] = {}
     for device, samples in device_samples(events, name=name).items():
-        ns = [n for n, _ in samples]
-        ts = [t for _, t in samples]
-        if len(set(ns)) >= 2:
-            models[device] = fit_pilot(ns, ts, name=device)
-        else:
-            total_n = sum(ns)
-            if total_n <= 0:
-                continue
-            models[device] = DeviceModel(name=device,
-                                         a=sum(ts) / total_n, t0=0.0)
+        model = model_from_samples(samples, name=device)
+        if model is not None:
+            models[device] = model
     return models
