@@ -14,7 +14,6 @@ bounds the accumulation overhead from above.
 
 from __future__ import annotations
 
-import dataclasses
 import json
 
 from benchmarks.common import get_bench, photons_per_ms
@@ -29,7 +28,6 @@ def run(n_photons=30_000, size=40, quick=False):
     results = {}
     for bench in ("B1", "B2", "B2a"):
         vol, phys = get_bench(bench, size)
-        deposit = bench != "B2"  # B2 bounds accumulation overhead
         rows = {}
 
         def cfg(deposit_mode, specialize):

@@ -34,7 +34,6 @@ import jax
 import numpy as np
 
 from benchmarks.common import SCHEMA_VERSION, get_bench, time_sim
-from repro.core import analysis as An
 from repro.core import simulator as S
 from repro.core.volume import SimConfig
 from repro.kernels.photon_step.photon_step import default_interpret

@@ -14,7 +14,6 @@ from __future__ import annotations
 import json
 import os
 import re
-import shutil
 import tempfile
 from typing import Any
 
@@ -33,7 +32,7 @@ def _flatten_to_arrays(tree: PyTree) -> dict[str, np.ndarray]:
         key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                        for k in path)
         arr = np.asarray(leaf)
-        if arr.dtype not in (np.float32, np.float64, np.int32, np.int64,
+        if arr.dtype not in (np.float32, np.float64, np.int32, np.int64,  # reprolint: disable=REP301 - dtype allowlist, not a cast
                              np.uint32, np.uint64, np.int8, np.uint8,
                              np.int16, np.uint16, np.bool_, np.float16):
             arr = arr.astype(np.float32)  # bf16 etc.: no native npz dtype

@@ -66,7 +66,7 @@ def tpsf(result: SimResult, cfg: SimConfig) -> tuple[np.ndarray, np.ndarray]:
     unit launched weight per ns — the quantity diffuse-optics fits
     compare against analytic TPSF models.
     """
-    det_w = np.asarray(result.det_w, np.float64)
+    det_w = np.asarray(result.det_w, np.float64)  # reprolint: disable=REP301 - host-side detector reduction
     if det_w.size and det_w.shape[1] != cfg.n_time_gates:
         raise ValueError(
             f"result has {det_w.shape[1]} gates but cfg.n_time_gates="
@@ -82,8 +82,8 @@ def detector_mean_ppath(result: SimResult) -> np.ndarray:
     detected-photon statistics).  Rows of detectors that caught nothing
     are zero.
     """
-    det_ppath = np.asarray(result.det_ppath, np.float64)
-    tot_w = np.asarray(result.det_w, np.float64).sum(axis=1, keepdims=True)
+    det_ppath = np.asarray(result.det_ppath, np.float64)  # reprolint: disable=REP301 - host-side detector reduction
+    tot_w = np.asarray(result.det_w, np.float64).sum(axis=1, keepdims=True)  # reprolint: disable=REP301 - host-side detector reduction
     return np.where(tot_w > 0, det_ppath / np.maximum(tot_w, 1e-20), 0.0)
 
 
@@ -99,12 +99,12 @@ def rescale_detected(result: SimResult, volume: Volume,
     otherwise (the classic white-Monte-Carlo rescaling).
     Returns (n_det,) rescaled detected weight.
     """
-    new_mua = np.asarray(new_mua, np.float64)
-    old_mua = np.asarray(volume.media, np.float64)[:, 0]
+    new_mua = np.asarray(new_mua, np.float64)  # reprolint: disable=REP301 - host-side rescaling math
+    old_mua = np.asarray(volume.media, np.float64)[:, 0]  # reprolint: disable=REP301 - host-side rescaling math
     if new_mua.shape != old_mua.shape:
         raise ValueError(f"new_mua must have shape {old_mua.shape}")
     mean_l = detector_mean_ppath(result)            # (n_det, n_media)
-    tot_w = np.asarray(result.det_w, np.float64).sum(axis=1)
+    tot_w = np.asarray(result.det_w, np.float64).sum(axis=1)  # reprolint: disable=REP301 - host-side rescaling math
     return tot_w * np.exp(-mean_l @ (new_mua - old_mua))
 
 
@@ -130,7 +130,7 @@ def jacobian_medium_sums(jacobian, volume: Volume,
     to :func:`rescale_detected`, whose first-order expansion is
     ``dW_d = -sum_m det_ppath[d, m] * dmua_m``.
     """
-    jac = np.asarray(jacobian, np.float64)
+    jac = np.asarray(jacobian, np.float64)  # reprolint: disable=REP301 - host-side Jacobian reduction
     if jac.ndim not in (4, 5):
         raise ValueError(
             f"jacobian must be (nx, ny, nz, n_det[, ntg]), got shape "
@@ -142,7 +142,7 @@ def jacobian_medium_sums(jacobian, volume: Volume,
     n_media = volume.media.shape[0]
     trail = jac.shape[3:]                      # (n_det,) or (n_det, ntg)
     flat = jac.reshape(-1, *trail)
-    out = np.zeros(trail + (n_media,), np.float64)
+    out = np.zeros(trail + (n_media,), np.float64)  # reprolint: disable=REP301 - host-side Jacobian reduction
     for m in range(n_media):
         out[..., m] = flat[labels == m].sum(axis=0)
     if jac.ndim == 5 and not per_gate:

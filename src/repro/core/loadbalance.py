@@ -83,8 +83,10 @@ def fit_pilot(ns: Sequence[float], times: Sequence[float], name: str = "dev",
     else:
         import numpy as np
 
-        A = np.stack([np.asarray(ns, float), np.ones(len(ns))], axis=1)
-        (a, t0), *_ = np.linalg.lstsq(A, np.asarray(times, float), rcond=None)
+        A = np.stack([np.asarray(ns, np.float64),  # reprolint: disable=REP301 - host-side lstsq on pilot timings
+                      np.ones(len(ns))], axis=1)
+        (a, t0), *_ = np.linalg.lstsq(
+            A, np.asarray(times, np.float64), rcond=None)  # reprolint: disable=REP301 - host-side lstsq on pilot timings
     a = float(a)
     if not (math.isfinite(a) and a > 0.0):
         # a noisy pilot (e.g. the larger run timed *faster* than the

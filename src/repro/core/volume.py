@@ -23,7 +23,6 @@ the published optical properties:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -145,7 +144,7 @@ class Source:
         return jnp.asarray(self.pos, dtype=jnp.float32)
 
     def dir_array(self) -> jnp.ndarray:
-        d = np.asarray(self.dir, dtype=np.float64)
+        d = np.asarray(self.dir, dtype=np.float64)  # reprolint: disable=REP301 - f64 normalize, f32 result
         d = d / np.linalg.norm(d)
         return jnp.asarray(d, dtype=jnp.float32)
 

@@ -50,7 +50,6 @@ from __future__ import annotations
 
 import functools
 import warnings
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +58,7 @@ from jax.experimental import pallas as pl
 from repro.core import photon as ph
 from repro.core.volume import SimConfig
 from repro.detectors import accumulate_capture, update_capture
+from repro.kernels.photon_step import spec as kspec
 
 
 def default_interpret() -> bool:
@@ -313,6 +313,12 @@ def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
     n_det = 0 if det_geom is None else det_geom.shape[0]
     if record and not n_det:
         raise ValueError("record=True requires detectors (det_geom)")
+    if not interpret:
+        # compiled mode only: the interpreter has no VMEM to overflow,
+        # and the CPU benches legitimately run configs (60^3, ntg=32)
+        # the hardware budget rejects
+        kspec.check_vmem(nvox, nxy, ntg, block_lanes, n_media, n_det,
+                         record, jac_cols, stats)
 
     def lane_spec(extra=()):
         return pl.BlockSpec((block_lanes,) + extra,
@@ -396,6 +402,9 @@ def photon_step_pallas(labels_flat, media, state: ph.PhotonState,
         interpret=interpret,
     )(*operands)
 
+    assert len(outs) == kspec.output_arity(
+        n_det, record, jac_cols, stats, packed_state=False), \
+        "pallas output list drifted from kernels/photon_step/spec.py"
     new_state = ph.PhotonState(
         pos=outs[0], dir=outs[1], ivox=outs[2], w=outs[3], s_left=outs[4],
         t=outs[5], rng=outs[6], alive=outs[7] != 0,

@@ -17,7 +17,6 @@ import numpy as np
 from repro import detectors as D
 from repro import telemetry as T
 from repro.core import analysis as A
-from repro.core import loadbalance as LB
 from repro.core import simulator as S
 from repro.core import volume as V
 from repro.core.multidevice import ChunkScheduler, simulate_sharded

@@ -1,0 +1,359 @@
+"""reprolint — repo-specific static analysis for the photon-transport stack.
+
+The stack depends on a handful of hand-enforced contracts (DESIGN.md
+§static-analysis): the jnp round executor, the Pallas kernel and the
+``ref.py`` oracle must stay mirrored; everything traced must stay
+float32 and splitmix-seeded; Pallas block shapes must fit the VMEM
+budget; the benchmark writers must stamp their schema version.  Every
+PR since PR 2 re-checked those by hand — reprolint turns them into
+machine-checked rules that run in CI before the test lanes.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.lint                # human output
+    PYTHONPATH=src python -m repro.lint --format json  # CI / tooling
+    PYTHONPATH=src python -m repro.lint --write-baseline
+
+Architecture:
+
+* :class:`Rule` subclasses declare an id (``REP101``...), severity and
+  either ``check_module`` (runs per in-scope module) or ``check``
+  (runs once over the whole repo context).  The registry lives in
+  :mod:`repro.lint.rules`.
+* Findings can be suppressed three ways: a same-line
+  ``# reprolint: disable=REP201`` pragma (with ``disable=all`` as the
+  big hammer — annotate *why* in the surrounding comment), the
+  committed ``.reprolint.json`` baseline (grandfathered findings, see
+  :mod:`repro.lint.baseline`), or ``--rules`` selection.
+* The engine never imports the code under analysis — it parses it.
+  Fixture trees in tests/test_lint.py exercise every rule on
+  deliberately-broken snippets.
+
+Adding a rule: subclass :class:`Rule` in a module under
+``repro/lint/rules/``, append it to ``rules.ALL_RULES``, give it a
+fixture test proving it fires (and one proving it stays quiet on clean
+code), and document it in DESIGN.md §static-analysis.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import re
+from pathlib import Path
+from typing import Iterable, Iterator
+
+from repro.lint import astutil
+
+__all__ = [
+    "Finding", "Module", "Context", "Rule", "LintReport", "run_lint",
+    "discover_modules", "traced_closure", "TRACED_ENTRYPOINTS",
+]
+
+# Modules whose import closure is "traced code": everything reachable
+# (via module-level imports) from the round executors, the kernel
+# mirrors and the replay driver runs under jit/pallas tracing, so the
+# determinism and dtype rules police it.  Function-level lazy imports
+# are deliberately NOT followed — that is the repo's idiom for keeping
+# host-side schedulers (multidevice, resilience) out of the traced
+# surface.
+TRACED_ENTRYPOINTS = (
+    "repro.core.simulator",
+    "repro.replay",
+    "repro.kernels.photon_step.ops",
+    "repro.kernels.photon_step.ref",
+    "repro.kernels.photon_step.photon_step",
+)
+
+_PRAGMA_RE = re.compile(r"#\s*reprolint:\s*disable=([A-Za-z0-9_,\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str          # "REP201"
+    name: str          # "determinism"
+    severity: str      # "error" | "warning"
+    path: str          # repo-relative posix path
+    line: int          # 1-indexed
+    col: int
+    message: str
+    fingerprint: str = ""  # stable id for the baseline (engine-filled)
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.rule}[{self.name}] {self.message}")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class Module:
+    """A parsed source file."""
+
+    name: str          # dotted module name ("repro.core.photon")
+    path: Path
+    relpath: str       # repo-relative posix path
+    source: str
+    lines: list[str]
+    tree: ast.Module
+    aliases: dict[str, str]
+
+    @property
+    def package(self) -> str:
+        if self.path.name == "__init__.py":
+            return self.name
+        return self.name.rpartition(".")[0]
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1]
+        return ""
+
+
+class Context:
+    """Everything a rule can see: the parsed repo."""
+
+    def __init__(self, root: Path, modules: dict[str, Module]):
+        self.root = root
+        self.modules = modules
+        self.by_relpath = {m.relpath: m for m in modules.values()}
+        self._traced: frozenset[str] | None = None
+
+    def module(self, name: str) -> Module | None:
+        return self.modules.get(name)
+
+    @property
+    def traced_modules(self) -> frozenset[str]:
+        if self._traced is None:
+            self._traced = traced_closure(self)
+        return self._traced
+
+    def finding(self, rule: "Rule", mod: Module | None, node: ast.AST | None,
+                message: str, path: str | None = None) -> Finding:
+        line = getattr(node, "lineno", 1) if node is not None else 1
+        col = getattr(node, "col_offset", 0) if node is not None else 0
+        return Finding(rule=rule.id, name=rule.name, severity=rule.severity,
+                       path=path or (mod.relpath if mod else "<repo>"),
+                       line=line, col=col, message=message)
+
+
+class Rule:
+    """Base class for reprolint rules.
+
+    Subclasses set ``id``/``name``/``severity``/``description`` and
+    override ``check_module`` (per-module rules; gate scope via
+    ``applies``) or ``check`` (whole-repo rules).
+    """
+
+    id: str = "REP000"
+    name: str = "base"
+    severity: str = "error"
+    description: str = ""
+
+    def applies(self, mod: Module, ctx: Context) -> bool:
+        return True
+
+    def check_module(self, mod: Module, ctx: Context) -> Iterator[Finding]:
+        return iter(())
+
+    def check(self, ctx: Context) -> Iterator[Finding]:
+        for mod in sorted(ctx.modules.values(), key=lambda m: m.relpath):
+            if self.applies(mod, ctx):
+                yield from self.check_module(mod, ctx)
+
+
+def discover_modules(root: Path) -> dict[str, Module]:
+    """Parse the lintable file set: ``src/repro/**`` + ``benchmarks/*``.
+
+    Tests are consumers, not part of the linted surface (their imports
+    do feed the reachability roots — the rule reads them separately).
+    """
+    root = Path(root)
+    modules: dict[str, Module] = {}
+    specs = [(root / "src", sorted((root / "src" / "repro").rglob("*.py"))
+              if (root / "src" / "repro").is_dir() else []),
+             (root, sorted((root / "benchmarks").glob("*.py"))
+              if (root / "benchmarks").is_dir() else [])]
+    for base, paths in specs:
+        for path in paths:
+            if "__pycache__" in path.parts:
+                continue
+            rel = path.relative_to(base)
+            parts = list(rel.with_suffix("").parts)
+            if parts[-1] == "__init__":
+                parts = parts[:-1]
+            name = ".".join(parts)
+            try:
+                source = path.read_text()
+                tree = ast.parse(source, filename=str(path))
+            except (OSError, SyntaxError):
+                continue  # unparseable files are ruff/pyflakes' problem
+            pkg = name if path.name == "__init__.py" else \
+                name.rpartition(".")[0]
+            modules[name] = Module(
+                name=name, path=path,
+                relpath=path.relative_to(root).as_posix(),
+                source=source, lines=source.splitlines(), tree=tree,
+                aliases=astutil.build_alias_map(tree, pkg))
+    return modules
+
+
+def module_level_imports(mod: Module) -> set[str]:
+    """Absolute module names imported at a module's top level."""
+    out: set[str] = set()
+    for node in mod.tree.body:
+        out |= _imports_of(node, mod.package)
+    return out
+
+
+def all_imports(mod: Module) -> set[str]:
+    """Absolute module names imported anywhere (lazy imports included)."""
+    out: set[str] = set()
+    for node in ast.walk(mod.tree):
+        out |= _imports_of(node, mod.package)
+    return out
+
+
+def _imports_of(node: ast.AST, package: str) -> set[str]:
+    out: set[str] = set()
+    if isinstance(node, ast.Import):
+        for a in node.names:
+            out.add(a.name)
+    elif isinstance(node, ast.ImportFrom):
+        base = astutil.resolve_from_module(node, package)
+        if base:
+            out.add(base)
+            for a in node.names:
+                if a.name != "*":
+                    out.add(f"{base}.{a.name}")
+    return out
+
+
+def _close_over(ctx: Context, roots: Iterable[str],
+                imports_of) -> frozenset[str]:
+    seen: set[str] = set()
+    stack = [r for r in roots if r in ctx.modules]
+    while stack:
+        name = stack.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        # importing a submodule imports its ancestor packages too
+        parts = name.split(".")
+        for i in range(1, len(parts)):
+            anc = ".".join(parts[:i])
+            if anc in ctx.modules and anc not in seen:
+                stack.append(anc)
+        mod = ctx.modules.get(name)
+        if mod is None:
+            continue
+        for imp in imports_of(mod):
+            if imp in ctx.modules and imp not in seen:
+                stack.append(imp)
+    return frozenset(seen)
+
+
+def traced_closure(ctx: Context) -> frozenset[str]:
+    """Modules reachable from the traced entrypoints via top-level
+    imports (the determinism / dtype scope)."""
+    return _close_over(ctx, TRACED_ENTRYPOINTS, module_level_imports)
+
+
+def reachable_closure(ctx: Context, roots: Iterable[str]) -> frozenset[str]:
+    """Modules reachable from ``roots`` via *any* import (reachability
+    scope: lazy imports keep a module alive)."""
+    return _close_over(ctx, roots, all_imports)
+
+
+def pragma_rules(line_text: str) -> set[str] | None:
+    """Rule ids disabled by a same-line pragma, or None."""
+    m = _PRAGMA_RE.search(line_text)
+    if not m:
+        return None
+    return {p.strip() for p in m.group(1).split(",") if p.strip()}
+
+
+def _fingerprint(f: Finding, ctx: Context) -> str:
+    mod = ctx.by_relpath.get(f.path)
+    text = mod.line_text(f.line).strip() if mod else ""
+    raw = f"{f.rule}:{f.path}:{text}"
+    return hashlib.sha1(raw.encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class LintReport:
+    findings: list[Finding]           # live (reported) findings
+    suppressed_pragma: int
+    suppressed_baseline: int
+    n_modules: int
+    rules_run: list[str]
+
+    @property
+    def clean(self) -> bool:
+        return not self.findings
+
+    def to_json(self) -> dict:
+        return {
+            "version": 1,
+            "clean": self.clean,
+            "n_modules": self.n_modules,
+            "rules": self.rules_run,
+            "suppressed": {"pragma": self.suppressed_pragma,
+                           "baseline": self.suppressed_baseline},
+            "findings": [f.to_json() for f in self.findings],
+        }
+
+
+def run_lint(root: Path | str, rules: Iterable[Rule] | None = None,
+             baseline: dict[str, int] | None = None,
+             rule_ids: Iterable[str] | None = None) -> LintReport:
+    """Lint the repo at ``root`` and return the report.
+
+    ``rule_ids`` selects a subset of the registered rules by id (used
+    by fixture tests to isolate one rule); ``baseline`` is the
+    fingerprint -> count map of grandfathered findings.
+    """
+    from repro.lint.rules import ALL_RULES
+
+    root = Path(root)
+    active = list(rules) if rules is not None else [r() for r in ALL_RULES]
+    if rule_ids is not None:
+        wanted = set(rule_ids)
+        active = [r for r in active if r.id in wanted or r.name in wanted]
+    ctx = Context(root, discover_modules(root))
+
+    raw: list[Finding] = []
+    for rule in active:
+        raw.extend(rule.check(ctx))
+    raw.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+
+    live: list[Finding] = []
+    n_pragma = 0
+    for f in raw:
+        mod = ctx.by_relpath.get(f.path)
+        disabled = pragma_rules(mod.line_text(f.line)) if mod else None
+        if disabled and (f.rule in disabled or "all" in disabled):
+            n_pragma += 1
+            continue
+        live.append(dataclasses.replace(f, fingerprint=_fingerprint(f, ctx)))
+
+    n_base = 0
+    if baseline:
+        budget = dict(baseline)
+        kept = []
+        for f in live:
+            if budget.get(f.fingerprint, 0) > 0:
+                budget[f.fingerprint] -= 1
+                n_base += 1
+            else:
+                kept.append(f)
+        live = kept
+
+    return LintReport(findings=live, suppressed_pragma=n_pragma,
+                      suppressed_baseline=n_base,
+                      n_modules=len(ctx.modules),
+                      rules_run=[r.id for r in active])

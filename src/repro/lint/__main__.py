@@ -1,0 +1,94 @@
+"""reprolint CLI:  python -m repro.lint [options]
+
+Exit codes: 0 clean (or fully baselined), 1 findings, 2 usage/internal
+error.  CI runs ``--format json`` before the test lanes and fails on
+any non-baselined finding (.github/workflows/ci.yml `lint` job).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.lint import run_lint
+from repro.lint.baseline import (baseline_path, load_baseline,
+                                 save_baseline)
+from repro.lint.rules import ALL_RULES
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="repo-specific static analysis (engine parity, "
+                    "determinism, dtype, VMEM; DESIGN.md "
+                    "§static-analysis)")
+    ap.add_argument("--root", default=".",
+                    help="repo root to lint (default: cwd)")
+    ap.add_argument("--format", choices=("human", "json"),
+                    default="human")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids/names to run "
+                         "(default: all)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline file (default: <root>/.reprolint.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report grandfathered findings too")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the current findings as the new baseline "
+                         "and exit 0")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for cls in ALL_RULES:
+            r = cls()
+            print(f"{r.id}  {r.name:<14} [{r.severity}] {r.description}")
+        return 0
+
+    root = Path(args.root).resolve()
+    if not root.is_dir():
+        print(f"error: --root {root} is not a directory", file=sys.stderr)
+        return 2
+    bpath = Path(args.baseline) if args.baseline else baseline_path(root)
+    try:
+        base = {} if (args.no_baseline or args.write_baseline) else \
+            load_baseline(bpath)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    rule_ids = None
+    if args.rules:
+        rule_ids = [r.strip() for r in args.rules.split(",") if r.strip()]
+    report = run_lint(root, baseline=base, rule_ids=rule_ids)
+
+    if args.write_baseline:
+        counts = save_baseline(bpath, report)
+        print(f"wrote {bpath} ({sum(counts.values())} grandfathered "
+              f"finding(s) across {len(counts)} fingerprint(s))")
+        return 0
+
+    if args.format == "json":
+        print(json.dumps(report.to_json(), indent=2))
+    else:
+        for f in report.findings:
+            print(f.format())
+        supp = []
+        if report.suppressed_pragma:
+            supp.append(f"{report.suppressed_pragma} pragma-disabled")
+        if report.suppressed_baseline:
+            supp.append(f"{report.suppressed_baseline} baselined")
+        tail = f" ({', '.join(supp)})" if supp else ""
+        if report.clean:
+            print(f"reprolint: clean — {report.n_modules} modules, "
+                  f"{len(report.rules_run)} rules{tail}")
+        else:
+            print(f"reprolint: {len(report.findings)} finding(s) over "
+                  f"{report.n_modules} modules{tail}")
+    return 0 if report.clean else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

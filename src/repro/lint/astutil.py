@@ -1,0 +1,189 @@
+"""AST helpers shared by the reprolint rules.
+
+Everything here works on plain ``ast`` trees — reprolint never imports
+the modules it checks (linting must not initialize the JAX backend,
+and must work on fixture trees that aren't importable at all).  The
+two workhorses are the import-alias map (so ``np.random.rand`` and
+``numpy.random.rand`` and ``from numpy import random; random.rand``
+all resolve to the same dotted name) and the literal-constant loader
+used to read ``kernels/photon_step/spec.py`` without executing it.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+
+def build_alias_map(tree: ast.AST, package: str = "") -> dict[str, str]:
+    """Map local names to fully-dotted import targets.
+
+    ``import numpy as np``            -> {"np": "numpy"}
+    ``import jax.numpy as jnp``       -> {"jnp": "jax.numpy"}
+    ``import jax.numpy``              -> {"jax": "jax"}
+    ``from numpy import random``      -> {"random": "numpy.random"}
+    ``from x import y as z``          -> {"z": "x.y"}
+    ``from . import volume`` (in package p) -> {"volume": "p.volume"}
+
+    Collected over the whole tree (function-local imports included) —
+    alias resolution is about *naming*, reachability scope is handled
+    separately by the import-graph walk.
+    """
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    aliases[a.asname] = a.name
+                else:
+                    # "import x.y" binds the root package name
+                    root = a.name.split(".")[0]
+                    aliases[root] = root
+        elif isinstance(node, ast.ImportFrom):
+            base = resolve_from_module(node, package)
+            if base is None:
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                aliases[a.asname or a.name] = f"{base}.{a.name}"
+    return aliases
+
+
+def resolve_from_module(node: ast.ImportFrom, package: str) -> str | None:
+    """Absolute module a ``from X import ...`` pulls from, or None."""
+    if node.level == 0:
+        return node.module
+    # relative import: strip (level - 1) trailing components off the
+    # importing module's package
+    parts = package.split(".") if package else []
+    if node.level - 1 > len(parts):
+        return None
+    base = parts[:len(parts) - (node.level - 1)]
+    if node.module:
+        base = base + node.module.split(".")
+    return ".".join(base) if base else None
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` attribute chain as a string, or None for non-chains."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def resolve_dotted(node: ast.AST, aliases: dict[str, str]) -> str | None:
+    """Dotted name with its leading alias expanded (np.x -> numpy.x)."""
+    name = dotted_name(node)
+    if name is None:
+        return None
+    head, _, rest = name.partition(".")
+    if head in aliases:
+        return aliases[head] + ("." + rest if rest else "")
+    return name
+
+
+def matches_prefix(name: str, prefixes: tuple[str, ...]) -> str | None:
+    """The prefix ``name`` falls under, respecting dot boundaries."""
+    for p in prefixes:
+        if name == p or name.startswith(p + "."):
+            return p
+    return None
+
+
+def load_literal_constants(tree: ast.AST) -> dict[str, object]:
+    """Module-level ``NAME = <literal>`` assignments, literal-evaled.
+
+    Used to read the kernel output-spec constants from spec.py without
+    importing it; non-literal assignments are silently skipped.
+    """
+    out: dict[str, object] = {}
+    for node in getattr(tree, "body", []):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            try:
+                out[node.targets[0].id] = ast.literal_eval(node.value)
+            except (ValueError, TypeError, SyntaxError):
+                pass
+    return out
+
+
+def find_function(tree: ast.AST, name: str) -> ast.FunctionDef | None:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                node.name == name:
+            return node
+    return None
+
+
+def param_names(fn: ast.FunctionDef) -> list[str]:
+    a = fn.args
+    return [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+
+
+def is_subsequence(sub: tuple[str, ...], seq: list[str]) -> bool:
+    it = iter(seq)
+    return all(x in it for x in sub)
+
+
+def test_flag_names(test: ast.AST) -> set[str]:
+    """Plain names appearing in an ``if`` test (the guard flags)."""
+    return {n.id for n in ast.walk(test) if isinstance(n, ast.Name)}
+
+
+def literal_env(fn: ast.FunctionDef) -> dict[str, ast.AST]:
+    """Map of simple single-target assignments inside a function.
+
+    Supports one level of constant propagation for the VMEM rule:
+    ``shape = (60, 60, 60)`` followed by ``photon_step_pallas(...,
+    shape, ...)``.  Names rebound more than once are dropped (their
+    value at the call site is ambiguous).
+    """
+    env: dict[str, ast.AST] = {}
+    rebound: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            name = node.targets[0].id
+            if name in env or name in rebound:
+                env.pop(name, None)
+                rebound.add(name)
+            else:
+                env[name] = node.value
+    return env
+
+
+def resolve_literal(node: ast.AST | None, env: dict[str, ast.AST],
+                    _depth: int = 0) -> object:
+    """Literal value of an expression, chasing one level of locals.
+
+    Returns the sentinel :data:`UNRESOLVED` when the expression cannot
+    be reduced to a Python literal statically.
+    """
+    if node is None or _depth > 4:
+        return UNRESOLVED
+    if isinstance(node, ast.Name) and node.id in env:
+        return resolve_literal(env[node.id], env, _depth + 1)
+    try:
+        return ast.literal_eval(node)
+    except (ValueError, TypeError, SyntaxError):
+        return UNRESOLVED
+
+
+class _Unresolved:
+    def __repr__(self) -> str:  # pragma: no cover - repr only
+        return "<unresolved>"
+
+
+UNRESOLVED = _Unresolved()
+
+
+def walk_functions(tree: ast.AST) -> Iterator[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node

@@ -1,0 +1,61 @@
+"""Committed-baseline handling for reprolint.
+
+The baseline file (``.reprolint.json`` at the repo root) grandfathers
+pre-existing findings so a new rule can land before every legacy
+violation is fixed: CI fails only on findings *not* covered by the
+baseline.  The format is a fingerprint -> count map — a fingerprint
+hashes (rule, path, stripped line text), so findings survive pure line
+moves but are re-surfaced when the offending line's content changes.
+
+Policy: prefer fixing or pragma-annotating over baselining — the
+baseline is a ratchet for rule rollout, not a parking lot.  The repo
+is currently fully clean and the committed baseline is empty.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.lint import LintReport
+
+BASELINE_NAME = ".reprolint.json"
+FORMAT_VERSION = 1
+
+
+def baseline_path(root: Path | str) -> Path:
+    return Path(root) / BASELINE_NAME
+
+
+def load_baseline(path: Path | str) -> dict[str, int]:
+    """Fingerprint -> count map; empty when the file doesn't exist."""
+    path = Path(path)
+    if not path.is_file():
+        return {}
+    data = json.loads(path.read_text())
+    if data.get("version") != FORMAT_VERSION:
+        raise ValueError(
+            f"{path}: unsupported baseline version {data.get('version')!r} "
+            f"(this reprolint writes version {FORMAT_VERSION}; regenerate "
+            f"with --write-baseline)")
+    counts = data.get("findings", {})
+    if not isinstance(counts, dict) or \
+            not all(isinstance(v, int) and v > 0 for v in counts.values()):
+        raise ValueError(f"{path}: malformed findings map")
+    return dict(counts)
+
+
+def save_baseline(path: Path | str, report: LintReport) -> dict[str, int]:
+    """Write the report's live findings as the new baseline."""
+    counts: dict[str, int] = {}
+    for f in report.findings:
+        counts[f.fingerprint] = counts.get(f.fingerprint, 0) + 1
+    payload = {
+        "version": FORMAT_VERSION,
+        "comment": ("reprolint grandfathered findings: fingerprint -> "
+                    "count; regenerate with "
+                    "`python -m repro.lint --write-baseline`"),
+        "findings": dict(sorted(counts.items())),
+    }
+    Path(path).write_text(json.dumps(payload, indent=2) + "\n")
+    return counts

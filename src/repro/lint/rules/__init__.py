@@ -1,0 +1,31 @@
+"""reprolint rule registry.
+
+Adding a rule: implement it in a module here, append the class to
+``ALL_RULES``, add fixture tests (positive + negative) to
+tests/test_lint.py, and document it in DESIGN.md §static-analysis.
+Rule ids are stable API — pragmas and baselines reference them.
+"""
+
+from __future__ import annotations
+
+from repro.lint.rules.bench import BenchSchemaRule
+from repro.lint.rules.determinism import DeterminismRule
+from repro.lint.rules.dtype import DtypeRule
+from repro.lint.rules.jit import JitHygieneRule
+from repro.lint.rules.mirror import MirrorRule
+from repro.lint.rules.reach import ReachabilityRule
+from repro.lint.rules.vmem import VmemBudgetRule
+
+ALL_RULES = (
+    MirrorRule,        # REP101 mirror-drift
+    DeterminismRule,   # REP201 determinism
+    DtypeRule,         # REP301 dtype discipline
+    JitHygieneRule,    # REP401 jit hygiene
+    VmemBudgetRule,    # REP501 VMEM budget
+    ReachabilityRule,  # REP601 import-graph reachability
+    BenchSchemaRule,   # REP701 bench schema stamping
+)
+
+__all__ = ["ALL_RULES", "MirrorRule", "DeterminismRule", "DtypeRule",
+           "JitHygieneRule", "VmemBudgetRule", "ReachabilityRule",
+           "BenchSchemaRule"]

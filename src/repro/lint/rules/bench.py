@@ -1,0 +1,74 @@
+"""REP701 — bench-schema: BENCH writers must stamp SCHEMA_VERSION.
+
+The perf-regression gate refuses to compare BENCH_*.json files across
+schema versions (benchmarks/common.py) — but that only works if every
+writer stamps ``"schema_version": SCHEMA_VERSION`` into its meta
+block, importing the constant instead of hardcoding the number.  PR 6
+added the versioning; this rule keeps future writers honest.
+
+Scope: a benchmarks module that both names a ``BENCH_*`` artifact and
+serializes JSON is a writer.  Two findings:
+
+* a writer with no ``"schema_version"`` key at all;
+* a ``"schema_version"`` stamped with a literal instead of the shared
+  ``SCHEMA_VERSION`` constant (hardcoded versions drift silently when
+  common.py bumps).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.lint import Context, Finding, Module, Rule
+from repro.lint.astutil import resolve_dotted
+
+SCHEMA_CONST = "benchmarks.common.SCHEMA_VERSION"
+
+
+class BenchSchemaRule(Rule):
+    id = "REP701"
+    name = "bench-schema"
+    severity = "error"
+    description = ("benchmark writers must stamp schema_version from "
+                   "benchmarks.common.SCHEMA_VERSION, not a literal")
+
+    def applies(self, mod: Module, ctx: Context) -> bool:
+        return mod.name.startswith("benchmarks")
+
+    def check_module(self, mod: Module, ctx: Context) -> Iterator[Finding]:
+        names_bench = any(
+            isinstance(n, ast.Constant) and isinstance(n.value, str) and
+            "BENCH_" in n.value
+            for n in ast.walk(mod.tree))
+        dumps = [n for n in ast.walk(mod.tree)
+                 if isinstance(n, ast.Call) and
+                 resolve_dotted(n.func, mod.aliases) in
+                 ("json.dump", "json.dumps")]
+        if not (names_bench and dumps):
+            return  # not a BENCH writer
+
+        stamped = False
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Dict):
+                continue
+            for k, v in zip(node.keys, node.values):
+                if not (isinstance(k, ast.Constant) and
+                        k.value == "schema_version"):
+                    continue
+                stamped = True  # present (possibly wrongly) — the
+                #                 "never stamps" finding stays quiet
+                if isinstance(v, ast.Constant):
+                    yield ctx.finding(
+                        self, mod, v,
+                        f"schema_version is hardcoded to {v.value!r} — "
+                        f"import SCHEMA_VERSION from benchmarks.common "
+                        f"so the regression gate's version fence stays "
+                        f"in sync")
+        if not stamped:
+            yield ctx.finding(
+                self, mod, dumps[0],
+                "this module writes a BENCH_*.json but never stamps "
+                "\"schema_version\": SCHEMA_VERSION into its meta — "
+                "check_regression.py cannot fence schema drift without "
+                "it")

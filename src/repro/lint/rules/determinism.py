@@ -1,0 +1,110 @@
+"""REP201 — determinism: no ambient nondeterminism in traced code.
+
+The whole stack's bit-identity story (DESIGN.md §determinism) rests on
+one property: every random number and every control decision in traced
+code is a pure function of the 64-bit photon id and the campaign seed,
+via the counter-seeded splitmix32/xorshift128 generators in
+``repro.core.rng``.  Anything ambient breaks replay, multi-device
+merging and the chaos-layer bit-identity anchors — so inside the
+traced closure (modules reachable from the round executors / kernel
+mirrors / replay driver via top-level imports) this rule forbids:
+
+* host RNG: ``numpy.random.*``, the stdlib ``random`` module,
+  ``secrets``, ``uuid``
+* stateful-key RNG: ``jax.random.*`` (the repo's RNG is counter-based
+  by design — a threaded PRNG key would break id-addressed replay)
+* wall clocks: ``time.time/perf_counter/monotonic/...``,
+  ``datetime.now/today/utcnow``
+* iteration over a ``set`` (Python hash-order leaks into trace order)
+
+Host-side code in a traced module (e.g. the autotune helpers in
+simulator.py) annotates intentional uses with
+``# reprolint: disable=REP201`` and a why.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.lint import Context, Finding, Module, Rule
+from repro.lint.astutil import matches_prefix, resolve_dotted
+
+BANNED_PREFIXES = (
+    "numpy.random",
+    "random",
+    "secrets",
+    "uuid",
+    "jax.random",
+    "time.time",
+    "time.time_ns",
+    "time.perf_counter",
+    "time.perf_counter_ns",
+    "time.monotonic",
+    "time.monotonic_ns",
+    "time.process_time",
+    "datetime.datetime.now",
+    "datetime.datetime.today",
+    "datetime.datetime.utcnow",
+    "datetime.date.today",
+)
+
+_WHY = {
+    "numpy.random": "host RNG is not a function of (seed, photon id)",
+    "random": "host RNG is not a function of (seed, photon id)",
+    "secrets": "host RNG is not a function of (seed, photon id)",
+    "uuid": "ambient ids break bit-identical replay",
+    "jax.random": "threaded PRNG keys break id-addressed replay; use "
+                  "the counter-seeded generators in repro.core.rng",
+}
+
+
+class DeterminismRule(Rule):
+    id = "REP201"
+    name = "determinism"
+    severity = "error"
+    description = ("forbid ambient RNG / wall clocks / set iteration in "
+                   "the traced import closure")
+
+    def applies(self, mod: Module, ctx: Context) -> bool:
+        return mod.name in ctx.traced_modules
+
+    def check_module(self, mod: Module, ctx: Context) -> Iterator[Finding]:
+        # ast.walk is breadth-first, so an outer attribute chain is
+        # seen before its own sub-expressions: flag the outermost
+        # match once and skip its descendants
+        skip: set[int] = set()
+        for node in ast.walk(mod.tree):
+            if id(node) in skip:
+                skip.update(id(c) for c in ast.iter_child_nodes(node))
+                continue
+            if isinstance(node, (ast.Attribute, ast.Name)):
+                if isinstance(node, ast.Name) and node.id not in \
+                        mod.aliases:
+                    continue
+                resolved = resolve_dotted(node, mod.aliases)
+                if resolved is None:
+                    continue
+                hit = matches_prefix(resolved, BANNED_PREFIXES)
+                if hit is None:
+                    continue
+                skip.update(id(c) for c in ast.iter_child_nodes(node))
+                why = _WHY.get(hit, "wall-clock values differ across "
+                                    "runs and devices")
+                yield ctx.finding(
+                    self, mod, node,
+                    f"use of `{resolved}` in traced module "
+                    f"`{mod.name}`: {why}")
+            elif isinstance(node, (ast.For, ast.comprehension)):
+                it = node.iter
+                if isinstance(it, ast.Set) or (
+                        isinstance(it, ast.Call) and
+                        isinstance(it.func, ast.Name) and
+                        it.func.id in ("set", "frozenset")):
+                    anchor = node if isinstance(node, ast.For) else it
+                    yield ctx.finding(
+                        self, mod, anchor,
+                        f"iteration over a set in traced module "
+                        f"`{mod.name}`: Python hash order leaks into "
+                        f"trace order — iterate a sorted() or tuple "
+                        f"view instead")

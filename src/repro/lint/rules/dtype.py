@@ -1,0 +1,91 @@
+"""REP301 — dtype discipline: no float64 promotion in repro code.
+
+Everything traced is float32 by contract (DESIGN.md §determinism):
+TPUs have no fast f64, jax runs with x64 disabled, and a float64 leak
+at a trace boundary silently double-rounds or retraces.  Host-side
+analysis code legitimately accumulates in float64 (energy-balance
+sums), but must say so — the rule flags every promotion site repo-wide
+and intentional host-side uses carry a
+``# reprolint: disable=REP301`` pragma with a why, so a reviewer can
+tell a deliberate f64 accumulator from a leak at a glance.
+
+Flagged forms:
+
+* ``np.float64`` / ``np.double`` / ``jnp.float64`` anywhere
+* ``dtype=float`` / ``dtype="float64"`` — the builtin ``float`` *is*
+  float64 as a numpy dtype, the classic accidental promotion
+* bare ``float`` passed positionally to an array constructor or
+  ``.astype`` (``np.asarray(x, float)``)
+
+Pinning a dtype at a host->trace boundary is the fix:
+``jnp.asarray(x, jnp.float32)`` / ``np.asarray(x, np.float32)``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.lint import Context, Finding, Module, Rule
+from repro.lint.astutil import resolve_dotted
+
+F64_NAMES = ("numpy.float64", "numpy.double", "numpy.longdouble",
+             "jax.numpy.float64")
+
+# constructors whose bare-`float` positional argument means dtype=f64
+_DTYPE_POS_CALLS = {"asarray", "array", "zeros", "ones", "full", "empty",
+                    "astype", "arange", "asanyarray"}
+_DTYPE_STRINGS = ("float64", "f8", "d", "double")
+
+
+class DtypeRule(Rule):
+    id = "REP301"
+    name = "dtype"
+    severity = "error"
+    description = ("flag float64-promoting dtypes/literals; traced code "
+                   "is float32 by contract, host-side f64 needs a pragma")
+
+    def applies(self, mod: Module, ctx: Context) -> bool:
+        return mod.name.startswith("repro")
+
+    def check_module(self, mod: Module, ctx: Context) -> Iterator[Finding]:
+        traced = mod.name in ctx.traced_modules
+        where = "traced " if traced else ""
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.Attribute, ast.Name)):
+                resolved = resolve_dotted(node, mod.aliases)
+                if resolved in F64_NAMES:
+                    yield ctx.finding(
+                        self, mod, node,
+                        f"`{resolved}` in {where}module `{mod.name}` "
+                        f"promotes to float64 — traced code is float32 "
+                        f"by contract; host-side f64 accumulation needs "
+                        f"a `# reprolint: disable=REP301` pragma with a "
+                        f"why")
+            elif isinstance(node, ast.keyword) and node.arg == "dtype":
+                v = node.value
+                if isinstance(v, ast.Name) and v.id == "float":
+                    yield ctx.finding(
+                        self, mod, v,
+                        "`dtype=float` is float64 — pin float32 (or "
+                        "np.float64 + pragma if the f64 is deliberate)")
+                elif isinstance(v, ast.Constant) and v.value in \
+                        _DTYPE_STRINGS:
+                    yield ctx.finding(
+                        self, mod, v,
+                        f"`dtype={v.value!r}` is float64 — pin float32 "
+                        f"(or np.float64 + pragma if deliberate)")
+            elif isinstance(node, ast.Call):
+                fname = None
+                if isinstance(node.func, ast.Attribute):
+                    fname = node.func.attr
+                elif isinstance(node.func, ast.Name):
+                    fname = node.func.id
+                if fname in _DTYPE_POS_CALLS:
+                    for arg in node.args:
+                        if isinstance(arg, ast.Name) and arg.id == "float":
+                            yield ctx.finding(
+                                self, mod, arg,
+                                f"bare `float` dtype in `{fname}(...)` "
+                                f"is float64 — pin float32 (or "
+                                f"np.float64 + pragma if deliberate)")

@@ -1,0 +1,195 @@
+"""REP401 — jit hygiene: host syncs in traced bodies, static_argnames.
+
+Two failure modes this repo has actually hit:
+
+* **Host syncs inside traced control flow.**  A ``.item()`` /
+  ``float()`` / ``int()`` / ``np.asarray()`` / ``print()`` on a traced
+  value inside a ``lax.while_loop`` / ``fori_loop`` / ``scan`` /
+  ``cond`` body either crashes at trace time or, worse, silently
+  forces a device sync per iteration.  The rule finds every function
+  *passed to* a ``jax.lax`` control-flow combinator (or decorated with
+  ``pl.when`` / ``jax.jit``) and scans its body.  Python-int coercion
+  of *static* config (``int(cfg.n_time_gates)``) belongs outside those
+  bodies — hoist it, don't pragma it.
+
+* **Invalid / drifting ``static_argnames``.**  A name listed in
+  ``static_argnames`` that is not a parameter of the jitted function
+  is silently ignored by jax — the argument becomes traced, arity
+  flags stop forcing recompilation, and the kernel's output pytree
+  goes polymorphic at runtime.  The rule checks every
+  ``jax.jit(..., static_argnames=...)`` (decorator, ``functools.
+  partial(jax.jit, ...)`` decorator, and direct-call forms) against
+  the wrapped function's parameter list.  (Arity-flag coverage for the
+  kernel wrapper itself is checked by the mirror rule, REP101.)
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.lint import Context, Finding, Module, Rule
+from repro.lint.astutil import param_names, resolve_dotted, walk_functions
+
+_LAX_COMBINATORS = ("jax.lax.while_loop", "jax.lax.fori_loop",
+                    "jax.lax.scan", "jax.lax.cond", "jax.lax.switch",
+                    "jax.lax.map", "jax.lax.associative_scan")
+
+_HOST_CALLS = {"float": "Python float() coerces a traced value on host",
+               "int": "Python int() coerces a traced value on host",
+               "bool": "Python bool() coerces a traced value on host",
+               "print": "host I/O inside a traced body (use jax.debug."
+                        "print)"}
+
+_NP_CALL_PREFIX = "numpy."
+
+
+def _jit_target(call: ast.Call, aliases: dict[str, str]):
+    """(static_argnames node, wrapped-name node) of a jit call, if any.
+
+    Handles ``jax.jit(...)`` and ``functools.partial(jax.jit, ...)``.
+    """
+    resolved = resolve_dotted(call.func, aliases)
+    inner = call
+    if resolved == "functools.partial" and call.args:
+        if resolve_dotted(call.args[0], aliases) != "jax.jit":
+            return None
+    elif resolved != "jax.jit":
+        return None
+    for kw in inner.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            return kw
+    return None
+
+
+def _static_names(kw: ast.keyword) -> list[str] | None:
+    v = kw.value
+    if isinstance(v, ast.Constant) and isinstance(v.value, str):
+        return [v.value]
+    if isinstance(v, (ast.Tuple, ast.List)):
+        names = []
+        for e in v.elts:
+            if not (isinstance(e, ast.Constant) and
+                    isinstance(e.value, str)):
+                return None
+            names.append(e.value)
+        return names
+    return None
+
+
+class JitHygieneRule(Rule):
+    id = "REP401"
+    name = "jit-hygiene"
+    severity = "error"
+    description = ("host syncs inside lax/pallas traced bodies; "
+                   "static_argnames must name real parameters")
+
+    def applies(self, mod: Module, ctx: Context) -> bool:
+        return mod.name.startswith("repro")
+
+    def check_module(self, mod: Module, ctx: Context) -> Iterator[Finding]:
+        fns = {f.name: f for f in walk_functions(mod.tree)}
+        traced_bodies: dict[str, ast.AST] = {}
+
+        # bodies passed to lax combinators / lambdas at the call site
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            resolved = resolve_dotted(node.func, mod.aliases)
+            if resolved not in _LAX_COMBINATORS:
+                continue
+            for arg in node.args:
+                if isinstance(arg, ast.Name) and arg.id in fns:
+                    traced_bodies.setdefault(arg.id, fns[arg.id])
+                elif isinstance(arg, ast.Lambda):
+                    traced_bodies.setdefault(
+                        f"<lambda:{arg.lineno}>", arg)
+
+        # bodies decorated with pl.when(...) or jax.jit
+        for fn in fns.values():
+            for dec in fn.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                resolved = resolve_dotted(target, mod.aliases)
+                if resolved and (resolved.endswith(".when") or
+                                 resolved == "jax.jit"):
+                    traced_bodies.setdefault(fn.name, fn)
+
+        for name, body in sorted(traced_bodies.items(),
+                                 key=lambda kv: kv[1].lineno):
+            yield from self._scan_traced_body(mod, ctx, name, body)
+
+        yield from self._check_static_argnames(mod, ctx, fns)
+
+    def _scan_traced_body(self, mod: Module, ctx: Context, name: str,
+                          body: ast.AST) -> Iterator[Finding]:
+        for node in ast.walk(body):
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "item":
+                yield ctx.finding(
+                    self, mod, node,
+                    f"`.item()` inside traced body `{name}` forces a "
+                    f"host sync per iteration")
+                continue
+            resolved = resolve_dotted(node.func, mod.aliases)
+            if resolved in _HOST_CALLS:
+                yield ctx.finding(
+                    self, mod, node,
+                    f"`{resolved}(...)` inside traced body `{name}`: "
+                    f"{_HOST_CALLS[resolved]} — hoist static config "
+                    f"out of the traced body")
+            elif resolved and resolved.startswith(_NP_CALL_PREFIX) and \
+                    not resolved.startswith("numpy.random"):
+                # np.* on a traced value silently syncs; np.random is
+                # REP201's finding, don't double-report
+                yield ctx.finding(
+                    self, mod, node,
+                    f"`{resolved}(...)` inside traced body `{name}` "
+                    f"materializes on host — use jnp")
+
+    def _check_static_argnames(self, mod: Module, ctx: Context,
+                               fns: dict[str, ast.FunctionDef]
+                               ) -> Iterator[Finding]:
+        # decorator forms: @jax.jit / @partial(jax.jit, static_argnames=...)
+        for fn in fns.values():
+            for dec in fn.decorator_list:
+                if not isinstance(dec, ast.Call):
+                    continue
+                kw = _jit_target(dec, mod.aliases)
+                if kw is None or kw.arg != "static_argnames":
+                    continue
+                names = _static_names(kw)
+                if names is None:
+                    continue
+                params = set(param_names(fn))
+                for s in names:
+                    if s not in params:
+                        yield ctx.finding(
+                            self, mod, kw,
+                            f"static_argnames entry `{s}` is not a "
+                            f"parameter of `{fn.name}` — jax silently "
+                            f"ignores it and the argument is traced")
+        # direct-call form: jitted = jax.jit(fn, static_argnames=...)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call) or \
+                    resolve_dotted(node.func, mod.aliases) != "jax.jit":
+                continue
+            kw = next((k for k in node.keywords
+                       if k.arg == "static_argnames"), None)
+            if kw is None or not node.args:
+                continue
+            wrapped = node.args[0]
+            if not (isinstance(wrapped, ast.Name) and wrapped.id in fns):
+                continue
+            names = _static_names(kw)
+            if names is None:
+                continue
+            params = set(param_names(fns[wrapped.id]))
+            for s in names:
+                if s not in params:
+                    yield ctx.finding(
+                        self, mod, kw,
+                        f"static_argnames entry `{s}` is not a "
+                        f"parameter of `{wrapped.id}` — jax silently "
+                        f"ignores it and the argument is traced")

@@ -1,0 +1,349 @@
+"""REP101 — mirror-drift: the kernel mirrors must match spec.py.
+
+The photon-step contract lives in four places that must stay mirrored
+by hand (DESIGN.md §rounds, §static-analysis): the jit wrapper
+(``kernels/photon_step/ops.py``), the Pallas kernel
+(``photon_step.py``), the pure-jnp oracle (``ref.py``) and the round
+executor's pallas branch (``core/simulator.py``).  Each one encodes
+the same optional output groups — ``(n_det: 3, record: 2, jac_cols:
+1, stats: 1)`` after the 4 base outputs — as guarded tuple appends,
+list appends or slice unpacks.  PRs 2–7 re-mirrored these manually;
+this rule extracts each mirror's (guard flag, arity) sequence from the
+AST and diffs it against the literal constants in
+``kernels/photon_step/spec.py`` (which the runtime also asserts
+against, so lint and runtime cannot disagree).
+
+Checked per mirror:
+
+* entry-point signatures: the core positional prefix (``CORE_PARAMS``)
+  and the optional-extension parameters (``EXT_PARAMS``) in spec
+  order;
+* ``ref.py``: base ``init`` tuple arity (packed state + base outputs)
+  and every guarded ``init = init + (...)`` append;
+* ``photon_step.py``: base ``out_shapes`` list arity (unpacked state +
+  base outputs) and every guarded ``out_shapes += [...]`` append;
+* ``simulator.py``: the pallas branch's ``outs[:k]`` base unpack and
+  every guarded ``outs[cur:cur + k]`` slice unpack (groups it doesn't
+  consume may be absent, but order and arity must match — the
+  ``collect`` local is an accepted alias for the ``stats`` flag);
+* ``ops.py``: the jit wrapper's ``static_argnames`` must cover every
+  output-arity flag, otherwise a traced flag changes the output pytree
+  without recompiling.
+
+The rule is silent when the tree has no ``kernels/photon_step/spec.py``
+(fixture trees for other rules); a present-but-unparseable mirror is
+itself a finding.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.lint import Context, Finding, Rule
+from repro.lint.astutil import (find_function, param_names, test_flag_names)
+
+SPEC_MOD = "repro.kernels.photon_step.spec"
+MIRRORS = (
+    ("repro.kernels.photon_step.ops", "photon_steps"),
+    ("repro.kernels.photon_step.photon_step", "photon_step_pallas"),
+    ("repro.kernels.photon_step.ref", "photon_steps_ref"),
+)
+SIMULATOR_MOD = "repro.core.simulator"
+SIM_BUILDER = "build_sim_fn"
+
+_SPEC_KEYS = ("STATE_FIELDS", "BASE_OUTPUTS", "OUTPUT_GROUPS",
+              "EXT_PARAMS", "CORE_PARAMS")
+
+
+class MirrorRule(Rule):
+    id = "REP101"
+    name = "mirror-drift"
+    severity = "error"
+    description = ("kernel wrapper / pallas kernel / jnp oracle / round "
+                   "executor must match the output spec in "
+                   "kernels/photon_step/spec.py")
+
+    def check(self, ctx: Context) -> Iterator[Finding]:
+        spec_mod = ctx.module(SPEC_MOD)
+        if spec_mod is None:
+            return  # not a kernel tree (rule-isolated fixture)
+        from repro.lint.astutil import load_literal_constants
+        consts = load_literal_constants(spec_mod.tree)
+        missing = [k for k in _SPEC_KEYS if k not in consts]
+        if missing:
+            yield ctx.finding(
+                self, spec_mod, None,
+                f"spec.py is missing literal constants {missing} — the "
+                f"mirror contract must stay statically extractable")
+            return
+        state = tuple(consts["STATE_FIELDS"])
+        base = tuple(consts["BASE_OUTPUTS"])
+        groups = [(tuple(aliases), tuple(members))
+                  for aliases, members in consts["OUTPUT_GROUPS"]]
+        ext = tuple(consts["EXT_PARAMS"])
+        core = tuple(consts["CORE_PARAMS"])
+
+        for mod_name, fn_name in MIRRORS:
+            mod = ctx.module(mod_name)
+            if mod is None:
+                yield ctx.finding(self, spec_mod, None,
+                                  f"mirror module `{mod_name}` not found")
+                continue
+            fn = find_function(mod.tree, fn_name)
+            if fn is None:
+                yield ctx.finding(self, mod, None,
+                                  f"mirror entry point `{fn_name}` not "
+                                  f"found in `{mod_name}`")
+                continue
+            params = param_names(fn)
+            if tuple(params[:len(core)]) != core:
+                yield ctx.finding(
+                    self, mod, fn,
+                    f"`{fn_name}` core parameters "
+                    f"{tuple(params[:len(core)])} != spec.CORE_PARAMS "
+                    f"{core}")
+            it = iter(params)
+            missing_ext = [p for p in ext if p not in it]
+            if missing_ext:
+                yield ctx.finding(
+                    self, mod, fn,
+                    f"`{fn_name}` is missing (or reorders) spec."
+                    f"EXT_PARAMS entries {missing_ext} — every mirror "
+                    f"accepts the extension params in the same order")
+
+        yield from self._check_ref(ctx, state, base, groups)
+        yield from self._check_pallas(ctx, state, base, groups)
+        yield from self._check_simulator(ctx, base, groups)
+        yield from self._check_ops_static(ctx, groups)
+
+    # -- guarded-append extraction -------------------------------------
+
+    def _diff_groups(self, ctx, mod, anchor, what, got, groups,
+                     subset=False) -> Iterator[Finding]:
+        """Diff an extracted (flag, arity, node) sequence against spec.
+
+        ``subset=True`` allows a mirror to skip groups it never
+        consumes (the forward round executor ignores the jac group),
+        but order and arities of the groups it does handle must match.
+        """
+        gi = 0
+        for flag, arity, node in got:
+            while gi < len(groups) and flag not in groups[gi][0]:
+                if not subset:
+                    yield ctx.finding(
+                        self, mod, node,
+                        f"{what}: expected a group guarded by "
+                        f"{'/'.join(groups[gi][0])} (arity "
+                        f"{len(groups[gi][1])}) before `{flag}` — "
+                        f"output groups must follow spec.OUTPUT_GROUPS "
+                        f"order")
+                gi += 1
+            if gi >= len(groups):
+                yield ctx.finding(
+                    self, mod, node,
+                    f"{what}: group guarded by `{flag}` is not in "
+                    f"spec.OUTPUT_GROUPS (or is out of order)")
+                continue
+            want = len(groups[gi][1])
+            if arity != want:
+                yield ctx.finding(
+                    self, mod, node,
+                    f"{what}: group `{flag}` appends {arity} output(s) "
+                    f"but spec.OUTPUT_GROUPS"
+                    f"[{'/'.join(groups[gi][0])}] = "
+                    f"{groups[gi][1]} has {want}")
+            gi += 1
+        if not subset:
+            for aliases, members in groups[gi:]:
+                yield ctx.finding(
+                    self, mod, anchor,
+                    f"{what}: missing output group guarded by "
+                    f"{'/'.join(aliases)} with members {members}")
+
+    def _check_ref(self, ctx, state, base, groups) -> Iterator[Finding]:
+        mod = ctx.module("repro.kernels.photon_step.ref")
+        if mod is None:
+            return
+        fn = find_function(mod.tree, "photon_steps_ref")
+        if fn is None:
+            return
+        base_node = None
+        got = []
+        for stmt in fn.body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name) \
+                    and stmt.targets[0].id == "init" \
+                    and isinstance(stmt.value, ast.Tuple):
+                base_node = stmt
+            elif isinstance(stmt, ast.If):
+                for sub in ast.walk(stmt):
+                    if isinstance(sub, ast.Assign) and \
+                            isinstance(sub.value, ast.BinOp) and \
+                            isinstance(sub.value.op, ast.Add) and \
+                            isinstance(sub.value.left, ast.Name) and \
+                            sub.value.left.id == "init" and \
+                            isinstance(sub.value.right, ast.Tuple):
+                        flags = test_flag_names(stmt.test)
+                        flag = next((a for als, _ in groups for a in als
+                                     if a in flags), None) or \
+                            (sorted(flags)[0] if flags else "?")
+                        got.append((flag, len(sub.value.right.elts), sub))
+        if base_node is None:
+            yield ctx.finding(
+                self, mod, fn,
+                "ref.py: could not find the base `init = (...)` tuple — "
+                "the oracle's output contract must stay statically "
+                "extractable (see spec.py)")
+            return
+        want_base = 1 + len(base)  # packed state + base outputs
+        n = len(base_node.value.elts)
+        if n != want_base:
+            yield ctx.finding(
+                self, mod, base_node,
+                f"ref.py base `init` tuple has {n} elements, spec says "
+                f"{want_base} (packed state + {base})")
+        yield from self._diff_groups(ctx, mod, fn, "ref.py init appends",
+                                     got, groups)
+
+    def _check_pallas(self, ctx, state, base, groups) -> Iterator[Finding]:
+        mod = ctx.module("repro.kernels.photon_step.photon_step")
+        if mod is None:
+            return
+        fn = find_function(mod.tree, "photon_step_pallas")
+        if fn is None:
+            return
+        base_node = None
+        got = []
+        for stmt in fn.body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name) \
+                    and stmt.targets[0].id == "out_shapes" \
+                    and isinstance(stmt.value, ast.List):
+                base_node = stmt
+            elif isinstance(stmt, ast.If):
+                for sub in ast.walk(stmt):
+                    if isinstance(sub, ast.AugAssign) and \
+                            isinstance(sub.op, ast.Add) and \
+                            isinstance(sub.target, ast.Name) and \
+                            sub.target.id == "out_shapes" and \
+                            isinstance(sub.value, (ast.List, ast.Tuple)):
+                        flags = test_flag_names(stmt.test)
+                        flag = next((a for als, _ in groups for a in als
+                                     if a in flags), None) or \
+                            (sorted(flags)[0] if flags else "?")
+                        got.append((flag, len(sub.value.elts), sub))
+        if base_node is None:
+            yield ctx.finding(
+                self, mod, fn,
+                "photon_step.py: could not find the base `out_shapes = "
+                "[...]` list — the kernel's output contract must stay "
+                "statically extractable (see spec.py)")
+            return
+        want_base = len(state) + len(base)  # unpacked state + base
+        n = len(base_node.value.elts)
+        if n != want_base:
+            yield ctx.finding(
+                self, mod, base_node,
+                f"photon_step.py base `out_shapes` has {n} entries, "
+                f"spec says {want_base} ({len(state)} state fields + "
+                f"{base})")
+        yield from self._diff_groups(ctx, mod, fn,
+                                     "photon_step.py out_shapes appends",
+                                     got, groups)
+
+    def _check_simulator(self, ctx, base, groups) -> Iterator[Finding]:
+        mod = ctx.module(SIMULATOR_MOD)
+        if mod is None:
+            return
+        fn = find_function(mod.tree, SIM_BUILDER)
+        if fn is None:
+            yield ctx.finding(
+                self, mod, None,
+                f"simulator.py: round-executor builder `{SIM_BUILDER}` "
+                f"not found")
+            return
+        base_node = None
+        base_n = 0
+        got = []
+        ifs = [n for n in ast.walk(fn) if isinstance(n, ast.If)]
+        in_ifs = {id(s): i for i in ifs for s in ast.walk(i)
+                  if isinstance(s, ast.Assign)}
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Assign) and
+                    isinstance(node.value, ast.Subscript) and
+                    isinstance(node.value.value, ast.Name) and
+                    node.value.value.id == "outs"):
+                continue
+            sl = node.value.slice
+            tgt = node.targets[0]
+            n_tgt = len(tgt.elts) if isinstance(tgt, (ast.Tuple, ast.List)) \
+                else 1
+            if isinstance(sl, ast.Slice) and sl.lower is None and \
+                    isinstance(sl.upper, ast.Constant):
+                base_node = node
+                base_n = sl.upper.value
+                if n_tgt != base_n:
+                    yield ctx.finding(
+                        self, mod, node,
+                        f"simulator.py: base unpack targets {n_tgt} "
+                        f"names from `outs[:{base_n}]`")
+            else:
+                owner = in_ifs.get(id(node))
+                if owner is None:
+                    continue
+                stmt = ifs[owner] if isinstance(owner, int) else owner
+                flags = test_flag_names(stmt.test)
+                flag = next((a for als, _ in groups for a in als
+                             if a in flags), None)
+                if flag is None:
+                    continue
+                got.append((flag, n_tgt, node))
+        if base_node is None:
+            yield ctx.finding(
+                self, mod, fn,
+                "simulator.py: could not find the pallas-branch base "
+                "`... = outs[:k]` unpack — the round executor's output "
+                "contract must stay statically extractable")
+            return
+        want_base = 1 + len(base)
+        if base_n != want_base:
+            yield ctx.finding(
+                self, mod, base_node,
+                f"simulator.py pallas branch unpacks `outs[:{base_n}]`, "
+                f"spec says {want_base} (packed state + {base})")
+        got.sort(key=lambda t: t[2].lineno)  # ast.walk is not source order
+        yield from self._diff_groups(
+            ctx, mod, fn, "simulator.py outs unpacks", got, groups,
+            subset=True)
+
+    def _check_ops_static(self, ctx, groups) -> Iterator[Finding]:
+        mod = ctx.module("repro.kernels.photon_step.ops")
+        if mod is None:
+            return
+        flags = {als[0] for als, _ in groups if als[0] != "n_det"}
+        # n_det is derived from det_geom's shape, not a wrapper param
+        names: set[str] = set()
+        kw_node = None
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.keyword) and \
+                    node.arg == "static_argnames" and \
+                    isinstance(node.value, (ast.Tuple, ast.List)):
+                kw_node = node
+                for e in node.value.elts:
+                    if isinstance(e, ast.Constant) and \
+                            isinstance(e.value, str):
+                        names.add(e.value)
+        if kw_node is None:
+            yield ctx.finding(
+                self, mod, None,
+                "ops.py: no static_argnames found on the jit wrapper — "
+                "the output-arity flags must be static")
+            return
+        missing = sorted(flags - names)
+        if missing:
+            yield ctx.finding(
+                self, mod, kw_node,
+                f"ops.py jit wrapper static_argnames is missing the "
+                f"output-arity flag(s) {missing} — a traced arity flag "
+                f"changes the output pytree without recompiling")

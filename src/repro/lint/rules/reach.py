@@ -1,0 +1,74 @@
+"""REP601 — reachability: no dead modules under src/repro.
+
+Modules that nothing can reach rot silently — the seed template left a
+whole LLM-training scaffold (models/, configs/, optim/...) in the tree
+for seven PRs.  This rule computes the import closure from the repo's
+real entrypoints and flags every ``repro.*`` module outside it.
+
+Roots:
+
+* CLI entrypoints: every ``repro.launch.*`` module and ``repro.lint``
+  itself;
+* the benchmark drivers (``benchmarks/*.py``);
+* the test suite (``tests/*.py``) — tests are parsed for their
+  imports only, they are not themselves linted; a module only a test
+  imports is alive (it is someone's fixture or oracle).
+
+Reachability follows *all* imports, including function-level lazy ones
+(lazy importing is the repo's idiom for keeping heavy deps off the
+trace path, not a sign of death).  A flagged module should be deleted,
+or wired to a real entrypoint — not pragma'd.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.lint import Context, Finding, Module, Rule, all_imports
+from repro.lint import reachable_closure
+from repro.lint.astutil import build_alias_map
+
+
+class ReachabilityRule(Rule):
+    id = "REP601"
+    name = "reachability"
+    severity = "error"
+    description = ("every repro module must be importable from a CLI "
+                   "entrypoint, a benchmark driver, or a test")
+
+    def check(self, ctx: Context) -> Iterator[Finding]:
+        roots = [name for name in ctx.modules
+                 if name.startswith(("repro.launch", "repro.lint",
+                                     "benchmarks"))]
+        seen = set(reachable_closure(ctx, roots))
+
+        # widen by test imports: parse tests/*.py for import targets
+        # (tests are roots, not linted modules)
+        tests_dir = ctx.root / "tests"
+        test_imports: set[str] = set()
+        if tests_dir.is_dir():
+            for path in sorted(tests_dir.glob("*.py")):
+                try:
+                    tree = ast.parse(path.read_text())
+                except (OSError, SyntaxError):
+                    continue
+                fake = Module(name=f"tests.{path.stem}", path=path,
+                              relpath=path.name, source="", lines=[],
+                              tree=tree,
+                              aliases=build_alias_map(tree, "tests"))
+                test_imports |= all_imports(fake)
+        live_roots = [m for m in test_imports if m in ctx.modules]
+        seen |= set(reachable_closure(ctx, live_roots))
+
+        for name in sorted(ctx.modules):
+            if not name.startswith("repro"):
+                continue
+            if name in seen:
+                continue
+            mod = ctx.modules[name]
+            yield ctx.finding(
+                self, mod, None,
+                f"module `{name}` is unreachable from every entrypoint "
+                f"(repro.launch.*, repro.lint, benchmarks/*, tests/*) — "
+                f"delete it or wire it to a real consumer")

@@ -1,0 +1,130 @@
+"""REP501 — VMEM budget: reject over-budget kernel configs statically.
+
+The Pallas kernel keeps the full volume blocks resident in VMEM
+(photon_step.py docstring); a config whose gate-major fluence block +
+Jacobian block + lane blocks exceed the ~16 MiB core budget dies in
+Mosaic lowering at runtime, deep inside a compile.  The runtime now
+validates via ``kernels/photon_step/spec.check_vmem`` before
+dispatching the compiled kernel — this rule applies the *same
+function* (same formula, same threshold; the rule imports it rather
+than duplicating it) to every statically resolvable
+``photon_step_pallas(...)`` / ``photon_steps(...)`` call site.
+
+A site is statically resolvable when ``shape`` (and the knobs that
+matter: ``cfg=SimConfig(n_time_gates=...)``, ``block_lanes``,
+``jac_cols``) reduce to literals, chasing one level of local
+assignments.  Sites passing ``interpret=True`` are skipped — the
+interpreter has no VMEM (that's how the CPU benches legitimately sweep
+ntg=32 on 60^3).  Unresolvable sites are skipped, not guessed: the
+runtime check still covers them.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.lint import Context, Finding, Module, Rule
+from repro.lint.astutil import (UNRESOLVED, literal_env, resolve_dotted,
+                                resolve_literal, walk_functions)
+
+# shared positional prefix of photon_steps / photon_step_pallas
+_POS = ("labels_flat", "media", "state", "shape", "unitinmm", "cfg",
+        "n_steps", "block_lanes", "interpret")
+_TARGET_SUFFIXES = ("photon_step_pallas", "photon_steps")
+
+
+def _call_args(call: ast.Call) -> dict[str, ast.AST]:
+    out: dict[str, ast.AST] = {}
+    for i, a in enumerate(call.args):
+        if i < len(_POS):
+            out[_POS[i]] = a
+    for kw in call.keywords:
+        if kw.arg:
+            out[kw.arg] = kw.value
+    return out
+
+
+def _resolve_ntg(cfg_node: ast.AST | None, env: dict) -> object:
+    """n_time_gates out of a ``SimConfig(...)`` construction, if any."""
+    if cfg_node is None:
+        return UNRESOLVED
+    if isinstance(cfg_node, ast.Name) and cfg_node.id in env:
+        cfg_node = env[cfg_node.id]
+    if isinstance(cfg_node, ast.Call):
+        fname = cfg_node.func.attr if isinstance(cfg_node.func,
+                                                 ast.Attribute) else \
+            getattr(cfg_node.func, "id", None)
+        if fname == "SimConfig":
+            for kw in cfg_node.keywords:
+                if kw.arg == "n_time_gates":
+                    return resolve_literal(kw.value, env)
+            return 1  # SimConfig default
+    return UNRESOLVED
+
+
+class VmemBudgetRule(Rule):
+    id = "REP501"
+    name = "vmem-budget"
+    severity = "error"
+    description = ("statically-resolvable kernel call sites must fit the "
+                   "VMEM budget spec.check_vmem enforces at runtime")
+
+    def check_module(self, mod: Module, ctx: Context) -> Iterator[Finding]:
+        try:
+            from repro.kernels.photon_step import spec
+        except ImportError:  # pragma: no cover - spec ships with the repo
+            return
+        for fn in walk_functions(mod.tree):
+            env = literal_env(fn)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                resolved = resolve_dotted(node.func, mod.aliases) or ""
+                if not resolved.rpartition(".")[2] in _TARGET_SUFFIXES:
+                    continue
+                yield from self._check_site(ctx, mod, node, env, spec)
+
+    def _check_site(self, ctx: Context, mod: Module, call: ast.Call,
+                    env: dict, spec) -> Iterator[Finding]:
+        args = _call_args(call)
+
+        interpret = resolve_literal(args.get("interpret"), env) \
+            if "interpret" in args else None
+        if interpret is True:
+            return  # interpreter has no VMEM budget
+
+        shape = resolve_literal(args.get("shape"), env)
+        if shape is UNRESOLVED or not (
+                isinstance(shape, (tuple, list)) and len(shape) == 3 and
+                all(isinstance(s, int) for s in shape)):
+            return  # not statically resolvable; runtime check covers it
+        ntg = _resolve_ntg(args.get("cfg"), env)
+        if ntg is UNRESOLVED or not isinstance(ntg, int):
+            return
+
+        def lit(name, default):
+            if name not in args:
+                return default
+            v = resolve_literal(args[name], env)
+            return default if v is UNRESOLVED else v
+
+        block_lanes = lit("block_lanes", 256)
+        jac_cols = lit("jac_cols", 0)
+        record = bool(lit("record", False))
+        stats = bool(lit("stats", False))
+        if not isinstance(block_lanes, int) or not isinstance(jac_cols, int):
+            return
+        n_det = 0 if lit("det_geom", None) is None else 0  # unknowable
+        nvox = shape[0] * shape[1] * shape[2]
+        nxy = shape[0] * shape[1]
+        try:
+            spec.check_vmem(nvox, nxy, ntg, block_lanes,
+                            n_det=n_det, record=record,
+                            jac_cols=jac_cols, stats=stats)
+        except ValueError as e:
+            yield ctx.finding(
+                self, mod, call,
+                f"kernel call exceeds the VMEM budget "
+                f"(spec.check_vmem would refuse this config at "
+                f"runtime): {e}")

@@ -370,7 +370,7 @@ def replay_jacobian(volume: Volume, cfg: SimConfig, records,
                           jnp.asarray(id_hi), jnp.asarray(col),
                           jnp.asarray(active), jnp.uint32(seed))
 
-    jac = np.zeros((nx * ny * nz * jac_cols,), np.float64)
+    jac = np.zeros((nx * ny * nz * jac_cols,), np.float64)  # reprolint: disable=REP301 - host-side Jacobian accumulator
     w_exit = np.zeros((n_rec,), np.float32)
     gate = np.full((n_rec,), -1, np.int32)
     rdet = np.full((n_rec,), -1, np.int32)
@@ -386,7 +386,7 @@ def replay_jacobian(volume: Volume, cfg: SimConfig, records,
         if span is not None:
             jax.block_until_ready(jac_b)
             span.end()
-        jac += np.asarray(jac_b, np.float64)
+        jac += np.asarray(jac_b, np.float64)  # reprolint: disable=REP301 - host-side Jacobian accumulator
         w_exit[start: start + nb] = np.asarray(w_b)[:nb]
         gate[start: start + nb] = np.asarray(g_b)[:nb]
         rdet[start: start + nb] = np.asarray(rd_b)[:nb]

@@ -781,14 +781,14 @@ class DevicePool:
         state = {
             "energy": acc["energy"].copy(),
             "exitance": acc["exitance"].copy(),
-            "escaped_w": np.float64(acc["escaped_w"]),
-            "timed_out_w": np.float64(acc["timed_out_w"]),
+            "escaped_w": np.float64(acc["escaped_w"]),  # reprolint: disable=REP301 - checkpoint payload is f64
+            "timed_out_w": np.float64(acc["timed_out_w"]),  # reprolint: disable=REP301 - checkpoint payload is f64
             "det_w": acc["det_w"].copy(),
             "det_ppath": acc["det_ppath"].copy(),
             "det_rec": det_rec,
             "det_rec_overflow": np.int64(acc["det_rec_overflow"]),
             "n_launched": np.int64(acc["n_launched"]),
-            "launched_w": np.float64(acc["launched_w"]),
+            "launched_w": np.float64(acc["launched_w"]),  # reprolint: disable=REP301 - checkpoint payload is f64
             "steps": np.int64(acc["steps"]),
             "frontier": np.int64(frontier),
             "quarantined": np.asarray(
@@ -798,7 +798,7 @@ class DevicePool:
         }
         if acc["stats"] is not None:
             state["stats"] = np.asarray(
-                [float(v) for v in acc["stats"]], np.float64)
+                [float(v) for v in acc["stats"]], np.float64)  # reprolint: disable=REP301 - checkpoint payload is f64
         return state
 
     def _save_checkpoint(self, acc, frontier, tasks, n_photons, chunk_size,
@@ -846,7 +846,7 @@ class DevicePool:
         acc["steps"] = int(state["steps"])
         if acc["stats"] is not None and "stats" in state:
             acc["stats"] = RoundStats.from_vector(
-                np.asarray(state["stats"], np.float64))
+                np.asarray(state["stats"], np.float64))  # reprolint: disable=REP301 - checkpoint payload is f64
         quarantined = {int(s) for s, _ in
                        np.asarray(state["quarantined"],
                                   np.int64).reshape(-1, 2)}

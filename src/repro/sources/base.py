@@ -87,13 +87,13 @@ def flight_stream(seed, photon_ids) -> jnp.ndarray:
 def unit(v) -> jnp.ndarray:
     """Normalize a static 3-vector in float64, return float32 (matches the
     historical ``Source.dir_array`` arithmetic bit-for-bit)."""
-    d = np.asarray(v, np.float64)
+    d = np.asarray(v, np.float64)  # reprolint: disable=REP301 - f64 normalize, f32 result
     return jnp.asarray(d / np.linalg.norm(d), jnp.float32)
 
 
 def orthonormal_frame(axis) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Two unit vectors spanning the plane perpendicular to a static axis."""
-    a = np.asarray(axis, np.float64)
+    a = np.asarray(axis, np.float64)  # reprolint: disable=REP301 - f64 normalize, f32 result
     a = a / np.linalg.norm(a)
     h = np.array([0.0, 0.0, 1.0]) if abs(a[2]) < 0.9 else np.array([1.0, 0.0, 0.0])
     e1 = np.cross(h, a)

@@ -91,10 +91,10 @@ class _Span:
                 self._annotation.__enter__()
             except Exception:  # pragma: no cover - profiler unavailable
                 self._annotation = None
-        self.event.t0 = time.monotonic()
+        self.event.t0 = time.monotonic()  # reprolint: disable=REP201 - span timing is this module's job
 
     def end(self, **extra_args) -> SpanEvent:
-        self.event.dur = time.monotonic() - self.event.t0
+        self.event.dur = time.monotonic() - self.event.t0  # reprolint: disable=REP201 - span timing is this module's job
         if self._annotation is not None:
             self._annotation.__exit__(None, None, None)
             self._annotation = None

@@ -1,15 +1,11 @@
 """End-to-end behaviour tests for the paper's system."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro import configs as C
 from repro.core import analysis as A
 from repro.core import simulator as S
 from repro.core import volume as V
-from repro.models.config import SHAPES
 
 
 def test_full_b2a_pipeline():
@@ -29,39 +25,3 @@ def test_full_b2a_pipeline():
     src = phi[13:18, 13:18, 0:3].sum()
     deep = phi[13:18, 13:18, 25:28].sum()
     assert src > deep > 0
-
-
-def test_config_registry_complete():
-    assert len(C.ARCH_IDS) == 10
-    cells = C.cells()
-    assert len(cells) == 33  # 40 - 7 documented long_500k skips
-    assert len(C.cells(include_skipped=True)) == 40
-    for arch in C.ARCH_IDS:
-        cfg = C.get_config(arch)
-        smoke = C.get_smoke_config(arch)
-        assert cfg.kind == smoke.kind  # same family, reduced size
-        assert smoke.n_layers <= 4 and smoke.d_model <= 256
-
-
-def test_shapes_match_assignment():
-    assert SHAPES["train_4k"].seq_len == 4096
-    assert SHAPES["train_4k"].global_batch == 256
-    assert SHAPES["prefill_32k"].seq_len == 32768
-    assert SHAPES["prefill_32k"].global_batch == 32
-    assert SHAPES["decode_32k"].global_batch == 128
-    assert SHAPES["long_500k"].seq_len == 524288
-    assert SHAPES["long_500k"].global_batch == 1
-
-
-def test_assigned_arch_dimensions():
-    cfg = C.get_config("deepseek-v3-671b")
-    assert (cfg.n_layers, cfg.d_model, cfg.n_heads) == (61, 7168, 128)
-    assert (cfg.n_experts, cfg.top_k, cfg.n_shared_experts) == (256, 8, 1)
-    cfg = C.get_config("mixtral-8x7b")
-    assert (cfg.n_experts, cfg.top_k, cfg.sliding_window) == (8, 2, 4096)
-    cfg = C.get_config("granite-20b")
-    assert cfg.n_kv_heads == 1  # MQA
-    cfg = C.get_config("mamba2-1.3b")
-    assert (cfg.n_layers, cfg.d_model, cfg.ssm_state) == (48, 2048, 128)
-    cfg = C.get_config("hymba-1.5b")
-    assert (cfg.n_heads, cfg.n_kv_heads, cfg.meta_tokens) == (25, 5, 128)
