@@ -48,7 +48,8 @@ from repro.lint import astutil
 
 __all__ = [
     "Finding", "Module", "Context", "Rule", "LintReport", "run_lint",
-    "discover_modules", "traced_closure", "TRACED_ENTRYPOINTS",
+    "discover_modules", "traced_closure", "normalize_line",
+    "TRACED_ENTRYPOINTS",
 ]
 
 # Modules whose import closure is "traced code": everything reachable
@@ -277,9 +278,34 @@ def pragma_rules(line_text: str) -> set[str] | None:
     return {p.strip() for p in m.group(1).split(",") if p.strip()}
 
 
+def normalize_line(text: str) -> str:
+    """Canonical form of a source line for fingerprinting.
+
+    Strips any trailing comment (quote-aware, so ``#`` inside string
+    literals survives) and removes all whitespace — whitespace- and
+    comment-only edits must never invalidate a committed baseline
+    fingerprint (only content changes re-surface a finding).
+    """
+    out: list[str] = []
+    quote: str | None = None
+    for ch in text:
+        if quote:
+            out.append(ch)
+            if ch == quote:
+                quote = None
+        elif ch in "\"'":
+            quote = ch
+            out.append(ch)
+        elif ch == "#":
+            break
+        else:
+            out.append(ch)
+    return "".join("".join(out).split())
+
+
 def _fingerprint(f: Finding, ctx: Context) -> str:
     mod = ctx.by_relpath.get(f.path)
-    text = mod.line_text(f.line).strip() if mod else ""
+    text = normalize_line(mod.line_text(f.line)) if mod else ""
     raw = f"{f.rule}:{f.path}:{text}"
     return hashlib.sha1(raw.encode()).hexdigest()[:16]
 

@@ -136,26 +136,59 @@ def test_flag_names(test: ast.AST) -> set[str]:
     return {n.id for n in ast.walk(test) if isinstance(n, ast.Name)}
 
 
-def literal_env(fn: ast.FunctionDef) -> dict[str, ast.AST]:
-    """Map of simple single-target assignments inside a function.
+def literal_env(fn: ast.FunctionDef,
+                module_tree: ast.AST | None = None) -> dict[str, ast.AST]:
+    """Map of simple single-target assignments visible inside a function.
 
-    Supports one level of constant propagation for the VMEM rule:
-    ``shape = (60, 60, 60)`` followed by ``photon_step_pallas(...,
-    shape, ...)``.  Names rebound more than once are dropped (their
+    Supports constant propagation for the VMEM rule: ``shape = (60, 60,
+    60)`` followed by ``photon_step_pallas(..., shape, ...)``, including
+    aliases (``shp = shape``) via :func:`resolve_literal` /
+    :func:`chase_names`.  When ``module_tree`` is given, module-level
+    single assignments seed the environment (``SHAPE = (60, 60, 60)``
+    at the top of the file), with function-local bindings shadowing
+    them.  Names rebound more than once in a scope are dropped (their
     value at the call site is ambiguous).
     """
     env: dict[str, ast.AST] = {}
+    if module_tree is not None:
+        seen: set[str] = set()
+        for node in getattr(module_tree, "body", []):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                name = node.targets[0].id
+                if name in seen:
+                    env.pop(name, None)
+                else:
+                    seen.add(name)
+                    env[name] = node.value
     rebound: set[str] = set()
+    local: set[str] = set()
     for node in ast.walk(fn):
         if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
                 isinstance(node.targets[0], ast.Name):
             name = node.targets[0].id
-            if name in env or name in rebound:
+            if name in local or name in rebound:
                 env.pop(name, None)
                 rebound.add(name)
             else:
+                local.add(name)
                 env[name] = node.value
     return env
+
+
+def chase_names(node: ast.AST | None, env: dict[str, ast.AST],
+                depth: int = 4) -> ast.AST | None:
+    """Follow single-assignment ``Name`` bindings to the defining
+    expression (``cfg2 = cfg``; ``cfg = SimConfig(...)`` — returns the
+    ``SimConfig(...)`` call).  Stops at non-Name nodes, unknown names,
+    or the depth cap (self-referential chains)."""
+    while depth > 0 and isinstance(node, ast.Name) and node.id in env:
+        nxt = env[node.id]
+        if nxt is node:
+            break
+        node = nxt
+        depth -= 1
+    return node
 
 
 def resolve_literal(node: ast.AST | None, env: dict[str, ast.AST],

@@ -4,8 +4,12 @@ The baseline file (``.reprolint.json`` at the repo root) grandfathers
 pre-existing findings so a new rule can land before every legacy
 violation is fixed: CI fails only on findings *not* covered by the
 baseline.  The format is a fingerprint -> count map — a fingerprint
-hashes (rule, path, stripped line text), so findings survive pure line
-moves but are re-surfaced when the offending line's content changes.
+hashes (rule, path, normalized line text — comments and whitespace
+stripped), so findings survive line moves and whitespace/comment-only
+edits but are re-surfaced when the offending line's content changes.
+
+The traced tier (tracelint) reuses this format for ``.tracelint.json``
+with message-based fingerprints (jaxprs have no source lines).
 
 Policy: prefer fixing or pragma-annotating over baselining — the
 baseline is a ratchet for rule rollout, not a parking lot.  The repo

@@ -12,8 +12,9 @@ than duplicating it) to every statically resolvable
 
 A site is statically resolvable when ``shape`` (and the knobs that
 matter: ``cfg=SimConfig(n_time_gates=...)``, ``block_lanes``,
-``jac_cols``) reduce to literals, chasing one level of local
-assignments.  Sites passing ``interpret=True`` are skipped — the
+``jac_cols``) reduce to literals, chasing single-assignment local
+aliases and module-level constants (astutil.literal_env /
+chase_names).  Sites passing ``interpret=True`` are skipped — the
 interpreter has no VMEM (that's how the CPU benches legitimately sweep
 ntg=32 on 60^3).  Unresolvable sites are skipped, not guessed: the
 runtime check still covers them.
@@ -25,8 +26,9 @@ import ast
 from typing import Iterator
 
 from repro.lint import Context, Finding, Module, Rule
-from repro.lint.astutil import (UNRESOLVED, literal_env, resolve_dotted,
-                                resolve_literal, walk_functions)
+from repro.lint.astutil import (UNRESOLVED, chase_names, literal_env,
+                                resolve_dotted, resolve_literal,
+                                walk_functions)
 
 # shared positional prefix of photon_steps / photon_step_pallas
 _POS = ("labels_flat", "media", "state", "shape", "unitinmm", "cfg",
@@ -49,8 +51,7 @@ def _resolve_ntg(cfg_node: ast.AST | None, env: dict) -> object:
     """n_time_gates out of a ``SimConfig(...)`` construction, if any."""
     if cfg_node is None:
         return UNRESOLVED
-    if isinstance(cfg_node, ast.Name) and cfg_node.id in env:
-        cfg_node = env[cfg_node.id]
+    cfg_node = chase_names(cfg_node, env)
     if isinstance(cfg_node, ast.Call):
         fname = cfg_node.func.attr if isinstance(cfg_node.func,
                                                  ast.Attribute) else \
@@ -76,7 +77,7 @@ class VmemBudgetRule(Rule):
         except ImportError:  # pragma: no cover - spec ships with the repo
             return
         for fn in walk_functions(mod.tree):
-            env = literal_env(fn)
+            env = literal_env(fn, mod.tree)
             for node in ast.walk(fn):
                 if not isinstance(node, ast.Call):
                     continue

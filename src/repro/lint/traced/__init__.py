@@ -1,0 +1,323 @@
+"""tracelint — jaxpr-level analysis tier for the photon-transport stack.
+
+The AST tier (reprolint, :mod:`repro.lint`) checks what the source
+*says*; this tier checks what JAX actually *traces*: it builds the real
+entrypoints (``build_sim_fn`` for both engines, the replay pair, the
+resilience pool's per-bit-class executors, the shard_mapped mesh
+builders) into closed jaxprs and walks the equations with REP8xx rules
+(DESIGN.md §static-analysis).  Cross-vendor MC divergence hides in
+accumulation ordering and implicit promotion — exactly the properties
+only the traced program exposes.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.lint --tier traced
+    PYTHONPATH=src python -m repro.lint --tier all --format json
+
+Architecture mirrors the AST tier:
+
+* :class:`TraceTarget` wraps one entrypoint: a ``make(overrides)``
+  callable returning a ``ClosedJaxpr``, the repo-relative ``entry``
+  file findings anchor to, an optional parity ``group`` (REP804) and
+  named ``variants`` — perturbations of *dynamic* call arguments that
+  must not change the jaxpr (REP805).  The default registry lives in
+  :mod:`repro.lint.traced.targets`.
+* :class:`TracedRule` subclasses walk jaxprs via :func:`iter_eqns` and
+  yield the same :class:`~repro.lint.Finding` objects the AST tier
+  uses, so reports, baselines and CI artifacts share one format.
+* Suppression: jaxprs have no source lines to hang pragmas on, so the
+  traced tier uses a committed allowlist file (``.tracelint-allow.json``)
+  instead — every entry carries a mandatory ``why``.  The committed
+  traced baseline (``.tracelint.json``) stays empty, same policy as
+  the AST tier.
+
+This module stays importable without jax (the CI lint job for the AST
+tier is deliberately dependency-free): jax is only imported when
+targets are actually traced.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+from typing import Callable, Iterable, Iterator
+
+from repro.lint import Finding, LintReport
+
+__all__ = [
+    "TraceTarget", "TracedRule", "iter_eqns", "subjaxprs",
+    "jaxpr_fingerprint", "run_traced_lint", "load_allowlist",
+    "allowlist_path", "traced_baseline_path",
+    "ALLOWLIST_NAME", "TRACED_BASELINE_NAME",
+]
+
+ALLOWLIST_NAME = ".tracelint-allow.json"
+TRACED_BASELINE_NAME = ".tracelint.json"
+ALLOWLIST_VERSION = 1
+
+# primitives whose sub-jaxprs execute repeatedly (a "round loop" for
+# REP803's purposes): their bodies raise the loop depth by one
+_LOOP_PRIMS = frozenset({"while", "scan"})
+
+
+@dataclasses.dataclass
+class TraceTarget:
+    """One traced entrypoint.
+
+    ``make(overrides)`` builds the entrypoint and returns its
+    ``ClosedJaxpr``; ``overrides`` (None for the canonical trace) remaps
+    the *dynamic* call arguments — n_photons, seed, id offsets — whose
+    values must never leak into the trace.  ``entry`` is the
+    repo-relative source file findings anchor to; ``group`` names an
+    REP804 engine-parity group (targets sharing a group must produce
+    identical output avals); ``variants`` maps a perturbation name to
+    an overrides dict for REP805.
+    """
+
+    name: str
+    entry: str
+    make: Callable[[dict | None], object]
+    group: str | None = None
+    variants: dict[str, dict] = dataclasses.field(default_factory=dict)
+    _cached: object = dataclasses.field(default=None, repr=False)
+
+    def jaxpr(self):
+        """The canonical (no-overrides) trace, memoized."""
+        if self._cached is None:
+            self._cached = self.make(None)
+        return self._cached
+
+
+class TracedRule:
+    """Base class for REP8xx rules.
+
+    Subclasses set ``id``/``name``/``severity``/``description`` and
+    override ``check(targets)``; targets arriving here have already
+    traced successfully (failures surface as REP800 engine findings).
+    """
+
+    id: str = "REP800"
+    name: str = "traced-base"
+    severity: str = "error"
+    description: str = ""
+
+    def check(self, targets: list[TraceTarget]) -> Iterator[Finding]:
+        return iter(())
+
+    def finding(self, target: TraceTarget, message: str) -> Finding:
+        return Finding(rule=self.id, name=self.name, severity=self.severity,
+                       path=target.entry, line=1, col=0,
+                       message=f"[{target.name}] {message}")
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+
+def _as_jaxprs(value) -> list:
+    """Jaxpr objects held (possibly nested in tuples) by an eqn param."""
+    if hasattr(value, "jaxpr") and hasattr(value.jaxpr, "eqns"):
+        return [value.jaxpr]           # ClosedJaxpr
+    if hasattr(value, "eqns"):
+        return [value]                 # raw Jaxpr
+    if isinstance(value, (tuple, list)):
+        out = []
+        for v in value:
+            out.extend(_as_jaxprs(v))
+        return out
+    return []
+
+
+def subjaxprs(eqn) -> list[tuple[object, bool]]:
+    """(sub_jaxpr, enters_loop) for every jaxpr nested under ``eqn``.
+
+    ``enters_loop`` is True when the sub-jaxpr body executes repeatedly
+    (while/scan); pjit/cond/pallas_call bodies execute at most once per
+    invocation of the enclosing program.
+    """
+    loops = eqn.primitive.name in _LOOP_PRIMS
+    out = []
+    for v in eqn.params.values():
+        for j in _as_jaxprs(v):
+            out.append((j, loops))
+    return out
+
+
+def iter_eqns(closed) -> Iterator[tuple[object, object, int]]:
+    """Yield ``(owning_jaxpr, eqn, loop_depth)`` over the whole nest.
+
+    ``loop_depth`` counts enclosing while/scan bodies — an eqn at depth
+    >= 1 runs inside the round loop.
+    """
+    stack = [(closed.jaxpr, 0)]
+    while stack:
+        jaxpr, depth = stack.pop()
+        for eqn in jaxpr.eqns:
+            yield jaxpr, eqn, depth
+            for sub, loops in subjaxprs(eqn):
+                stack.append((sub, depth + (1 if loops else 0)))
+
+
+def jaxpr_fingerprint(closed) -> str:
+    """Stable hash of a closed jaxpr: program text + in/out aval
+    signature (weak-type flags included — the pretty-printer omits
+    them, but they are part of the compile-cache key)."""
+    parts = [str(closed.jaxpr)]
+    for av in list(closed.in_avals) + list(closed.out_avals):
+        parts.append(f"{getattr(av, 'shape', None)}"
+                     f"|{getattr(av, 'dtype', None)}"
+                     f"|{getattr(av, 'weak_type', False)}")
+    return hashlib.sha1("\n".join(parts).encode()).hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# allowlist
+# ---------------------------------------------------------------------------
+
+def allowlist_path(root: Path | str) -> Path:
+    return Path(root) / ALLOWLIST_NAME
+
+
+def traced_baseline_path(root: Path | str) -> Path:
+    return Path(root) / TRACED_BASELINE_NAME
+
+
+def load_allowlist(path: Path | str) -> list[dict]:
+    """Validated allowlist entries; empty when the file doesn't exist.
+
+    Each entry must carry ``rule`` and a non-empty ``why`` (the traced
+    tier's pragma analogue — suppression without a recorded reason is
+    rejected).  Optional keys: ``target`` (exact target name; missing
+    matches any), ``match`` (substring of the finding message) and
+    ``max`` (cap on how many findings one entry may absorb, so a new
+    racy scatter can't hide behind an old entry).
+    """
+    path = Path(path)
+    if not path.is_file():
+        return []
+    data = json.loads(path.read_text())
+    if data.get("version") != ALLOWLIST_VERSION:
+        raise ValueError(
+            f"{path}: unsupported allowlist version {data.get('version')!r} "
+            f"(this tracelint reads version {ALLOWLIST_VERSION})")
+    entries = data.get("allow", [])
+    if not isinstance(entries, list):
+        raise ValueError(f"{path}: 'allow' must be a list")
+    for i, e in enumerate(entries):
+        if not isinstance(e, dict) or not e.get("rule"):
+            raise ValueError(f"{path}: allow[{i}] needs a 'rule'")
+        if not isinstance(e.get("why"), str) or not e["why"].strip():
+            raise ValueError(
+                f"{path}: allow[{i}] ({e.get('rule')}) needs a non-empty "
+                f"'why' — tracelint suppressions must record their reason")
+        if "max" in e and (not isinstance(e["max"], int) or e["max"] < 1):
+            raise ValueError(f"{path}: allow[{i}] 'max' must be a "
+                             f"positive int")
+    return list(entries)
+
+
+def _allow_matches(f: Finding, entry: dict) -> bool:
+    if entry["rule"] != f.rule:
+        return False
+    target = entry.get("target")
+    if target is not None and not f.message.startswith(f"[{target}]"):
+        return False
+    match = entry.get("match")
+    if match is not None and match not in f.message:
+        return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+def _traced_fingerprint(f: Finding) -> str:
+    raw = f"{f.rule}:{f.path}:{f.message}"
+    return hashlib.sha1(raw.encode()).hexdigest()[:16]
+
+
+def run_traced_lint(root: Path | str,
+                    targets: Iterable[TraceTarget] | None = None,
+                    rules: Iterable[TracedRule] | None = None,
+                    rule_ids: Iterable[str] | None = None,
+                    baseline: dict[str, int] | None = None,
+                    allowlist: list[dict] | None = None) -> LintReport:
+    """Trace the targets and run the REP8xx rules.
+
+    Returns the same :class:`~repro.lint.LintReport` shape as the AST
+    tier; ``suppressed_pragma`` counts allowlist suppressions (the
+    traced tier's pragma analogue) and ``n_modules`` counts targets.
+    A target whose canonical trace raises becomes an REP800
+    ``trace-failure`` finding rather than aborting the run.
+    """
+    root = Path(root)
+    if targets is None:
+        from repro.lint.traced.targets import build_default_targets
+        targets = build_default_targets()
+    targets = list(targets)
+    if rules is None:
+        from repro.lint.traced.rules import TRACED_RULES
+        rules = [r() for r in TRACED_RULES]
+    else:
+        rules = list(rules)
+    if rule_ids is not None:
+        wanted = set(rule_ids)
+        rules = [r for r in rules if r.id in wanted or r.name in wanted]
+
+    raw: list[Finding] = []
+    ok: list[TraceTarget] = []
+    for t in targets:
+        try:
+            t.jaxpr()
+        except Exception as e:  # tracing real entrypoints: anything goes
+            raw.append(Finding(
+                rule="REP800", name="trace-failure", severity="error",
+                path=t.entry, line=1, col=0,
+                message=f"[{t.name}] tracing raised "
+                        f"{type(e).__name__}: {e}"))
+        else:
+            ok.append(t)
+    for rule in rules:
+        raw.extend(rule.check(ok))
+    raw.sort(key=lambda f: (f.path, f.rule, f.message))
+
+    live = [dataclasses.replace(f, fingerprint=_traced_fingerprint(f))
+            for f in raw]
+
+    n_allow = 0
+    if allowlist:
+        budgets = [dict(e) for e in allowlist]
+        kept = []
+        for f in live:
+            hit = None
+            for e in budgets:
+                if _allow_matches(f, e) and e.get("max", 1 << 30) > 0:
+                    hit = e
+                    break
+            if hit is not None:
+                if "max" in hit:
+                    hit["max"] -= 1
+                n_allow += 1
+            else:
+                kept.append(f)
+        live = kept
+
+    n_base = 0
+    if baseline:
+        budget = dict(baseline)
+        kept = []
+        for f in live:
+            if budget.get(f.fingerprint, 0) > 0:
+                budget[f.fingerprint] -= 1
+                n_base += 1
+            else:
+                kept.append(f)
+        live = kept
+
+    return LintReport(findings=live, suppressed_pragma=n_allow,
+                      suppressed_baseline=n_base,
+                      n_modules=len(targets),
+                      rules_run=[r.id for r in rules])

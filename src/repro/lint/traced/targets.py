@@ -1,0 +1,190 @@
+"""Default tracelint targets: the stack's real traced entrypoints.
+
+Every target traces a *small* configuration — (8, 8, 8) volume, 16
+lanes — because tracelint cares about the program structure (dtypes,
+scatter provenance, callbacks, output avals), none of which depend on
+problem size.  Tracing stays cheap enough to gate CI.
+
+Coverage map:
+
+* ``sim-jnp`` / ``sim-pallas`` — ``build_sim_fn`` with the full
+  feature surface on: fused rounds (K=2), time gates, a detector,
+  record buffer and round stats, per engine.  Shared REP804 group
+  ``sim`` — the engines' SimResult avals must agree exactly.
+* ``replay-jnp`` / ``replay-pallas`` — the two-pass Jacobian replay
+  (group ``replay``).
+* ``pool-jnp`` / ``pool-pallas`` — the resilience pool's per-bit-class
+  jitted executors, traced exactly as ``DevicePool._dispatch`` would
+  call them (group ``pool``).
+* ``sharded-sim`` — the shard_mapped mesh builder, only when more than
+  one device is visible (CI runs this under 8 fake CPU devices so the
+  collective/psum structure is linted too).
+
+Each target declares REP805 ``variants`` perturbing the *dynamic* call
+arguments (photon count, seed, 64-bit id offset).  Those are traced
+arguments by contract — "one executable serves pilot runs and
+production runs" (simulator.build_sim_fn docstring) — so the jaxpr
+must be bit-identical under any value change; a divergence means a
+retrace per value, which is exactly the churn the simulate_many
+compile cache cannot absorb.
+"""
+
+from __future__ import annotations
+
+from repro.lint.traced import TraceTarget
+
+# entry files findings anchor to (repo-relative)
+_SIM_ENTRY = "src/repro/core/simulator.py"
+_REPLAY_ENTRY = "src/repro/replay/__init__.py"
+_POOL_ENTRY = "src/repro/resilience/pool.py"
+_MESH_ENTRY = "src/repro/core/multidevice.py"
+
+_SHAPE = (8, 8, 8)
+_LANES = 16
+_BLOCK = 8
+
+
+def _sim_cfg():
+    from repro.core.volume import SimConfig
+    return SimConfig(do_reflect=True, steps_per_round=2, n_time_gates=2,
+                     max_steps=64, collect_stats=True)
+
+
+def _volume():
+    from repro.core import volume as V
+    return V.benchmark_b1(_SHAPE)
+
+
+def _detectors():
+    from repro.detectors import Detector
+    return (Detector(x=4.0, y=4.0, radius=2.0),)
+
+
+def _sim_args(overrides=None):
+    """Canonical dynamic args for a sim_fn trace, override-able."""
+    import jax.numpy as jnp
+    vol = _volume()
+    ov = overrides or {}
+    return (vol.labels.reshape(-1), vol.media,
+            jnp.int32(ov.get("n_photons", 64)),
+            jnp.uint32(ov.get("seed", 1234)),
+            jnp.uint32(ov.get("id_offset", 0)),
+            jnp.uint32(ov.get("id_offset_hi", 0)))
+
+
+# the REP805 perturbation matrix shared by every sim-shaped target:
+# each key is a dynamic field; its trace must match the canonical one
+_SIM_VARIANTS = {
+    "n_photons": {"n_photons": 4096},
+    "seed": {"seed": 99},
+    "id_offset": {"id_offset": 123456, "id_offset_hi": 7},
+}
+
+
+def _make_sim(engine):
+    def make(overrides=None):
+        import jax
+
+        from repro.core.simulator import build_sim_fn
+        vol = _volume()
+        fn = build_sim_fn(vol.shape, vol.unitinmm, _sim_cfg(), _LANES,
+                          "dynamic", None, engine, block_lanes=_BLOCK,
+                          interpret=True, detectors=_detectors(),
+                          record_detected=8)
+        return jax.make_jaxpr(fn)(*_sim_args(overrides))
+    return make
+
+
+def _make_replay(engine):
+    def make(overrides=None):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.detectors import det_geometry, validate_detectors
+        from repro.replay import _build_replay_fn
+        vol = _volume()
+        dets = _detectors()
+        validate_detectors(dets, vol.shape)
+        fn = _build_replay_fn(vol.shape, vol.unitinmm, _sim_cfg(), _LANES,
+                              len(dets), None, det_geometry(dets),
+                              jac_cols=len(dets), engine=engine,
+                              block_lanes=_BLOCK, interpret=True)
+        ov = overrides or {}
+        ids = jnp.zeros((_LANES,), jnp.uint32)
+        return jax.make_jaxpr(fn)(
+            vol.labels.reshape(-1), vol.media,
+            ids + jnp.uint32(ov.get("id_offset", 0)), ids,
+            jnp.zeros((_LANES,), jnp.int32),
+            jnp.ones((_LANES,), jnp.bool_),
+            jnp.uint32(ov.get("seed", 1234)))
+    return make
+
+
+def _make_pool(engine):
+    def make(overrides=None):
+        import jax
+
+        from repro.resilience.pool import DevicePool, DeviceSpec
+        pool = DevicePool(_volume(), _sim_cfg(),
+                          specs=[DeviceSpec(engine=engine, n_lanes=_LANES)],
+                          detectors=_detectors(), record_detected=8)
+        fn = pool._fn_for(pool._default_source, pool._classes[0])
+        return jax.make_jaxpr(fn)(*_sim_args(overrides))
+    return make
+
+
+def _make_sharded():
+    def make(overrides=None):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import Mesh
+
+        from repro.core.multidevice import sharded_sim_fn
+        vol = _volume()
+        devs = jax.devices()
+        mesh = Mesh(np.array(devs), ("data",))
+        fn = sharded_sim_fn(vol, _sim_cfg(), _LANES, mesh,
+                            detectors=_detectors(), record_detected=8)
+        ov = overrides or {}
+        n = len(devs)
+        return jax.make_jaxpr(fn)(
+            vol.labels.reshape(-1), vol.media,
+            jnp.full((n,), ov.get("n_photons", 64), jnp.int32),
+            jnp.full((n,), ov.get("id_offset", 0), jnp.uint32),
+            jnp.zeros((n,), jnp.uint32),
+            jnp.uint32(ov.get("seed", 1234)))
+    return make
+
+
+def build_default_targets(include_sharded: bool | None = None
+                          ) -> list[TraceTarget]:
+    """The registry CI and the CLI trace.
+
+    ``include_sharded`` forces the mesh target on/off; the default
+    includes it exactly when more than one device is visible (the
+    8-fake-device CI lane).
+    """
+    targets = []
+    for engine in ("jnp", "pallas"):
+        targets.append(TraceTarget(
+            name=f"sim-{engine}", entry=_SIM_ENTRY, group="sim",
+            make=_make_sim(engine), variants=dict(_SIM_VARIANTS)))
+    for engine in ("jnp", "pallas"):
+        targets.append(TraceTarget(
+            name=f"replay-{engine}", entry=_REPLAY_ENTRY, group="replay",
+            make=_make_replay(engine),
+            variants={"seed": {"seed": 99},
+                      "id_offset": {"id_offset": 77}}))
+    for engine in ("jnp", "pallas"):
+        targets.append(TraceTarget(
+            name=f"pool-{engine}", entry=_POOL_ENTRY, group="pool",
+            make=_make_pool(engine), variants=dict(_SIM_VARIANTS)))
+    if include_sharded is None:
+        import jax
+        include_sharded = len(jax.devices()) > 1
+    if include_sharded:
+        targets.append(TraceTarget(
+            name="sharded-sim", entry=_MESH_ENTRY,
+            make=_make_sharded(), variants=dict(_SIM_VARIANTS)))
+    return targets

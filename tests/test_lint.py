@@ -13,7 +13,14 @@ import sys
 import textwrap
 from pathlib import Path
 
-from repro.lint import run_lint
+try:  # hypothesis is optional locally (pinned in CI); only the property
+    # test needs it — the deterministic mutation tests always run
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+from repro.lint import normalize_line, run_lint
 from repro.lint.baseline import (baseline_path, load_baseline,
                                  save_baseline)
 
@@ -413,6 +420,88 @@ def test_vmem_accepts_in_budget_config(tmp_path):
     assert _lint(tmp_path, "REP501").clean
 
 
+def test_vmem_chases_local_alias(tmp_path):
+    # regression: grid/cfg args flowing through a simple local alias
+    # (cfg2 = cfg) used to defeat resolution entirely
+    _write(tmp_path, "src/repro/core/driver.py", """\
+        from repro.core.volume import SimConfig
+        from repro.kernels.photon_step.photon_step import photon_step_pallas
+
+
+        def run(labels, media, state):
+            shape = (60, 60, 60)
+            shp = shape
+            cfg = SimConfig(n_time_gates=32)
+            cfg2 = cfg
+            return photon_step_pallas(labels, media, state, shp, 1.0,
+                                      cfg2, 10, block_lanes=256,
+                                      interpret=False)
+        """)
+    rep = _lint(tmp_path, "REP501")
+    assert len(rep.findings) == 1
+    assert "VMEM budget" in rep.findings[0].message
+
+
+def test_vmem_resolves_module_level_constants(tmp_path):
+    # regression: SHAPE/NTG living at module scope were invisible to
+    # the function-local literal env
+    _write(tmp_path, "src/repro/core/driver.py", """\
+        from repro.core.volume import SimConfig
+        from repro.kernels.photon_step.photon_step import photon_step_pallas
+
+        SHAPE = (60, 60, 60)
+        NTG = 32
+
+
+        def run(labels, media, state):
+            cfg = SimConfig(n_time_gates=NTG)
+            return photon_step_pallas(labels, media, state, SHAPE, 1.0,
+                                      cfg, 10, block_lanes=256,
+                                      interpret=False)
+        """)
+    rep = _lint(tmp_path, "REP501")
+    assert len(rep.findings) == 1
+    assert "VMEM budget" in rep.findings[0].message
+
+
+def test_vmem_alias_of_in_budget_config_stays_clean(tmp_path):
+    _write(tmp_path, "src/repro/core/driver.py", """\
+        from repro.core.volume import SimConfig
+        from repro.kernels.photon_step.photon_step import photon_step_pallas
+
+        SHAPE = (32, 32, 32)
+
+
+        def run(labels, media, state):
+            cfg = SimConfig(n_time_gates=4)
+            cfg2 = cfg
+            return photon_step_pallas(labels, media, state, SHAPE, 1.0,
+                                      cfg2, 10, block_lanes=256,
+                                      interpret=False)
+        """)
+    assert _lint(tmp_path, "REP501").clean
+
+
+def test_vmem_drops_ambiguously_rebound_alias(tmp_path):
+    # a name rebound twice is ambiguous at the call site: the rule
+    # must skip (runtime check covers it), never guess
+    _write(tmp_path, "src/repro/core/driver.py", """\
+        from repro.core.volume import SimConfig
+        from repro.kernels.photon_step.photon_step import photon_step_pallas
+
+
+        def run(labels, media, state, flag):
+            shape = (60, 60, 60)
+            if flag:
+                shape = (8, 8, 8)
+            cfg = SimConfig(n_time_gates=32)
+            return photon_step_pallas(labels, media, state, shape, 1.0,
+                                      cfg, 10, block_lanes=256,
+                                      interpret=False)
+        """)
+    assert _lint(tmp_path, "REP501").clean
+
+
 def test_vmem_skips_unresolvable_shape(tmp_path):
     _write(tmp_path, "src/repro/core/driver.py", """\
         from repro.kernels.photon_step.ops import photon_steps
@@ -558,6 +647,82 @@ def test_baseline_missing_file_is_empty(tmp_path):
     assert load_baseline(tmp_path / "nope.json") == {}
 
 
+# ------------------------------------- fingerprint stability (baseline)
+
+_FPRINT_TEMPLATE = """\
+import numpy as np
+
+
+def bad(y):
+    {indent}a{s1}={s2}np.asarray(y,{s3}np.float64){comment}
+    return a
+"""
+
+
+def _fingerprint_of(tmp_path, body: str) -> str:
+    _write(tmp_path, "src/repro/core/util.py", body)
+    rep = _lint(tmp_path, "REP301")
+    assert len(rep.findings) == 1, body
+    return rep.findings[0].fingerprint
+
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        s1=st.text(alphabet=" ", max_size=3),
+        s2=st.text(alphabet=" ", max_size=3),
+        s3=st.text(alphabet=" ", max_size=3),
+        comment=st.one_of(
+            st.just(""),
+            st.builds(lambda t: "  # " + t,
+                      st.text(alphabet="abcdefghij xyz", max_size=20))),
+    )
+    def test_fingerprint_survives_whitespace_and_comment_edits(
+            tmp_path_factory, s1, s2, s3, comment):
+        """Whitespace/comment-only edits must not invalidate committed
+        .reprolint.json fingerprints (the baseline would silently stop
+        matching)."""
+        canonical = _FPRINT_TEMPLATE.format(indent="", s1=" ", s2=" ",
+                                            s3=" ", comment="")
+        mutated = _FPRINT_TEMPLATE.format(indent="", s1=s1, s2=s2,
+                                          s3=s3, comment=comment)
+        tmp = tmp_path_factory.mktemp("fp")
+        ref = _fingerprint_of(tmp, canonical)
+        assert _fingerprint_of(tmp, mutated) == ref
+
+
+def test_fingerprint_survives_canonical_mutations(tmp_path_factory):
+    # deterministic subset of the property above: always runs, even
+    # without hypothesis installed
+    canonical = _FPRINT_TEMPLATE.format(indent="", s1=" ", s2=" ",
+                                        s3=" ", comment="")
+    ref = _fingerprint_of(tmp_path_factory.mktemp("fp"), canonical)
+    for s1, s2, s3, comment in [
+            ("", "", "", ""),
+            ("   ", "  ", " ", ""),
+            (" ", " ", " ", "  # host-side conversion"),
+            ("", " ", "", "  # xyz"),
+    ]:
+        mutated = _FPRINT_TEMPLATE.format(indent="", s1=s1, s2=s2,
+                                          s3=s3, comment=comment)
+        assert _fingerprint_of(tmp_path_factory.mktemp("fp"),
+                               mutated) == ref
+
+
+def test_fingerprint_changes_on_content_edit(tmp_path):
+    canonical = _FPRINT_TEMPLATE.format(indent="", s1=" ", s2=" ",
+                                        s3=" ", comment="")
+    edited = canonical.replace("np.float64", "np.float64.type")
+    assert _fingerprint_of(tmp_path, canonical) != \
+        _fingerprint_of(tmp_path, edited)
+
+
+def test_normalize_line_is_quote_aware():
+    # '#' inside a string literal is content, not a comment
+    assert normalize_line('x = "a#b"  # note') == 'x="a#b"'
+    assert normalize_line("y  =  1   # c") == "y=1"
+
+
 # ------------------------------------------------------ live-repo meta
 
 def test_live_repo_is_lint_clean():
@@ -569,6 +734,35 @@ def test_live_repo_is_lint_clean():
     assert set(rep.rules_run) >= {"REP101", "REP201", "REP301",
                                   "REP401", "REP501", "REP601",
                                   "REP701"}
+
+
+def test_cli_github_format_emits_annotations(tmp_path, capsys):
+    from repro.lint.__main__ import main
+    _write(tmp_path, "src/repro/core/util.py", """\
+        import numpy as np
+
+
+        def bad(y):
+            return np.asarray(y, np.float64)
+        """)
+    rc = main(["--root", str(tmp_path), "--format", "github",
+               "--rules", "REP301"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    line = next(ln for ln in out.splitlines() if ln.startswith("::error"))
+    assert "file=src/repro/core/util.py" in line
+    assert "line=5" in line and "title=REP301[dtype]" in line
+    assert "::" in line.rpartition("title=")[2]  # message after the ::
+
+
+def test_cli_github_format_clean_tree(tmp_path, capsys):
+    from repro.lint.__main__ import main
+    _write(tmp_path, "src/repro/core/util.py", "X = 1\n")
+    rc = main(["--root", str(tmp_path), "--format", "github",
+               "--rules", "REP301"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "::error" not in out and "clean" in out
 
 
 def test_cli_json_output():
