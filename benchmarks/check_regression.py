@@ -2,22 +2,33 @@
 
 Compares freshly produced benchmark JSONs (``benchmarks/fused.py``,
 ``benchmarks/timegates.py``, ``benchmarks/replay.py``,
-``benchmarks/resilience.py``) against the committed baselines and **fails** (exit code 1) when
+``benchmarks/resilience.py``, ``benchmarks/scenarios.py``) against the
+committed baselines and **fails** (exit code 1) when
 
-  * any throughput leaf (a key named ``photons_per_s*`` or
-    ``records_per_s*``, at any nesting depth) drops by more than
-    ``--max-drop`` (default 30%), or
+  * any throughput leaf (a key named ``photons_per_s*``,
+    ``records_per_s*``, or ``scenarios_per_s*``, at any nesting depth)
+    drops by more than ``--max-drop`` (default 30%), or
   * any overhead leaf (a key ending in ``_overhead_frac``) grows by
     more than ``--max-overhead-points`` (default 0.10, i.e. 10
-    percentage points).
+    percentage points), or
+  * any cache-efficiency leaf (a key ending in ``_hit_rate``) comes in
+    below its baseline at all — the repeat-shape scenario workload is
+    constructed to hit the compile cache on every timed batch, so the
+    committed baseline is 1.0 and *any* fresh miss is a caching bug,
+    not noise, or
+  * a fresh file carries a **gated** leaf (throughput / overhead /
+    hit-rate) that the committed baseline lacks: a new gated metric
+    must land together with a baseline refresh, otherwise it would ride
+    ungated until someone remembers to regenerate.
 
 A ``meta.schema_version`` mismatch between baseline and fresh is a hard
 **failure**, not a skip: intentional layout changes must come with a
 baseline refresh (the bench-refresh workflow), never a silent
 cross-version comparison.  Keys ending in ``_cold`` are ignored (cold
-numbers include one-shot compile time — too noisy for a gate), as are
-keys present on only one side within a schema version (leaf-level
-evolution is not a regression).  A file whose ``meta`` records a
+numbers include one-shot compile time — too noisy for a gate).
+Non-gated keys present on only one side, and gated keys present only
+in the *baseline*, stay notes (leaf-level evolution is not a
+regression).  A file whose ``meta`` records a
 different *workload* (``quick`` flag, ``size``, ``backend``) is skipped
 with a warning: cross-workload throughput ratios are meaningless.  Machine-to-machine variance is what the 30% headroom is
 for; tighten or loosen per lane with the CLI flags or the
@@ -39,9 +50,11 @@ import sys
 from pathlib import Path
 
 BENCH_FILES = ("BENCH_fused.json", "BENCH_timegates.json",
-               "BENCH_replay.json", "BENCH_resilience.json")
-THROUGHPUT_MARKERS = ("photons_per_s", "records_per_s")
+               "BENCH_replay.json", "BENCH_resilience.json",
+               "BENCH_scenarios.json")
+THROUGHPUT_MARKERS = ("photons_per_s", "records_per_s", "scenarios_per_s")
 OVERHEAD_SUFFIX = "_overhead_frac"
+HIT_RATE_SUFFIX = "_hit_rate"
 # meta keys that define the workload: a mismatch means the two files
 # measured different things and ratios are not comparable
 WORKLOAD_KEYS = ("bench", "quick", "size", "backend", "interpreted_pallas")
@@ -66,6 +79,14 @@ def _is_throughput(path: str) -> bool:
 
 def _is_overhead(path: str) -> bool:
     return path.rsplit(".", 1)[-1].endswith(OVERHEAD_SUFFIX)
+
+
+def _is_hit_rate(path: str) -> bool:
+    return path.rsplit(".", 1)[-1].endswith(HIT_RATE_SUFFIX)
+
+
+def _is_gated(path: str) -> bool:
+    return _is_throughput(path) or _is_overhead(path) or _is_hit_rate(path)
 
 
 def check_file(name: str, baseline: dict, fresh: dict, max_drop: float,
@@ -126,6 +147,25 @@ def check_file(name: str, baseline: dict, fresh: dict, max_drop: float,
                     f"{name}: {path} grew {f - max(b, 0.0):+.3f} "
                     f"({b:.3f} -> {f:.3f}; limit "
                     f"+{max_overhead_points:.2f})")
+        elif _is_hit_rate(path):
+            n_checked += 1
+            # no headroom here: a hit rate is a deterministic ratio of
+            # cache-ledger counters, not a timing — any drop below the
+            # baseline means the repeat-shape workload re-compiled
+            if f < b - 1e-9:
+                failures.append(
+                    f"{name}: {path} regressed {b:.3f} -> {f:.3f} — the "
+                    f"repeat-shape workload missed the compile cache "
+                    f"(shape key leaked a traced value?)")
+    # a gated leaf only the FRESH side carries would silently ride
+    # ungated forever; force the baseline refresh to land with it
+    for path in sorted(set(fresh_leaves) - set(base_leaves)):
+        if _is_gated(path):
+            failures.append(
+                f"{name}: fresh file adds gated leaf {path} absent from "
+                f"the committed baseline — regenerate the baseline "
+                f"(bench-refresh workflow) so the new metric is gated "
+                f"from day one")
     notes.append(f"{name}: checked {n_checked} gated leaves "
                  f"({len(shared)} shared)")
     if n_checked == 0:

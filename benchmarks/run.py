@@ -1,7 +1,8 @@
 """Run the full benchmark suite:  python -m benchmarks.run [--full]
 
 One benchmark per paper figure (Fig 2, Fig 3a/3b/3c) plus the
-trajectory benches (fused / timegates / sources / replay / resilience).
+trajectory benches (fused / timegates / sources / replay / resilience /
+scenarios).
 """
 
 from __future__ import annotations
@@ -20,7 +21,7 @@ def main():
 
     from benchmarks import (fig2_optimizations, fig3a_workgroup,
                             fig3b_devicelb, fig3c_scaling, fused, replay,
-                            resilience, sources, timegates)
+                            resilience, scenarios, sources, timegates)
 
     t0 = time.time()
     results = {}
@@ -68,6 +69,11 @@ def main():
     print("Resilience — fault-free DevicePool overhead vs pre-PR scheduler")
     print("=" * 70, flush=True)
     results["resilience"] = resilience.run(quick=quick)
+
+    print("=" * 70)
+    print("Scenarios — batched multi-scenario scenarios/s + cache hit rate")
+    print("=" * 70, flush=True)
+    results["scenarios"] = scenarios.run(quick=quick)
 
     print(f"\nbenchmark suite done in {time.time()-t0:.1f}s")
     with open("bench_results.json", "w") as f:

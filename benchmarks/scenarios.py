@@ -1,0 +1,158 @@
+"""Batched multi-scenario throughput: scenarios/s through simulate_many.
+
+Measures the DESIGN.md §batching payoff on a *repeat-shape* workload —
+the campaign pattern the compile cache exists for: one warm call pays
+the single compile for the shared config shape, then every subsequent
+batch of value-perturbed scenarios (new seeds, budgets, media tables,
+source radii, detector coordinates) reuses the cached executable.  The
+timed section must therefore run at compile-cache hit rate 1.0; the CI
+gate fails any BENCH file where ``cache_hit_rate`` drops below the
+committed baseline, alongside the usual >30% ``scenarios_per_s`` drop
+rule.
+
+  PYTHONPATH=src python -m benchmarks.scenarios [--quick] [--engines jnp]
+
+Same Pallas caveat as benchmarks/fused.py: off-TPU the kernel runs
+under the Pallas interpreter, so only the jnp rows are a meaningful
+throughput trajectory there (``meta.interpreted_pallas`` records which
+mode ran).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import platform
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.common import SCHEMA_VERSION, get_bench
+from repro.core import simulator as S
+from repro.core.volume import SimConfig
+from repro.kernels.photon_step.photon_step import default_interpret
+from repro.scenarios import CompileCache, Scenario, simulate_many
+from repro.sources import Disk
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _make_batch(vol0, cfg, n_scenarios, photons, round_idx):
+    """One batch of same-shape, distinct-value scenarios.
+
+    Every traced quantity varies across scenarios *and* across rounds
+    (media tables, source radius, detector coordinates, seeds, budgets,
+    id offsets) so a cache hit is only correct if per-scenario values
+    really are traced, not baked into the executable.
+    """
+    scs = []
+    for i in range(n_scenarios):
+        media = np.asarray(vol0.media).copy()
+        media[1:, 0] *= 1.0 + 0.05 * ((round_idx + i) % 7)
+        vol = dataclasses.replace(vol0, media=media)
+        cx = vol0.shape[0] / 2
+        scs.append(Scenario(
+            vol, cfg, photons + 16 * i,
+            seed=1000 * round_idx + i,
+            source=Disk(pos=(cx, cx, 0),
+                        radius=1.0 + 0.25 * ((round_idx + i) % 4)),
+            detectors=({"x": cx + 0.5 * (i % 3), "y": cx, "radius": 2.0},),
+            id_offset=(round_idx * n_scenarios + i) << 20))
+    return scs
+
+
+def run(quick=False, engines=("jnp", "pallas"),
+        out_path: Path | str = REPO_ROOT / "BENCH_scenarios.json"):
+    size = 12 if quick else 24
+    vol, phys = get_bench("B1", size)
+    cfg = SimConfig(do_reflect=phys["do_reflect"], steps_per_round=4)
+    interpreted = default_interpret()
+    # (n_scenarios per batch, photons per scenario, lanes)
+    jnp_load = (8, 400, 128) if quick else (16, 2_000, 512)
+    workload = {
+        "jnp": jnp_load,
+        "pallas": ((4, 100, 64) if quick else (6, 300, 128))
+        if interpreted else jnp_load,
+    }
+    repeats = 3 if quick else 5
+
+    results: dict = {
+        "meta": {
+            "schema_version": SCHEMA_VERSION,
+            "bench": "B1-disk-repeat-shape",
+            "size": size,
+            "quick": quick,
+            "backend": jax.default_backend(),
+            "interpreted_pallas": interpreted,
+            "jax": jax.__version__,
+            "machine": platform.machine(),
+            "repeats": repeats,
+        },
+        "engines": {},
+    }
+    for engine in engines:
+        n_sc, photons, lanes = workload[engine]
+        block = 32 if engine == "pallas" else 256
+        cache = CompileCache()
+        kw = dict(n_lanes=lanes, engine=engine, block_lanes=block,
+                  cache=cache)
+        # warm: the one compile this shape ever pays
+        jax.block_until_ready(
+            simulate_many(_make_batch(vol, cfg, n_sc, photons, 0), **kw))
+        warm_misses, warm_hits = cache.misses, cache.hits
+        best = float("inf")
+        for r in range(1, repeats + 1):
+            batch = _make_batch(vol, cfg, n_sc, photons, r)
+            t0 = time.perf_counter()
+            jax.block_until_ready(simulate_many(batch, **kw))
+            best = min(best, time.perf_counter() - t0)
+        hits = cache.hits - warm_hits
+        misses = cache.misses - warm_misses
+        hit_rate = hits / max(hits + misses, 1)
+        row = {
+            "seconds": best,
+            "scenarios_per_s": n_sc / best,
+            "photons_per_s": n_sc * photons / best,
+            "cache_hit_rate": hit_rate,
+            "n_scenarios": n_sc,
+            "photons_per_scenario": photons,
+            "lanes": lanes,
+            "warm_compiles": warm_misses,
+        }
+        print(f"[scenarios] {engine:6s}: {n_sc / best:7.2f} scenarios/s "
+              f"({n_sc * photons / best / 1e3:.2f} photons/ms), "
+              f"hit rate {hit_rate:.2f} "
+              f"({hits} hits / {misses} misses over {repeats} batches)",
+              flush=True)
+        if hit_rate < 1.0:
+            print(f"[scenarios] WARNING: {engine} repeat-shape workload "
+                  f"re-compiled ({misses} misses) — the compile-cache "
+                  f"key leaked a traced value into the shape", flush=True)
+        results["engines"][engine] = row
+
+    out_path = Path(out_path)
+    out_path.write_text(json.dumps(results, indent=2) + "\n")
+    print(f"[scenarios] wrote {out_path}")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced scenario counts / domain (CI smoke)")
+    ap.add_argument("--engines", default="jnp,pallas",
+                    help="comma-separated subset of {jnp,pallas}")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_scenarios.json"))
+    args = ap.parse_args(argv)
+    engines = tuple(e.strip() for e in args.engines.split(",") if e.strip())
+    for e in engines:
+        if e not in S.ENGINES:
+            ap.error(f"unknown engine {e!r}")
+    run(quick=args.quick, engines=engines, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

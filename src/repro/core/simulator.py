@@ -245,7 +245,8 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
                  engine: str = "jnp", block_lanes: int = 256,
                  interpret: bool | None = None,
                  detectors: tuple[Detector, ...] | None = None,
-                 record_detected: int = 0):
+                 record_detected: int = 0,
+                 det_geom_override=None):
     """Build the raw (unjitted) simulation function.
 
     Returns ``sim_fn(labels_flat, media, n_photons, seed, id_offset=0,
@@ -270,6 +271,11 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
     (requires ``detectors``; DESIGN.md §replay).  Once full, further
     captures still accumulate into ``det_w``/``det_ppath`` but their id
     records are dropped and counted in ``det_rec_overflow``.
+
+    ``det_geom_override`` (scenario batching, DESIGN.md §batching)
+    substitutes a traced ``(n_det, 3)`` array of (x, y, radius²) rows
+    for the statically-derived detector geometry; ``detectors`` still
+    fixes the detector *count* and validates the concrete set.
 
     ``engine`` selects the round executor (DESIGN.md §rounds):
     ``"jnp"`` advances ``cfg.steps_per_round`` segments in an in-graph
@@ -302,6 +308,20 @@ def build_sim_fn(shape: tuple[int, int, int], unitinmm: float,
     if n_det:
         validate_detectors(detectors, shape)
     det_geom = det_geometry(detectors) if n_det else None
+    if det_geom_override is not None:
+        # scenario batching (repro.scenarios): the capture geometry is a
+        # *traced* (n_det, 3) array — ``detectors`` still fixes n_det and
+        # carries the host-side validation, but the coordinates flow
+        # through the graph so one executable serves many detector sets
+        if not n_det:
+            raise ValueError("det_geom_override requires detectors: the "
+                             "override replaces their traced geometry, "
+                             "not their count")
+        if tuple(det_geom_override.shape) != (n_det, 3):
+            raise ValueError(
+                f"det_geom_override shape {tuple(det_geom_override.shape)} "
+                f"!= ({n_det}, 3) from the detectors tuple")
+        det_geom = jnp.asarray(det_geom_override, jnp.float32)
     capacity = int(record_detected)
     if capacity < 0:
         raise ValueError(f"record_detected must be >= 0, got {capacity}")

@@ -15,6 +15,7 @@ import jax
 import numpy as np
 
 from repro import detectors as D
+from repro import scenarios as SC
 from repro import telemetry as T
 from repro.core import analysis as A
 from repro.core import simulator as S
@@ -29,6 +30,63 @@ def get_bench(name: str, size: int):
     if name in ("B2", "B2a"):
         return V.benchmark_b2(shape), V.SimConfig(do_reflect=True)
     raise ValueError(name)
+
+
+def _run_scenarios(args, ap, tracer, sinks):
+    """--scenarios: batched multi-scenario execution (DESIGN.md §batching)."""
+    spec = args.scenarios
+    if spec.startswith("@"):
+        with open(spec[1:]) as f:
+            spec = f.read()
+    entries = json.loads(spec)
+    if not isinstance(entries, list) or not entries:
+        ap.error("--scenarios expects a non-empty JSON list of scenario "
+                 "dicts (or @file.json holding one)")
+    scenarios = [SC.Scenario.from_dict(e) for e in entries]
+    mesh = None
+    if args.devices == "all" and len(jax.devices()) > 1:
+        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    cache = SC.default_cache()
+    t0 = time.time()
+    results = SC.simulate_many(scenarios, n_lanes=args.lanes,
+                               engine=args.engine, mesh=mesh, cache=cache,
+                               tracer=tracer)
+    jax.block_until_ready(results)
+    dt = time.time() - t0
+
+    total_photons = sum(sc.n_photons for sc in scenarios)
+    keys = {SC.group_key(sc, args.lanes, engine=args.engine)
+            for sc in scenarios}
+    sharded = f" over {mesh.size} devices" if mesh is not None else ""
+    print(f"scenarios: {len(scenarios)} in {dt:.2f}s "
+          f"({len(scenarios)/dt:.2f} scenarios/s, "
+          f"{total_photons/dt/1e3:.2f} photons/ms total), "
+          f"{len(keys)} config shape(s){sharded}")
+    st = cache.stats()
+    print(f"compile cache: {st['hits']} hits / {st['misses']} misses "
+          f"(hit rate {st['hit_rate']:.2f}), {st['entries']} entries, "
+          f"{st['evictions']} evictions")
+    for i, (sc, res) in enumerate(zip(scenarios, results)):
+        bal = A.energy_balance(res)
+        line = (f"  scenario {i}: {sc.n_photons} photons seed={sc.seed} "
+                f"absorbed={bal['absorbed']:.1f} "
+                f"escaped={bal['escaped']:.1f} "
+                f"residue={bal['residue_frac']:.2e}")
+        if sc.detectors:
+            line += f" det_w={np.asarray(res.det_w).sum():.3f}"
+        print(line)
+    if tracer is not None:
+        tracer.counter("scenarios_per_s", len(scenarios) / dt,
+                       engine=args.engine)
+        tracer.counter("photons_per_s", total_photons / dt,
+                       engine=args.engine)
+        if args.trace_out:
+            path = tracer.save_chrome_trace(args.trace_out)
+            print(f"trace timeline: {path} "
+                  f"({len(tracer.events)} spans; open in chrome://tracing)")
+        for sink in sinks:
+            sink.close()
+    return results
 
 
 def main(argv=None):
@@ -127,6 +185,16 @@ def main(argv=None):
                          "onto SimResult.stats (DESIGN.md "
                          "§observability); physics outputs stay "
                          "bit-identical")
+    ap.add_argument("--scenarios", default=None, metavar="JSON",
+                    help="batched multi-scenario run (repro.scenarios): a "
+                         "JSON list of scenario dicts (or @file.json), "
+                         "each with keys bench/size/photons/seed/source/"
+                         "detectors/time_gates/steps_per_round/tmax_ns/"
+                         "do_reflect/id_offset.  Scenarios sharing a "
+                         "config shape are vmapped into one executable "
+                         "via the compile cache; with --devices all the "
+                         "scenario axis is sharded over the mesh.  "
+                         "Results are bit-identical to sequential runs")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="stream structured telemetry events (spans, "
                          "counters) as JSON lines to PATH")
@@ -147,6 +215,13 @@ def main(argv=None):
             ap.error(f"--{flag.replace('_', '-')} requires --chunk")
     if args.checkpoint_every and not (args.chunk and args.checkpoint_dir):
         ap.error("--checkpoint-every requires --chunk and --checkpoint-dir")
+    if args.scenarios:
+        for flag in ("chunk", "autotune", "save_detected", "replay",
+                     "source", "detectors", "collect_stats"):
+            if getattr(args, flag):
+                ap.error(f"--scenarios is incompatible with "
+                         f"--{flag.replace('_', '-')} (scenario dicts "
+                         f"carry their own per-scenario config)")
 
     source = json.loads(args.source) if args.source else None
     detectors = D.as_detectors(
@@ -166,6 +241,8 @@ def main(argv=None):
         sinks.append(T.JsonlSink(args.metrics_out))
     tracer = (T.Tracer(sinks=sinks)
               if (args.trace_out or sinks) else None)
+    if args.scenarios:
+        return _run_scenarios(args, ap, tracer, sinks)
     lanes = args.lanes
     if args.autotune:
         lanes, timings = S.autotune_lanes(vol, cfg, n_pilot=args.photons // 10,

@@ -16,6 +16,13 @@ Coverage map:
 * ``pool-jnp`` / ``pool-pallas`` — the resilience pool's per-bit-class
   jitted executors, traced exactly as ``DevicePool._dispatch`` would
   call them (group ``pool``).
+* ``simulate-many-jnp`` / ``simulate-many-pallas`` — the batched
+  multi-scenario executor (``repro.scenarios.make_batched``): the
+  round loop vmapped over a 3-scenario axis with per-scenario media
+  tables, staged disk sources, detector geometry, seeds and budgets
+  all traced (group ``simulate-many``).  Its REP805 variants perturb
+  every one of those values — a fingerprint divergence means the
+  compile cache would re-trace per scenario batch, defeating it.
 * ``sharded-sim`` — the shard_mapped mesh builder, only when more than
   one device is visible (CI runs this under 8 fake CPU devices so the
   collective/psum structure is linted too).
@@ -37,6 +44,7 @@ from repro.lint.traced import TraceTarget
 _SIM_ENTRY = "src/repro/core/simulator.py"
 _REPLAY_ENTRY = "src/repro/replay/__init__.py"
 _POOL_ENTRY = "src/repro/resilience/pool.py"
+_MANY_ENTRY = "src/repro/scenarios/__init__.py"
 _MESH_ENTRY = "src/repro/core/multidevice.py"
 
 _SHAPE = (8, 8, 8)
@@ -133,6 +141,48 @@ def _make_pool(engine):
     return make
 
 
+# the simulate-many REP805 matrix: every per-scenario value the batched
+# executor promises to trace (group_key docstring) gets a perturbation
+_MANY_VARIANTS = {
+    "seed": {"seed": 99},
+    "n_photons": {"n_photons": 4096},
+    "id_offset": {"id_offset": 123456},
+    "source_radius": {"radius": 2.5},
+    "det_coords": {"det_dx": 0.5},
+    "media": {"media_scale": 1.4},
+}
+
+
+def _make_simulate_many(engine):
+    def make(overrides=None):
+        import dataclasses
+
+        import jax
+        import numpy as np
+
+        from repro.scenarios import Scenario, make_batched
+        from repro.sources import Disk
+        ov = overrides or {}
+        vol0 = _volume()
+        scs = []
+        for i in range(3):
+            media = np.asarray(vol0.media).copy()
+            media[1:, 1] *= ov.get("media_scale", 1.0) + 0.1 * i
+            vol = dataclasses.replace(vol0, media=media)
+            scs.append(Scenario(
+                vol, _sim_cfg(), ov.get("n_photons", 64) + 8 * i,
+                seed=ov.get("seed", 1234) + i,
+                source=Disk(pos=(4.0, 4.0, 0.0),
+                            radius=ov.get("radius", 1.5) + 0.25 * i),
+                detectors=({"x": 4.0 + ov.get("det_dx", 0.0), "y": 4.0,
+                            "radius": 2.0},),
+                id_offset=ov.get("id_offset", 0) + (i << 20)))
+        fn, args = make_batched(scs, n_lanes=_LANES, engine=engine,
+                                block_lanes=_BLOCK, interpret=True)
+        return jax.make_jaxpr(fn)(*args)
+    return make
+
+
 def _make_sharded():
     def make(overrides=None):
         import jax
@@ -180,6 +230,11 @@ def build_default_targets(include_sharded: bool | None = None
         targets.append(TraceTarget(
             name=f"pool-{engine}", entry=_POOL_ENTRY, group="pool",
             make=_make_pool(engine), variants=dict(_SIM_VARIANTS)))
+    for engine in ("jnp", "pallas"):
+        targets.append(TraceTarget(
+            name=f"simulate-many-{engine}", entry=_MANY_ENTRY,
+            group="simulate-many", make=_make_simulate_many(engine),
+            variants=dict(_MANY_VARIANTS)))
     if include_sharded is None:
         import jax
         include_sharded = len(jax.devices()) > 1

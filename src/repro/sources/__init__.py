@@ -15,6 +15,7 @@ bit-for-bit.
 from repro.sources.base import (
     LAUNCH_STREAM_SALT,
     PhotonSource,
+    StagedSource,
     as_source,
     available_sources,
     flight_stream,
@@ -22,6 +23,8 @@ from repro.sources.base import (
     get_source_cls,
     launch_stream,
     register,
+    stage_source,
+    staged_structure,
     to_dict,
 )
 from repro.sources.types import (
@@ -38,6 +41,7 @@ from repro.sources.types import (
 __all__ = [
     "LAUNCH_STREAM_SALT",
     "PhotonSource",
+    "StagedSource",
     "as_source",
     "available_sources",
     "flight_stream",
@@ -45,6 +49,8 @@ __all__ = [
     "get_source_cls",
     "launch_stream",
     "register",
+    "stage_source",
+    "staged_structure",
     "to_dict",
     "Cone",
     "Disk",

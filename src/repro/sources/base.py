@@ -148,6 +148,67 @@ def direction_from_axis(cost, phi, axis, e1, e2) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# staged launch parameters (scenario batching, DESIGN.md §batching)
+# ---------------------------------------------------------------------------
+
+class StagedSource:
+    """Bind a source class's jnp sampling path to *traced* launch params.
+
+    Every registered source splits its ``sample`` into a host-side
+    ``stage()`` (the f64 derivations over static fields — unit vectors,
+    orthonormal frames, cos of the half angle — rounded once to f32)
+    and a pure-jnp ``sample_staged(staged, photon_ids, seed)`` that
+    consumes only the staged dict.  ``sample`` is the composition, so
+    the static path is unchanged; a ``StagedSource`` instead feeds
+    ``sample_staged`` a dict of *tracers* — per-scenario launch params
+    under ``vmap`` — through the identical op sequence, which is what
+    makes `simulate_many` bit-identical to per-scenario runs.
+
+    Hashable by identity (the staged values may be tracers), so
+    ``as_source`` passes instances through untouched.
+    """
+
+    __slots__ = ("source_cls", "staged")
+
+    def __init__(self, source_cls: type, staged: dict):
+        self.source_cls = source_cls
+        self.staged = dict(staged)
+
+    def sample(self, photon_ids, seed):
+        return self.source_cls.sample_staged(self.staged, photon_ids, seed)
+
+
+def stage_source(source) -> tuple[type, dict]:
+    """Coerce + stage: returns ``(source class, staged param dict)``.
+
+    The staged dict holds concrete f32 arrays (host-derived launch
+    parameters); scenario batching stacks them along a leading axis and
+    rebinds them through :class:`StagedSource`.
+    """
+    src = as_source(source)
+    if not hasattr(src, "stage"):
+        raise TypeError(
+            f"source {type(src).__qualname__} does not support staged "
+            f"launch parameters (needs stage()/sample_staged(); required "
+            f"for simulate_many batching)")
+    return type(src), src.stage()
+
+
+def staged_structure(source) -> tuple:
+    """Hashable structural signature of a source's staged params.
+
+    ``(type_name, ((param, shape), ...))`` — two sources share a
+    compiled `simulate_many` executable exactly when this matches: the
+    *values* of staged params are traced, but their presence and shapes
+    (e.g. a Planar pattern's grid, a Line's collimated-vs-isotropic
+    variant) are baked into the jaxpr.
+    """
+    cls, staged = stage_source(source)
+    return (cls.type_name,
+            tuple((k, tuple(np.shape(staged[k]))) for k in sorted(staged)))
+
+
+# ---------------------------------------------------------------------------
 # registry + config serialization
 # ---------------------------------------------------------------------------
 

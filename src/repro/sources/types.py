@@ -16,6 +16,17 @@ Registered types (see ``repro.sources.available_sources()``):
   disk       uniform-intensity flat circular beam
   planar     uniform parallelogram patch, optional intensity pattern
   line       line segment, collimated (slit) or isotropic emission
+
+Every type is split into ``stage()`` — the host-side f64 derivations
+over static fields (unit vectors, frames, trig), rounded once to f32 —
+and a pure-jnp ``sample_staged(staged, photon_ids, seed)`` consuming
+only the staged dict; ``sample`` is their composition.  Scenario
+batching (repro.scenarios, DESIGN.md §batching) stacks staged dicts
+along a leading axis and traces them through the same
+``sample_staged``, so batched launches are bit-identical to static
+ones.  Scalar fields are staged as f32 — the value JAX's weak-typed
+promotion would have rounded the Python float to anyway, so the static
+path's bits are unchanged.
 """
 
 from __future__ import annotations
@@ -52,11 +63,19 @@ class Pencil:
 
     N_DRAWS = 0
 
-    def sample(self, photon_ids, seed):
+    def stage(self):
+        return {"pos": jnp.asarray(self.pos, jnp.float32),
+                "dir": base.unit(self.dir)}
+
+    @staticmethod
+    def sample_staged(p, photon_ids, seed):
         n = photon_ids.shape[0]
-        direc = jnp.broadcast_to(base.unit(self.dir), (n, 3))
-        return (_broadcast_pos(self.pos, n), direc, _ones(n),
+        direc = jnp.broadcast_to(p["dir"], (n, 3))
+        return (_broadcast_pos(p["pos"], n), direc, _ones(n),
                 base.flight_stream(seed, photon_ids))
+
+    def sample(self, photon_ids, seed):
+        return self.sample_staged(self.stage(), photon_ids, seed)
 
 
 @base.register("isotropic")
@@ -68,14 +87,21 @@ class IsotropicPoint:
 
     N_DRAWS = 2  # u_cos, u_phi
 
-    def sample(self, photon_ids, seed):
+    def stage(self):
+        return {"pos": jnp.asarray(self.pos, jnp.float32)}
+
+    @staticmethod
+    def sample_staged(p, photon_ids, seed):
         n = photon_ids.shape[0]
         ls = base.launch_stream(seed, photon_ids)
         ls, u_cos = xrng.next_uniform(ls)
         ls, u_phi = xrng.next_uniform(ls)
         direc = base.isotropic_direction(u_cos, u_phi)
-        return (_broadcast_pos(self.pos, n), direc, _ones(n),
+        return (_broadcast_pos(p["pos"], n), direc, _ones(n),
                 base.flight_stream(seed, photon_ids))
+
+    def sample(self, photon_ids, seed):
+        return self.sample_staged(self.stage(), photon_ids, seed)
 
 
 @base.register("cone")
@@ -90,19 +116,31 @@ class Cone:
 
     N_DRAWS = 2  # u_cos, u_phi
 
-    def sample(self, photon_ids, seed):
-        n = photon_ids.shape[0]
-        axis = base.unit(self.dir)
+    def stage(self):
         e1, e2 = base.orthonormal_frame(self.dir)
         cos_half = math.cos(math.radians(self.half_angle_deg))
+        return {"pos": jnp.asarray(self.pos, jnp.float32),
+                "axis": base.unit(self.dir), "e1": e1, "e2": e2,
+                # staged as the 1 - cos form the cap formula consumes, so
+                # the single f64->f32 rounding matches the historical
+                # weak-scalar promotion of (1.0 - cos_half)
+                "one_minus_cos_half": jnp.float32(1.0 - cos_half)}
+
+    @staticmethod
+    def sample_staged(p, photon_ids, seed):
+        n = photon_ids.shape[0]
         ls = base.launch_stream(seed, photon_ids)
         ls, u_cos = xrng.next_uniform(ls)
         ls, u_phi = xrng.next_uniform(ls)
         # uniform over the spherical cap [cos_half, 1]
-        cost = 1.0 - u_cos * (1.0 - cos_half)
-        direc = base.direction_from_axis(cost, _TWO_PI * u_phi, axis, e1, e2)
-        return (_broadcast_pos(self.pos, n), direc, _ones(n),
+        cost = 1.0 - u_cos * p["one_minus_cos_half"]
+        direc = base.direction_from_axis(cost, _TWO_PI * u_phi, p["axis"],
+                                         p["e1"], p["e2"])
+        return (_broadcast_pos(p["pos"], n), direc, _ones(n),
                 base.flight_stream(seed, photon_ids))
+
+    def sample(self, photon_ids, seed):
+        return self.sample_staged(self.stage(), photon_ids, seed)
 
 
 @base.register("gaussian")
@@ -118,16 +156,26 @@ class GaussianBeam:
 
     N_DRAWS = 2  # u_r, u_phi
 
-    def sample(self, photon_ids, seed):
-        n = photon_ids.shape[0]
+    def stage(self):
         e1, e2 = base.orthonormal_frame(self.dir)
+        return {"pos": jnp.asarray(self.pos, jnp.float32),
+                "dir": base.unit(self.dir), "e1": e1, "e2": e2,
+                "waist": jnp.float32(self.waist)}
+
+    @staticmethod
+    def sample_staged(p, photon_ids, seed):
+        n = photon_ids.shape[0]
         ls = base.launch_stream(seed, photon_ids)
         ls, u_r = xrng.next_uniform(ls)
         ls, u_phi = xrng.next_uniform(ls)
-        r = self.waist * jnp.sqrt(-jnp.log(u_r) * 0.5)
-        pos = base.radial_offset(_broadcast_pos(self.pos, n), r, u_phi, e1, e2)
-        direc = jnp.broadcast_to(base.unit(self.dir), (n, 3))
+        r = p["waist"] * jnp.sqrt(-jnp.log(u_r) * 0.5)
+        pos = base.radial_offset(_broadcast_pos(p["pos"], n), r, u_phi,
+                                 p["e1"], p["e2"])
+        direc = jnp.broadcast_to(p["dir"], (n, 3))
         return pos, direc, _ones(n), base.flight_stream(seed, photon_ids)
+
+    def sample(self, photon_ids, seed):
+        return self.sample_staged(self.stage(), photon_ids, seed)
 
 
 @base.register("disk")
@@ -141,16 +189,26 @@ class Disk:
 
     N_DRAWS = 2  # u_r, u_phi
 
-    def sample(self, photon_ids, seed):
-        n = photon_ids.shape[0]
+    def stage(self):
         e1, e2 = base.orthonormal_frame(self.dir)
+        return {"pos": jnp.asarray(self.pos, jnp.float32),
+                "dir": base.unit(self.dir), "e1": e1, "e2": e2,
+                "radius": jnp.float32(self.radius)}
+
+    @staticmethod
+    def sample_staged(p, photon_ids, seed):
+        n = photon_ids.shape[0]
         ls = base.launch_stream(seed, photon_ids)
         ls, u_r = xrng.next_uniform(ls)
         ls, u_phi = xrng.next_uniform(ls)
-        r = self.radius * jnp.sqrt(u_r)  # uniform over the disk area
-        pos = base.radial_offset(_broadcast_pos(self.pos, n), r, u_phi, e1, e2)
-        direc = jnp.broadcast_to(base.unit(self.dir), (n, 3))
+        r = p["radius"] * jnp.sqrt(u_r)  # uniform over the disk area
+        pos = base.radial_offset(_broadcast_pos(p["pos"], n), r, u_phi,
+                                 p["e1"], p["e2"])
+        direc = jnp.broadcast_to(p["dir"], (n, 3))
         return pos, direc, _ones(n), base.flight_stream(seed, photon_ids)
+
+    def sample(self, photon_ids, seed):
+        return self.sample_staged(self.stage(), photon_ids, seed)
 
 
 @base.register("planar")
@@ -175,28 +233,41 @@ class Planar:
 
     N_DRAWS = 2  # u_a, u_b
 
-    def sample(self, photon_ids, seed):
+    def stage(self):
+        p = {"pos": jnp.asarray(self.pos, jnp.float32),
+             "v1": jnp.asarray(self.v1, jnp.float32),
+             "v2": jnp.asarray(self.v2, jnp.float32),
+             "dir": base.unit(self.dir)}
+        # the pattern's *presence and grid shape* are structural (they
+        # change the jaxpr); its weights are staged values
+        if self.pattern:
+            p["pattern"] = jnp.asarray(self.pattern, jnp.float32)
+        return p
+
+    @staticmethod
+    def sample_staged(p, photon_ids, seed):
         n = photon_ids.shape[0]
         ls = base.launch_stream(seed, photon_ids)
         ls, u_a = xrng.next_uniform(ls)
         ls, u_b = xrng.next_uniform(ls)
-        v1 = jnp.asarray(self.v1, jnp.float32)
-        v2 = jnp.asarray(self.v2, jnp.float32)
         pos = (
-            _broadcast_pos(self.pos, n)
-            + u_a[:, None] * v1
-            + u_b[:, None] * v2
+            _broadcast_pos(p["pos"], n)
+            + u_a[:, None] * p["v1"]
+            + u_b[:, None] * p["v2"]
         )
-        if self.pattern:
-            pat = jnp.asarray(self.pattern, jnp.float32)
+        if "pattern" in p:
+            pat = p["pattern"]
             rows, cols = pat.shape
             ia = jnp.clip((u_a * rows).astype(jnp.int32), 0, rows - 1)
             ib = jnp.clip((u_b * cols).astype(jnp.int32), 0, cols - 1)
             w0 = jnp.take(pat.reshape(-1), ia * cols + ib)
         else:
             w0 = _ones(n)
-        direc = jnp.broadcast_to(base.unit(self.dir), (n, 3))
+        direc = jnp.broadcast_to(p["dir"], (n, 3))
         return pos, direc, w0, base.flight_stream(seed, photon_ids)
+
+    def sample(self, photon_ids, seed):
+        return self.sample_staged(self.stage(), photon_ids, seed)
 
 
 @base.register("line")
@@ -216,20 +287,32 @@ class Line:
 
     N_DRAWS = 3  # u_t, u_cos, u_phi
 
-    def sample(self, photon_ids, seed):
+    def stage(self):
+        p = {"start": jnp.asarray(self.start, jnp.float32),
+             "end": jnp.asarray(self.end, jnp.float32)}
+        # collimated-vs-isotropic is structural: the staged dict carries
+        # a "dir" key exactly when the slit variant is selected
+        if self.dir is not None:
+            p["dir"] = base.unit(self.dir)
+        return p
+
+    @staticmethod
+    def sample_staged(p, photon_ids, seed):
         n = photon_ids.shape[0]
         ls = base.launch_stream(seed, photon_ids)
         ls, u_t = xrng.next_uniform(ls)
         ls, u_cos = xrng.next_uniform(ls)
         ls, u_phi = xrng.next_uniform(ls)
-        start = jnp.asarray(self.start, jnp.float32)
-        end = jnp.asarray(self.end, jnp.float32)
+        start, end = p["start"], p["end"]
         pos = start[None, :] + u_t[:, None] * (end - start)[None, :]
-        if self.dir is not None:
-            direc = jnp.broadcast_to(base.unit(self.dir), (n, 3))
+        if "dir" in p:
+            direc = jnp.broadcast_to(p["dir"], (n, 3))
         else:
             direc = base.isotropic_direction(u_cos, u_phi)
         return pos, direc, _ones(n), base.flight_stream(seed, photon_ids)
+
+    def sample(self, photon_ids, seed):
+        return self.sample_staged(self.stage(), photon_ids, seed)
 
 
 def demo_menu(size: int) -> dict:

@@ -1,10 +1,13 @@
 """Perf-regression CI gate (benchmarks/check_regression.py).
 
 Host-side only — no jax.  Pins the gate's decision rules: throughput
-leaves (photons_per_s / records_per_s at any depth) fail on a >30%
-drop, overhead leaves (*_overhead_frac) fail on a >10-point growth,
-cold-start keys and one-sided keys are ignored, and workload-mismatched
-files are skipped rather than compared.
+leaves (photons_per_s / records_per_s / scenarios_per_s at any depth)
+fail on a >30% drop, overhead leaves (*_overhead_frac) fail on a
+>10-point growth, cache-efficiency leaves (*_hit_rate) fail on ANY drop
+below baseline, fresh-only *gated* leaves fail loudly (a new gated
+metric must land with a baseline refresh), cold-start keys and other
+one-sided keys are ignored, and workload-mismatched files are skipped
+rather than compared.
 """
 
 import copy
@@ -77,12 +80,48 @@ def test_workload_mismatch_skips_instead_of_comparing():
     assert any("SKIPPED" in n and "quick" in n for n in notes)
 
 
-def test_one_sided_keys_are_ignored():
+def test_one_sided_keys_are_ignored_unless_gated():
+    # baseline-only gated key + fresh-only NON-gated key: both ignored
     fresh = copy.deepcopy(BASE)
     del fresh["replay"]["engines"]["jnp"]["records_per_s"]
-    fresh["engines"]["pallas"] = {"photons_per_s_record_on": 1.0}  # new key
+    fresh["engines"]["jnp"]["new_records_count"] = 42
     failures, _ = check_file("BENCH_x.json", BASE, fresh, 0.30, 0.10)
     assert failures == []
+
+
+def test_fresh_only_gated_key_fails_loudly():
+    """A fresh file adding a gated metric the baseline lacks must fail
+    and demand a baseline refresh — otherwise the new metric rides
+    ungated until someone remembers to regenerate."""
+    fresh = copy.deepcopy(BASE)
+    fresh["engines"]["pallas"] = {"photons_per_s_record_on": 1.0}
+    failures, _ = check_file("BENCH_x.json", BASE, fresh, 0.30, 0.10)
+    assert len(failures) == 1
+    assert "engines.pallas.photons_per_s_record_on" in failures[0]
+    assert "regenerate the baseline" in failures[0]
+    # same for a fresh-only hit-rate leaf
+    fresh = copy.deepcopy(BASE)
+    fresh["engines"]["jnp"]["cache_hit_rate"] = 1.0
+    failures, _ = check_file("BENCH_x.json", BASE, fresh, 0.30, 0.10)
+    assert len(failures) == 1 and "cache_hit_rate" in failures[0]
+
+
+def test_hit_rate_fails_on_any_drop():
+    """*_hit_rate is a deterministic cache-ledger ratio, not a timing:
+    no 30% headroom — any value below baseline is a caching bug."""
+    base = copy.deepcopy(BASE)
+    base["engines"]["jnp"]["cache_hit_rate"] = 1.0
+    fresh = copy.deepcopy(base)
+    fresh["engines"]["jnp"]["cache_hit_rate"] = 0.95  # tiny drop: FAIL
+    failures, _ = check_file("BENCH_x.json", base, fresh, 0.30, 0.10)
+    assert len(failures) == 1
+    assert "cache_hit_rate" in failures[0]
+    assert "compile cache" in failures[0]
+    # equal or better passes
+    for ok in (1.0, 1.0 + 1e-12):
+        fresh["engines"]["jnp"]["cache_hit_rate"] = ok
+        failures, _ = check_file("BENCH_x.json", base, fresh, 0.30, 0.10)
+        assert failures == []
 
 
 @pytest.mark.parametrize("regress", [False, True])

@@ -1,0 +1,275 @@
+"""Batched multi-scenario execution tests (repro.scenarios).
+
+The contract under test (DESIGN.md §batching): ``simulate_many`` over
+heterogeneous scenarios is bit-identical per scenario to sequential
+``simulate_one`` runs — both engines — with exactly one compile per
+distinct config shape, an LRU compile cache whose counters reconcile
+against telemetry spans, and a scenario axis that composes with the
+device mesh (slow subprocess test, 8 fake devices).
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import volume as V
+from repro.core.volume import SimConfig
+from repro.scenarios import (CompileCache, Scenario, group_key,
+                             make_batched, simulate_many, simulate_one)
+from repro.sources import Cone, Disk, StagedSource, stage_source
+from repro.telemetry import InMemorySink, Tracer
+
+SHAPE = (8, 8, 8)
+LANES = 16
+DET = ({"x": 4.0, "y": 4.0, "radius": 2.0},)
+DET2 = ({"x": 3.0, "y": 5.0, "radius": 2.5},)
+
+
+def _cfg(**kw):
+    base = dict(do_reflect=True, steps_per_round=2, n_time_gates=2,
+                max_steps=64)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _vol(mua_scale=1.0):
+    vol = V.benchmark_b1(SHAPE)
+    if mua_scale == 1.0:
+        return vol
+    media = np.asarray(vol.media).copy()
+    media[1:, 0] *= mua_scale
+    return dataclasses.replace(vol, media=media)
+
+
+def _heterogeneous():
+    """N=5 scenarios spanning 4 config shapes: grouped disks (different
+    media/radius/detector coords/seeds/budgets/id offsets), a cone, a
+    pencil, and a detector-free CW run with a different SimConfig."""
+    return [
+        Scenario(_vol(), _cfg(), 200, seed=1,
+                 source=Disk(pos=(4, 4, 0), radius=2.0), detectors=DET),
+        Scenario(_vol(1.5), _cfg(), 300, seed=2,
+                 source=Disk(pos=(4, 4, 0), radius=1.0), detectors=DET2,
+                 id_offset=1000),
+        Scenario(_vol(), _cfg(), 150, seed=3,
+                 source=Cone(pos=(4, 4, 0), half_angle_deg=25.0),
+                 detectors=DET),
+        Scenario(_vol(), _cfg(), 250, seed=4, detectors=DET2),
+        Scenario(_vol(), SimConfig(do_reflect=True), 100, seed=5),
+    ]
+
+
+def _assert_results_equal(got, want, ctx=""):
+    for f in want._fields:
+        a, b = getattr(got, f), getattr(want, f)
+        if a is None and b is None:
+            continue
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (ctx, f)
+
+
+@pytest.mark.parametrize("engine", ["jnp", "pallas"])
+def test_simulate_many_bit_identical_to_sequential(engine):
+    scs = _heterogeneous()
+    cache = CompileCache()
+    res = simulate_many(scs, n_lanes=LANES, engine=engine, block_lanes=8,
+                        interpret=True, cache=cache)
+    assert len(res) == len(scs)
+    for i, sc in enumerate(scs):
+        ref = simulate_one(sc, n_lanes=LANES, engine=engine, block_lanes=8,
+                           interpret=True)
+        _assert_results_equal(res[i], ref, ctx=(engine, i))
+    # exactly one compile per distinct config shape: the two disks share
+    # a group; cone/pencil/no-det each get their own
+    keys = {group_key(sc, LANES, engine=engine, block_lanes=8,
+                      interpret=True) for sc in scs}
+    assert cache.misses == len(keys) == 4
+    assert cache.hits == 0
+
+
+def test_same_shape_hit_across_calls():
+    def batch(seed0):
+        return [Scenario(_vol(), _cfg(), 100 + 40 * i, seed=seed0 + i,
+                         source=Disk(pos=(4, 4, 0), radius=1.0 + 0.3 * i),
+                         detectors=DET, id_offset=10_000 * i)
+                for i in range(4)]
+
+    cache = CompileCache()
+    r1 = simulate_many(batch(1), n_lanes=LANES, cache=cache)
+    assert cache.stats() == {"hits": 0, "misses": 1, "evictions": 0,
+                             "entries": 1, "hit_rate": 0.0}
+    r2 = simulate_many(batch(9), n_lanes=LANES, cache=cache)
+    st = cache.stats()
+    assert st["misses"] == 1 and st["hits"] == 1 and st["hit_rate"] == 0.5
+    # and the hit call still returns correct per-scenario physics
+    _assert_results_equal(r2[2], simulate_one(batch(9)[2], n_lanes=LANES))
+    # different values, same shape: results must differ, executable not
+    assert not np.array_equal(np.asarray(r1[0].energy),
+                              np.asarray(r2[0].energy))
+
+
+def test_distinct_shape_misses():
+    cache = CompileCache()
+    sc = Scenario(_vol(), _cfg(), 100, detectors=DET)
+    simulate_many([sc], n_lanes=LANES, cache=cache)
+    # each structural change is a new shape: ntg, detector count, lane
+    # count, source structure (pencil vs disk)
+    simulate_many([dataclasses.replace(sc, cfg=_cfg(n_time_gates=4))],
+                  n_lanes=LANES, cache=cache)
+    simulate_many([dataclasses.replace(sc, detectors=DET + DET2)],
+                  n_lanes=LANES, cache=cache)
+    simulate_many([sc], n_lanes=LANES * 2, cache=cache)
+    simulate_many([dataclasses.replace(
+        sc, source=Disk(pos=(4, 4, 0), radius=1.0))],
+        n_lanes=LANES, cache=cache)
+    assert cache.misses == 5 and cache.hits == 0
+    # ... and every one of those shapes is now warm
+    simulate_many([sc], n_lanes=LANES, cache=cache)
+    assert cache.hits == 1
+
+
+def test_keyed_lru_eviction():
+    cache = CompileCache(max_entries=1)
+    a = Scenario(_vol(), _cfg(), 60, detectors=DET)
+    b = Scenario(_vol(), _cfg(n_time_gates=4), 60, detectors=DET)
+    simulate_many([a], n_lanes=LANES, cache=cache)
+    simulate_many([b], n_lanes=LANES, cache=cache)   # evicts a's entry
+    assert cache.evictions == 1 and len(cache) == 1
+    simulate_many([a], n_lanes=LANES, cache=cache)   # re-miss: a was evicted
+    assert cache.misses == 3 and cache.hits == 0
+    # LRU order: touching a then adding b evicts... a is most-recent, so
+    # adding b evicts nothing until capacity; re-running b must re-miss
+    simulate_many([b], n_lanes=LANES, cache=cache)
+    assert cache.misses == 4
+
+
+def test_cache_counters_reconcile_with_telemetry_spans():
+    sink = InMemorySink()
+    tracer = Tracer(sinks=[sink])
+    cache = CompileCache()
+    scs = _heterogeneous()
+    simulate_many(scs, n_lanes=LANES, cache=cache, tracer=tracer)
+    simulate_many(scs, n_lanes=LANES, cache=cache, tracer=tracer)
+    compile_spans = [e for e in tracer.events
+                     if e.name == "scenarios.compile"]
+    batch_spans = [e for e in tracer.events if e.name == "scenarios.batch"]
+    assert len(compile_spans) == cache.misses == 4
+    assert len(batch_spans) == cache.misses + cache.hits == 8
+    # counter stream carries the same ledger
+    recs = [r for r in sink.events if r.get("type") == "counter"]
+    hits = sum(r["value"] for r in recs
+               if r["name"] == "scenarios.cache.hit")
+    misses = sum(r["value"] for r in recs
+                 if r["name"] == "scenarios.cache.miss")
+    assert hits == cache.hits and misses == cache.misses
+    rates = [r["value"] for r in recs
+             if r["name"] == "scenarios.cache.hit_rate"]
+    assert rates and rates[-1] == cache.stats()["hit_rate"] == 0.5
+
+
+def test_staged_source_matches_static_sampling():
+    import jax.numpy as jnp
+
+    from repro.sources import demo_menu
+    ids = jnp.arange(32, dtype=jnp.uint32)
+    for name, src in demo_menu(16).items():
+        cls, staged = stage_source(src)
+        a = src.sample(ids, 99)
+        b = StagedSource(cls, staged).sample(ids, 99)
+        for x, y in zip(a, b):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), name
+
+
+def test_make_batched_rejects_mixed_groups():
+    with pytest.raises(ValueError, match="single scenario group"):
+        make_batched([Scenario(_vol(), _cfg(), 10),
+                      Scenario(_vol(), _cfg(n_time_gates=4), 10)],
+                     n_lanes=LANES)
+
+
+def test_retrace_same_shape_is_value_free():
+    """The REP805 property, asserted directly: a new batch of the same
+    shape (new seeds, budgets, radii, detector coords, media) traces to
+    a byte-identical jaxpr — no per-scenario value bakes into the graph."""
+    def batch(s):
+        return [Scenario(_vol(1.0 + 0.1 * s), _cfg(), 50 + s + i,
+                         seed=s + i, source=Disk(pos=(4, 4, 0),
+                                                 radius=1.0 + 0.1 * s),
+                         detectors=({"x": 4.0, "y": 4.0 - 0.1 * s,
+                                     "radius": 2.0},))
+                for i in range(3)]
+
+    texts = []
+    for s in (0, 3):
+        fn, args = make_batched(batch(s), n_lanes=LANES)
+        texts.append(str(jax.make_jaxpr(fn)(*args)))
+    assert texts[0] == texts[1]
+
+
+def test_scenario_from_dict_roundtrip():
+    sc = Scenario.from_dict({
+        "bench": "B1", "size": 8, "photons": 120, "seed": 7,
+        "source": {"type": "disk", "pos": [4, 4, 0], "radius": 2},
+        "detectors": [{"x": 4, "y": 4, "radius": 2}],
+        "time_gates": 2, "steps_per_round": 2, "id_offset": 512,
+    })
+    assert sc.volume.shape == (8, 8, 8)
+    assert sc.cfg.n_time_gates == 2 and sc.cfg.steps_per_round == 2
+    res = simulate_many([sc], n_lanes=LANES)[0]
+    _assert_results_equal(res, simulate_one(sc, n_lanes=LANES))
+    with pytest.raises(ValueError, match="unknown scenario keys"):
+        Scenario.from_dict({"photons": 1, "nope": 2})
+
+
+def test_empty_and_unknown_engine():
+    assert simulate_many([]) == []
+    with pytest.raises(ValueError, match="unknown engine"):
+        simulate_many([Scenario(_vol(), _cfg(), 10)], engine="tpu")
+
+
+@pytest.mark.slow
+def test_mesh_sharded_scenario_axis_bit_identical():
+    """simulate_many under an 8-fake-device mesh: the scenario axis
+    shard_maps (with zero-photon padding to the device count) and stays
+    bit-identical to the unsharded and sequential paths."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = """
+import jax, numpy as np
+from repro.core import volume as V
+from repro.core.volume import SimConfig
+from repro.scenarios import Scenario, simulate_many, simulate_one, CompileCache
+from repro.sources import Disk
+vol = V.benchmark_b1((8, 8, 8))
+cfg = SimConfig(do_reflect=True, steps_per_round=2, n_time_gates=2,
+                max_steps=64)
+det = ({"x": 4.0, "y": 4.0, "radius": 2.0},)
+scs = [Scenario(vol, cfg, 100 + 40 * i, seed=1 + i,
+                source=Disk(pos=(4, 4, 0), radius=1.0 + 0.3 * i),
+                detectors=det, id_offset=10_000 * i) for i in range(5)]
+assert len(jax.devices()) == 8
+mesh = jax.make_mesh((8,), ("data",))
+for engine in ("jnp", "pallas"):
+    cache = CompileCache()
+    got = simulate_many(scs, n_lanes=16, engine=engine, block_lanes=8,
+                        interpret=True, mesh=mesh, cache=cache)
+    assert cache.misses == 1, cache.stats()
+    for i, sc in enumerate(scs):
+        ref = simulate_one(sc, n_lanes=16, engine=engine, block_lanes=8,
+                           interpret=True)
+        for f in ref._fields:
+            a, b = getattr(got[i], f), getattr(ref, f)
+            if a is None and b is None:
+                continue
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (engine, i, f)
+print("MESH-OK")
+"""
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, (proc.stdout, proc.stderr)
+    assert "MESH-OK" in proc.stdout
